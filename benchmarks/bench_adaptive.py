@@ -1,0 +1,82 @@
+"""Beyond-paper extension benchmark: adaptive Very-Heavy deadline control
+(the paper's §7 future work).
+
+Sustained Very-Heavy load; compares the static extension weight (the
+paper's fixed §4.3 rule) against the PI-controlled weight targeting a
+prior-answer fraction. The adaptive run should converge to the target
+prior fraction — higher fidelity than a too-small static w, lower latency
+than a too-large one.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, build_pipeline, oracle_eval
+from repro.configs.base import TrustIRConfig
+from repro.core import LoadShedder, SimClock, SyntheticSearcher, \
+    TrustIRPipeline
+from repro.core.adaptive import AdaptiveWeightController
+
+# 3x overload: the 15% prior target is reachable at w ~ 1.4 (inside
+# (0, w_max)) so the controller's operating point is visible
+N_RESULTS = 3 * (BENCH_CFG.u_capacity + BENCH_CFG.u_threshold)
+N_QUERIES = 30
+TARGET = 0.15
+W_MAX = 2.5
+
+
+def _run(adaptive: bool, w_static: float = 0.5) -> Dict:
+    cfg = BENCH_CFG
+    clock = SimClock(rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    ctrl = AdaptiveWeightController(target_prior_frac=TARGET,
+                                    w_init=w_static,
+                                    w_max=W_MAX) if adaptive else None
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, very_heavy_weight=w_static)
+    shed = LoadShedder(cfg2, oracle_eval, sim_clock=clock, adaptive=ctrl)
+    searcher = SyntheticSearcher(corpus_size=200_000, seed=0)
+    pipe = TrustIRPipeline(cfg2, searcher, shed)
+    rts, fids, priors, ws = [], [], [], []
+    for i in range(N_QUERIES):
+        out = pipe.run_query(f"flood_{i}", N_RESULTS)
+        rts.append(out.response_time_s)
+        fids.append(out.trust_fidelity)
+        priors.append(out.shed.n_prior / out.shed.uload)
+        ws.append(ctrl.weight if ctrl else w_static)
+    tail = slice(N_QUERIES // 2, None)       # post-convergence window
+    return {
+        "mode": "adaptive" if adaptive else f"static w={w_static}",
+        "rt_s": float(np.mean(rts[tail])),
+        "fidelity": float(np.mean(fids[tail])),
+        "prior_frac": float(np.mean(priors[tail])),
+        "final_w": ws[-1],
+    }
+
+
+def run() -> List[Dict]:
+    return [_run(False, 0.5), _run(False, W_MAX), _run(True, 0.5)]
+
+
+def main():
+    rows = run()
+    print(f"{'mode':<16} {'rt_s':>8} {'fidelity':>9} {'prior%':>8} "
+          f"{'final_w':>8}")
+    for r in rows:
+        print(f"{r['mode']:<16} {r['rt_s']:>8.4f} {r['fidelity']:>9.3f} "
+              f"{100 * r['prior_frac']:>7.1f}% {r['final_w']:>8.2f}")
+    static, big, adapt = rows
+    # adaptive converges near the target prior fraction...
+    assert abs(adapt["prior_frac"] - TARGET) < 0.08, adapt
+    # ...beating the static paper rule on fidelity
+    assert adapt["fidelity"] > static["fidelity"]
+    # ...without paying the full latency of an always-maximal extension
+    assert adapt["rt_s"] < big["rt_s"] - 1e-3
+    assert adapt["final_w"] < W_MAX - 1e-3       # interior operating point
+    print("adaptive control holds the prior fraction at the target — the "
+          "paper's very-heavy trade-off is tuned automatically (§7).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Paper Fig 3.2(a-d): end-to-end wall-clock response times for the two
+query classes, Existing vs Proposed.
+
+Paper (Nutch, scale 1:1): "study in USA" 89,141 results — 1.22 s vs
+0.398 s; "book" 276,000 results — 2.28 s vs 0.653 s (speedups 3.07x and
+3.49x). We run at 1:100 scale with the simulated evaluator clock and
+report the same speedup ratio; a REAL-evaluator variant (smollm trust
+scorer, true wall clock on this host) is included for the harness-level
+measurement.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, build_pipeline, warm_cache
+from repro.core import LoadShedder, ProcessAll, SyntheticSearcher, \
+    TrustIRPipeline
+
+PAPER = {
+    "study in USA": {"n": 891, "existing_s": 1.22, "proposed_s": 0.398},
+    "book": {"n": 2760, "existing_s": 2.28, "proposed_s": 0.653},
+}
+
+
+def run() -> List[Dict]:
+    rows = []
+    for query, info in PAPER.items():
+        exist = build_pipeline("existing").run_query(query, info["n"])
+        prop_pipe = build_pipeline("proposed")
+        # paper: "same conditions and using the same database"
+        warm_cache(prop_pipe, query, info["n"], frac=0.5)
+        prop = prop_pipe.run_query(query, info["n"])
+        speedup = exist.response_time_s / max(prop.response_time_s, 1e-9)
+        rows.append({
+            "figure": "3.2", "query": query, "n_results": info["n"],
+            "existing_rt_s": round(exist.response_time_s, 4),
+            "proposed_rt_s": round(prop.response_time_s, 4),
+            "speedup": round(speedup, 2),
+            "paper_speedup": round(info["existing_s"]
+                                   / info["proposed_s"], 2),
+            "proposed_trust5": round(prop.trust_fidelity, 2),
+        })
+    return rows
+
+
+def run_real_evaluator() -> List[Dict]:
+    """True wall clock with the smollm-135m (reduced) trust evaluator."""
+    import jax.numpy as jnp
+    from repro.configs.base import TrustIRConfig
+    from repro.serving.evaluators import make_evaluator
+
+    ev, mk = make_evaluator("smollm-135m", smoke=True)
+
+    def evaluate(chunk):
+        return np.asarray(ev({k: jnp.asarray(v) for k, v in
+                              chunk.items() if k != "trust"}))
+
+    rows = []
+    n = 2000
+    feats = mk(n, fseed=0)
+    keys = np.arange(1, n + 1, dtype=np.uint32)
+    buckets = np.zeros(n, np.int32)
+
+    # calibrate a config to this host's real throughput (post-compile);
+    # the SLO is set so this n IS a Very-Heavy overload here, mirroring
+    # the paper's "book" query on its hardware
+    small = {k: v[:64] for k, v in feats.items()}
+    evaluate(small)                                 # jit compile
+    t0 = time.perf_counter()
+    evaluate(small)
+    rate = 64 / max(time.perf_counter() - t0, 1e-6)
+    cfg = TrustIRConfig(u_capacity=max(int(rate * 0.05), 8),
+                        u_threshold=max(int(rate * 0.05), 4),
+                        deadline_s=0.05, overload_deadline_s=0.1,
+                        chunk_size=64)
+    for system, cls in [("existing", ProcessAll),
+                        ("proposed", LoadShedder)]:
+        shed = cls(cfg, evaluate)
+        # warm the shedder's own jit paths (cache probe/insert, prior) at
+        # the measured shapes, using disjoint keys so the Trust DB stays
+        # cold for the measured run
+        shed.process(keys + 1_000_000, buckets, feats)
+        t0 = time.perf_counter()
+        res = shed.process(keys, buckets, feats)
+        wall = time.perf_counter() - t0
+        rows.append({"figure": "3.2-real", "system": system,
+                     "n_results": n, "wall_s": round(wall, 3),
+                     "n_eval": res.n_evaluated,
+                     "n_prior": res.n_prior,
+                     "regime": res.regime.name})
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r['query']:<14} n={r['n_results']:<5} existing "
+              f"{r['existing_rt_s']:.3f}s -> proposed "
+              f"{r['proposed_rt_s']:.3f}s  speedup {r['speedup']:.2f}x "
+              f"(paper {r['paper_speedup']:.2f}x) trust "
+              f"{r['proposed_trust5']:.2f}/5")
+    real = run_real_evaluator()
+    for r in real:
+        print(f"[real smollm evaluator] {r['system']:<9} "
+              f"wall {r['wall_s']:.3f}s eval {r['n_eval']} "
+              f"prior {r['n_prior']} ({r['regime']})")
+    assert real[1]["wall_s"] < real[0]["wall_s"]
+
+
+if __name__ == "__main__":
+    main()

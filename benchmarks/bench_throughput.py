@@ -1,0 +1,45 @@
+"""Evaluator throughput per architecture (reduced configs, real wall
+clock on this host) — the Load Monitor's calibration quantity, and the
+per-arch serving-cost table for the simulator."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.evaluators import make_evaluator
+
+ARCHS = ["smollm-135m", "gemma2-2b", "qwen2.5-14b",
+         "moonshot-v1-16b-a3b", "qwen3-moe-30b-a3b", "gcn-cora",
+         "dlrm-mlperf", "bst", "two-tower-retrieval", "mind"]
+CHUNK = 64
+
+
+def run() -> List[Dict]:
+    rows = []
+    for arch in ARCHS:
+        ev, mk = make_evaluator(arch, smoke=True)
+        feats = {k: jnp.asarray(v) for k, v in mk(CHUNK, fseed=0).items()}
+        ev(feats)                         # compile
+        t0 = time.perf_counter()
+        n_iter = 5
+        for _ in range(n_iter):
+            np.asarray(ev(feats))
+        dt = (time.perf_counter() - t0) / n_iter
+        rows.append({"arch": arch, "chunk": CHUNK,
+                     "us_per_item": round(1e6 * dt / CHUNK, 1),
+                     "items_per_s": round(CHUNK / dt, 1)})
+    return rows
+
+
+def main():
+    print(f"{'arch':<22} {'us/item':>10} {'items/s':>10}")
+    for r in run():
+        print(f"{r['arch']:<22} {r['us_per_item']:>10.1f} "
+              f"{r['items_per_s']:>10.1f}")
+
+
+if __name__ == "__main__":
+    main()

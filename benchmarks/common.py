@@ -1,0 +1,66 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs.base import TrustIRConfig
+from repro.core import (LoadShedder, ProcessAll, RLSEDA, SimClock,
+                        SyntheticSearcher, TrustIRPipeline)
+
+# Benchmark-scale trust-IR config: rates chosen so the paper's regimes
+# are reproduced at the paper's result-set scales (scaled 1:100 — the
+# paper's 89k/276k-result queries map to 890/2760 here).
+BENCH_CFG = TrustIRConfig(
+    u_capacity=512, u_threshold=256,
+    deadline_s=0.25, overload_deadline_s=0.5, very_heavy_weight=0.5,
+    chunk_size=64, cache_slots=8192, cache_ways=4, prior_buckets=1,
+)
+
+
+def oracle_eval(chunk):
+    return np.asarray(chunk["trust"])
+
+
+def build_pipeline(system: str, cfg: TrustIRConfig = BENCH_CFG,
+                   seed: int = 0):
+    clock = SimClock(rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    cls = {"existing": ProcessAll, "rls_eda": RLSEDA,
+           "proposed": LoadShedder}[system]
+    shed = cls(cfg, oracle_eval, sim_clock=clock)
+    searcher = SyntheticSearcher(corpus_size=50_000, seed=seed)
+    return TrustIRPipeline(cfg, searcher, shed)
+
+
+def warm_cache(pipe: TrustIRPipeline, query: str, n: int,
+               frac: float = 0.5, seed: int = 1) -> None:
+    """Pre-populate the Trust DB with exact trust for ``frac`` of the
+    URLs the query will retrieve — the paper's 'same database'
+    condition (prior traffic has already evaluated part of the corpus).
+    Only systems that consult the Trust DB (the proposed one) benefit."""
+    import jax.numpy as jnp
+    from repro.core import trust_cache as TC
+    res = pipe.searcher.search(query, n)
+    r = np.random.default_rng(seed)
+    pick = r.random(len(res.url_ids)) < frac
+    pipe.shedder.cache = TC.insert(
+        pipe.shedder.cache,
+        jnp.asarray(res.url_ids[pick], jnp.uint32),
+        jnp.asarray(res.exact_trust[pick]),
+        jnp.ones(int(pick.sum()), bool))
+
+
+def rt_scale_of_5(rt_s: float, existing_rt_s: float) -> float:
+    """Paper Fig 3.1 normalizes response time to a 0-5 scale where the
+    Existing System sits at ~4.5; we anchor 5 = existing's RT."""
+    return 5.0 * rt_s / max(existing_rt_s, 1e-9)
+
+
+def timeit(fn: Callable, n: int = 5) -> float:
+    fn()                               # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n

@@ -1,0 +1,82 @@
+"""Benchmark orchestrator: one bench per paper figure + the roofline
+harness. Prints ``name,us_per_call,derived`` CSV rows per the repo
+convention, followed by the human-readable sections.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(name, fn):
+    t0 = time.perf_counter()
+    out = fn()
+    dt_us = 1e6 * (time.perf_counter() - t0)
+    return name, dt_us, out
+
+
+def main() -> None:
+    from benchmarks import (bench_adaptive, bench_heavy_load,
+                            bench_response_time, bench_roofline,
+                            bench_throughput, bench_very_heavy_load)
+
+    csv_rows = []
+
+    print("=" * 72)
+    print("Fig 3.1(a) — Heavy load (Existing vs RLS-EDA vs Proposed)")
+    print("=" * 72)
+    name, us, rows = _timed("fig3.1a_heavy", bench_heavy_load.main)
+    csv_rows.append((name, us, "rt+trust scale-of-5"))
+
+    print()
+    print("=" * 72)
+    print("Fig 3.1(b) — Very Heavy load")
+    print("=" * 72)
+    name, us, rows = _timed("fig3.1b_very_heavy",
+                            bench_very_heavy_load.main)
+    csv_rows.append((name, us, "rt+trust scale-of-5, extended deadline"))
+
+    print()
+    print("=" * 72)
+    print("Fig 3.2 — End-to-end response times (incl. real evaluator)")
+    print("=" * 72)
+    name, us, rows = _timed("fig3.2_response_time",
+                            bench_response_time.main)
+    csv_rows.append((name, us, "wall-clock speedups vs paper"))
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: adaptive Very-Heavy control (paper §7 future "
+          "work)")
+    print("=" * 72)
+    name, us, rows = _timed("adaptive_control", bench_adaptive.main)
+    csv_rows.append((name, us, "PI on extension weight vs static"))
+
+    print()
+    print("=" * 72)
+    print("Evaluator throughput per architecture (reduced, this host)")
+    print("=" * 72)
+    name, us, rows = _timed("throughput", bench_throughput.main)
+    csv_rows.append((name, us, "us/item per arch"))
+
+    print()
+    print("=" * 72)
+    print("Roofline (single-pod baseline, from dry-run artifacts)")
+    print("=" * 72)
+    try:
+        name, us, rows = _timed(
+            "roofline_single",
+            lambda: bench_roofline.run("single", csv=True))
+        csv_rows.append((name, us, "3 terms x 40 cells"))
+    except (FileNotFoundError, IndexError):
+        print("(dry-run artifacts missing — run "
+              "`python -m repro.launch.dryrun --all` first)")
+
+    print()
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""Config system: typed, frozen dataclasses for every architecture family.
+
+Every assigned architecture gets one module in this package exporting:
+  ``config()``       -> the exact published configuration,
+  ``smoke_config()`` -> a reduced same-family configuration for CPU smoke tests,
+  ``shapes()``       -> the arch's assigned input-shape set (list[ShapeSpec]).
+
+The registry (``repro.configs.registry``) maps ``--arch <id>`` to these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Shape specs (one per dry-run cell)
+# ---------------------------------------------------------------------------
+
+# Kinds determine which step function is lowered in the dry-run.
+SHAPE_KINDS = (
+    "train",            # train_step: full fwd+bwd+optimizer
+    "prefill",          # prefill_step: forward, fills KV cache
+    "decode",           # serve_step: one new token against a KV cache
+    "serve",            # serve_step: pure forward scoring (recsys / gnn inference)
+    "retrieval",        # serve_step: 1 query vs n_candidates scoring
+    "graph_full",       # full-batch graph train_step
+    "graph_minibatch",  # sampled-subgraph train_step
+    "graph_batched",    # batched small graphs train_step
+)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell for an architecture."""
+
+    name: str
+    kind: str
+    # LM shapes
+    seq_len: int = 0
+    global_batch: int = 0
+    # recsys shapes
+    batch: int = 0
+    n_candidates: int = 0
+    # graph shapes
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    nodes_per_graph: int = 0
+    edges_per_graph: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in SHAPE_KINDS:
+            raise ValueError(f"unknown shape kind {self.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                      # FFN hidden size per expert
+    n_shared_experts: int = 0
+    d_shared: int = 0                  # FFN hidden of the shared expert(s)
+    first_k_dense: int = 0             # leading layers that stay dense
+    d_ff_dense: int = 0                # FFN hidden for those dense layers
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001     # load-balance loss coefficient
+    norm_topk_prob: bool = True        # renormalize top-k gate weights
+    dispatch: str = "dense_scatter"    # "dense_scatter" | "ep_shard_map"
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"                  # "silu" (SwiGLU) | "gelu" (GeGLU)
+    # gemma2-style extras
+    sliding_window: int = 0            # >0: window size for local layers
+    local_global_pattern: bool = False # alternate local/global attention
+    attn_logit_softcap: float = 0.0    # >0: tanh softcap on attention logits
+    final_logit_softcap: float = 0.0   # >0: tanh softcap on output logits
+    post_norm: bool = False            # gemma2 post-block RMSNorm
+    scale_embeddings: bool = False     # gemma2 sqrt(d_model) embed scaling
+    query_pre_attn_scalar: float = 0.0 # gemma2 overrides 1/sqrt(d_head)
+    # MoE
+    moe: Optional[MoEConfig] = None
+    # numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True                 # activation checkpointing per block
+    use_pallas: bool = False           # flash kernels (TPU target; CPU uses ref)
+    # scan over layers: keeps HLO size O(1) in depth — required for the
+    # 48-layer full configs to compile quickly in the dry-run.
+    scan_layers: bool = True
+
+    @property
+    def family(self) -> str:
+        return "moe" if self.moe is not None else "dense"
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings included once if tied)."""
+        d, L = self.d_model, self.n_layers
+        attn = L * (self.n_heads * self.d_head * d * 2         # q, o
+                    + self.n_kv_heads * self.d_head * d * 2)   # k, v
+        if self.moe is None:
+            ffn = L * 3 * d * self.d_ff
+        else:
+            m = self.moe
+            dense_layers = m.first_k_dense
+            moe_layers = L - dense_layers
+            ffn = dense_layers * 3 * d * (m.d_ff_dense or self.d_ff)
+            ffn += moe_layers * (m.n_experts * 3 * d * m.d_expert
+                                 + m.n_shared_experts * 3 * d * (m.d_shared or m.d_expert)
+                                 + d * m.n_experts)            # router
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        norms = L * 2 * d + d
+        return attn + ffn + emb + norms
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameter count — MoE activates top_k experts."""
+        if self.moe is None:
+            return self.n_params()
+        d, L, m = self.d_model, self.n_layers, self.moe
+        attn = L * (self.n_heads * self.d_head * d * 2
+                    + self.n_kv_heads * self.d_head * d * 2)
+        dense_layers = m.first_k_dense
+        moe_layers = L - dense_layers
+        ffn = dense_layers * 3 * d * (m.d_ff_dense or self.d_ff)
+        ffn += moe_layers * (m.top_k * 3 * d * m.d_expert
+                             + m.n_shared_experts * 3 * d * (m.d_shared or m.d_expert)
+                             + d * m.n_experts)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return attn + ffn + emb + L * 2 * d + d
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_feat: int
+    n_classes: int
+    aggregator: str = "mean"       # "mean" | "sum" | "max"
+    norm: str = "sym"              # "sym" (D^-1/2 A D^-1/2) | "rw" | "none"
+    dropout: float = 0.0
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+
+    @property
+    def family(self) -> str:
+        return "gnn"
+
+    def n_params(self) -> int:
+        p = self.d_feat * self.d_hidden + self.d_hidden
+        for _ in range(self.n_layers - 2):
+            p += self.d_hidden * self.d_hidden + self.d_hidden
+        p += self.d_hidden * self.n_classes + self.n_classes
+        return p
+
+
+@dataclass(frozen=True)
+class EmbeddingTableConfig:
+    """One sparse embedding table (or a stack of same-shape tables)."""
+    name: str
+    vocab: int
+    dim: int
+    count: int = 1                 # number of identical tables stacked
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                     # "dlrm" | "bst" | "two_tower" | "mind"
+    embed_dim: int
+    tables: Tuple[EmbeddingTableConfig, ...] = ()
+    n_dense: int = 0
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    tower_mlp: Tuple[int, ...] = ()
+    interaction: str = "dot"
+    # BST
+    seq_len: int = 0
+    n_blocks: int = 0
+    n_heads: int = 0
+    mlp: Tuple[int, ...] = ()
+    # MIND
+    n_interests: int = 0
+    capsule_iters: int = 0
+    hist_len: int = 0
+    item_vocab: int = 0
+    user_vocab: int = 0
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+
+    @property
+    def family(self) -> str:
+        return "recsys"
+
+    def n_params(self) -> int:
+        p = sum(t.vocab * t.dim * t.count for t in self.tables)
+        def mlp_params(dims: Tuple[int, ...], d_in: int) -> int:
+            total, d = 0, d_in
+            for h in dims:
+                total += d * h + h
+                d = h
+            return total
+        if self.model == "dlrm":
+            p += mlp_params(self.bot_mlp[1:], self.bot_mlp[0])
+            n_f = len(self.tables) + 1
+            d_int = n_f * (n_f - 1) // 2 + self.bot_mlp[-1]
+            p += mlp_params(self.top_mlp, d_int)
+        elif self.model == "bst":
+            d = self.embed_dim
+            p += self.n_blocks * (4 * d * d + 8 * d * d)   # attn + ffn approx
+            p += mlp_params(self.mlp + (1,), d * (self.seq_len + 1))
+        elif self.model == "two_tower":
+            p += 2 * mlp_params(self.tower_mlp + (self.embed_dim,), self.embed_dim)
+        elif self.model == "mind":
+            d = self.embed_dim
+            p += d * d  # routing bilinear
+            p += mlp_params((4 * d, d), d)
+        return p
+
+
+# The paper's own system config: the trust-IR serving pipeline.
+@dataclass(frozen=True)
+class TrustIRConfig:
+    name: str = "trust_ir"
+    # Load shedder parameters (paper §4)
+    u_capacity: int = 2048              # URLs evaluable within base deadline
+    u_threshold: int = 1024             # extra URLs within overload deadline
+    deadline_s: float = 0.5             # optimum response time (base deadline)
+    overload_deadline_s: float = 1.0    # optimum response time under overload
+    very_heavy_weight: float = 0.5      # deadline-extension weight w (§4.3)
+    chunk_size: int = 256               # microbatch granularity for deadline checks
+    # Trust DB cache
+    cache_slots: int = 65536
+    cache_ways: int = 4
+    # Average-trust prior
+    prior_buckets: int = 1              # 1 = paper-faithful global average
+    prior_ewma: float = 0.05
+    # Quality subsystem weights (content, context, ratings)
+    quality_weights: Tuple[float, float, float] = (0.5, 0.3, 0.2)
+    # Evaluator backbone (arch id from the registry)
+    evaluator_arch: str = "smollm-135m"
+    trust_scale: float = 5.0            # paper reports trust on a scale of 5
+
+
+# ---------------------------------------------------------------------------
+# Arch bundle: what the registry returns
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchBundle:
+    arch_id: str
+    config: Any                         # TransformerConfig | GNNConfig | RecsysConfig
+    smoke: Any                          # reduced same-family config
+    shapes: Tuple[ShapeSpec, ...]
+    source: str = ""                    # provenance note
+
+
+def reduced(cfg, **overrides):
+    """Return a copy of a frozen dataclass config with overrides applied."""
+    return dataclasses.replace(cfg, **overrides)
+
+
+# LM shape set shared by the five LM-family archs (per assignment).
+LM_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec(name="train_4k", kind="train", seq_len=4096, global_batch=256),
+    ShapeSpec(name="prefill_32k", kind="prefill", seq_len=32768, global_batch=32),
+    ShapeSpec(name="decode_32k", kind="decode", seq_len=32768, global_batch=128),
+    ShapeSpec(name="long_500k", kind="decode", seq_len=524288, global_batch=1),
+)
+
+RECSYS_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec(name="train_batch", kind="train", batch=65536),
+    ShapeSpec(name="serve_p99", kind="serve", batch=512),
+    ShapeSpec(name="serve_bulk", kind="serve", batch=262144),
+    ShapeSpec(name="retrieval_cand", kind="retrieval", batch=1, n_candidates=1_000_000),
+)
+
+GNN_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec(name="full_graph_sm", kind="graph_full",
+              n_nodes=2708, n_edges=10556, d_feat=1433),
+    ShapeSpec(name="minibatch_lg", kind="graph_minibatch",
+              n_nodes=232_965, n_edges=114_615_892, batch_nodes=1024,
+              fanout=(15, 10), d_feat=602),
+    ShapeSpec(name="ogb_products", kind="graph_full",
+              n_nodes=2_449_029, n_edges=61_859_140, d_feat=100),
+    ShapeSpec(name="molecule", kind="graph_batched",
+              n_nodes=30, n_edges=64, batch=128, d_feat=32,
+              nodes_per_graph=30, edges_per_graph=64),
+)

@@ -1,0 +1,44 @@
+"""Arch registry: maps ``--arch <id>`` to its ArchBundle."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchBundle
+
+
+def _load_bundles() -> Dict[str, ArchBundle]:
+    from repro.configs import (bst, dlrm_mlperf, gcn_cora, gemma2_2b, mind,
+                               moonshot_16b_a3b, qwen25_14b,
+                               qwen3_moe_30b_a3b, smollm_135m, two_tower)
+    mods = [smollm_135m, qwen25_14b, gemma2_2b, moonshot_16b_a3b,
+            qwen3_moe_30b_a3b, gcn_cora, bst, dlrm_mlperf, two_tower, mind]
+    out: Dict[str, ArchBundle] = {}
+    for m in mods:
+        b = m.bundle()
+        out[b.arch_id] = b
+    return out
+
+
+_BUNDLES: Dict[str, ArchBundle] = {}
+
+
+def arch_ids() -> List[str]:
+    global _BUNDLES
+    if not _BUNDLES:
+        _BUNDLES = _load_bundles()
+    return list(_BUNDLES)
+
+
+def get_bundle(arch_id: str) -> ArchBundle:
+    global _BUNDLES
+    if not _BUNDLES:
+        _BUNDLES = _load_bundles()
+    if arch_id not in _BUNDLES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_BUNDLES)}")
+    return _BUNDLES[arch_id]
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    b = get_bundle(arch_id)
+    return b.smoke if smoke else b.config

@@ -1,0 +1,26 @@
+# The paper's primary contribution: the Optimal Load Shedding Algorithm
+# and the trustworthy-IR pipeline around it.
+from repro.core.regimes import Regime, classify, classify_jnp
+from repro.core.deadline import (effective_deadline, effective_deadline_jnp,
+                                 extension_factor)
+from repro.core.load_monitor import LoadMonitor
+from repro.core.shedder import (LoadShedder, ShedResult, SimClock,
+                                TIER_CACHED, TIER_EVAL, TIER_INVALID,
+                                TIER_PRIOR, combine_trust, fused_shed_eval,
+                                gather_eval_indices, shed_plan)
+from repro.core.adaptive import AdaptiveWeightController
+from repro.core.baselines import ProcessAll, RLSEDA
+from repro.core.pipeline import (PipelineOutput, SearchResults,
+                                 SyntheticSearcher, TrustIRPipeline,
+                                 trust_fidelity)
+
+__all__ = [
+    "Regime", "classify", "classify_jnp",
+    "effective_deadline", "effective_deadline_jnp", "extension_factor",
+    "LoadMonitor", "LoadShedder", "ShedResult", "SimClock",
+    "TIER_CACHED", "TIER_EVAL", "TIER_INVALID", "TIER_PRIOR",
+    "combine_trust", "fused_shed_eval", "gather_eval_indices", "shed_plan",
+    "AdaptiveWeightController", "ProcessAll", "RLSEDA",
+    "PipelineOutput", "SearchResults", "SyntheticSearcher",
+    "TrustIRPipeline", "trust_fidelity",
+]

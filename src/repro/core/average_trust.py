@@ -1,0 +1,44 @@
+"""Average-trustworthiness prior (paper §4.2-4.3).
+
+After the deadline, remaining Drop Queue items are "assigned with an
+average trustworthiness value". The paper uses a single global average;
+we generalize to per-bucket EWMA priors (bucket = source-domain hash),
+with ``n_buckets=1`` reproducing the paper exactly (the default in all
+paper-faithful benchmarks). State is a functional pytree like the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init(n_buckets: int = 1, init_value: float = 2.5) -> Dict:
+    return {
+        "mean": jnp.full((n_buckets,), init_value, jnp.float32),
+        "count": jnp.zeros((n_buckets,), jnp.float32),
+    }
+
+
+def query(state: Dict, buckets: jnp.ndarray) -> jnp.ndarray:
+    """buckets: (N,) int32 -> prior trust (N,) f32."""
+    n = state["mean"].shape[0]
+    return state["mean"][buckets % n]
+
+
+def update(state: Dict, buckets: jnp.ndarray, values: jnp.ndarray,
+           mask: jnp.ndarray, ewma: float = 0.05) -> Dict:
+    """Fold observed trust values into the per-bucket means."""
+    n = state["mean"].shape[0]
+    b = buckets % n
+    m = mask.astype(jnp.float32)
+    sums = jax.ops.segment_sum(values.astype(jnp.float32) * m, b, n)
+    cnts = jax.ops.segment_sum(m, b, n)
+    batch_mean = sums / jnp.maximum(cnts, 1.0)
+    seen = cnts > 0
+    # EWMA toward the batch mean for buckets observed this round
+    new_mean = jnp.where(seen,
+                         (1 - ewma) * state["mean"] + ewma * batch_mean,
+                         state["mean"])
+    return {"mean": new_mean, "count": state["count"] + cnts}

@@ -1,0 +1,52 @@
+"""Deadline controller (paper §4.2–4.3).
+
+Base deadline = the user's optimum response time. Under Heavy load the
+system targets the overload response time. Under Very Heavy load the
+deadline is "increased by a specific value ... calculated by giving a
+weight based on Uload and the optimum response time the user needs"
+(§4.3). The paper gives no formula; we use a bounded monotone rule
+(DESIGN.md §2):
+
+    overflow_frac = clip((Uload - Ucap - Uthr) / Uload, 0, 1)
+    deadline'     = overload_deadline * (1 + w * overflow_frac)
+
+so the extension grows with overload but never exceeds (1 + w)x.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.regimes import Regime, classify
+
+
+def extension_factor(uload, u_capacity, u_threshold, weight: float):
+    """Traced-safe Very-Heavy extension factor (>= 1)."""
+    uload_f = jnp.maximum(jnp.asarray(uload, jnp.float32), 1.0)
+    overflow = jnp.asarray(uload - u_capacity - u_threshold, jnp.float32)
+    frac = jnp.clip(overflow / uload_f, 0.0, 1.0)
+    return 1.0 + weight * frac
+
+
+def effective_deadline(uload: int, u_capacity: int, u_threshold: int, *,
+                       deadline_s: float, overload_deadline_s: float,
+                       weight: float) -> float:
+    """Host-side effective deadline per regime."""
+    regime = classify(uload, u_capacity, u_threshold)
+    if regime == Regime.NORMAL:
+        return deadline_s
+    if regime == Regime.HEAVY:
+        return overload_deadline_s
+    f = float(extension_factor(uload, u_capacity, u_threshold, weight))
+    return overload_deadline_s * f
+
+
+def effective_deadline_jnp(uload, u_capacity, u_threshold, *,
+                           deadline_s: float, overload_deadline_s: float,
+                           weight: float):
+    """Traced effective deadline (float32 scalar)."""
+    f = extension_factor(uload, u_capacity, u_threshold, weight)
+    heavy_dl = overload_deadline_s * jnp.where(
+        uload > u_capacity + u_threshold, f, 1.0)
+    return jnp.where(uload <= u_capacity,
+                     jnp.float32(deadline_s),
+                     heavy_dl.astype(jnp.float32))

@@ -1,0 +1,51 @@
+"""Load Monitor (paper §4): decides Uload, Ucapacity, Uthreshold.
+
+Uload is observed per request batch. Ucapacity and Uthreshold are derived
+from a measured evaluator throughput (items/s, EWMA-smoothed):
+
+    Ucapacity  = floor(rate * deadline_s)
+    Uthreshold = floor(rate * (overload_deadline_s - deadline_s))
+
+which matches the paper's definitions ("URLs which can be processed ...
+within the deadline" / "URLs above Ucapacity that can be processed within
+an optimum response time selected for overload conditions"). Config values
+seed the estimate before any measurement exists.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.configs.base import TrustIRConfig
+
+
+@dataclass
+class LoadMonitor:
+    cfg: TrustIRConfig
+    ewma: float = 0.3
+    _rate: Optional[float] = None        # items/s, EWMA
+    n_observations: int = 0
+
+    @property
+    def rate(self) -> float:
+        if self._rate is not None:
+            return self._rate
+        # Seed from config: Ucapacity items within the base deadline.
+        return self.cfg.u_capacity / max(self.cfg.deadline_s, 1e-9)
+
+    def observe(self, n_items: int, elapsed_s: float) -> None:
+        """Record a measured evaluation of ``n_items`` in ``elapsed_s``."""
+        if n_items <= 0 or elapsed_s <= 0:
+            return
+        r = n_items / elapsed_s
+        self._rate = r if self._rate is None else (
+            self.ewma * r + (1 - self.ewma) * self._rate)
+        self.n_observations += 1
+
+    def parameters(self) -> Tuple[int, int]:
+        """Current (Ucapacity, Uthreshold)."""
+        r = self.rate
+        ucap = max(1, int(r * self.cfg.deadline_s))
+        uthr = max(0, int(r * (self.cfg.overload_deadline_s
+                               - self.cfg.deadline_s)))
+        return ucap, uthr

@@ -1,0 +1,40 @@
+"""Quality subsystem (paper §4, after the Load Shedder).
+
+Filtered URLs are stored in named graphs and scored on three metrics —
+Content, Context, Ratings — chosen by the user's WIQA quality policies;
+the Decision Maker combines them with weight factors. We model the three
+metrics as features of each result and the decision maker as the weighted
+combination, composing the final quality level with the trust value.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrustIRConfig
+
+
+def quality_level(metrics: jnp.ndarray, weights: Tuple[float, float, float]
+                  ) -> jnp.ndarray:
+    """metrics: (N, 3) content/context/ratings in [0, 1] -> (N,) in [0, 5]."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return 5.0 * metrics.astype(jnp.float32) @ w
+
+
+def decide(trust: jnp.ndarray, metrics: jnp.ndarray,
+           cfg: TrustIRConfig, trust_weight: float = 0.5,
+           min_trust: float = 0.0) -> Dict[str, jnp.ndarray]:
+    """Decision Maker: final ranking score + trust filter mask."""
+    q = quality_level(metrics, cfg.quality_weights)
+    score = trust_weight * trust + (1 - trust_weight) * q
+    keep = trust >= min_trust
+    return {"quality": q, "score": jnp.where(keep, score, -jnp.inf),
+            "keep": keep}
+
+
+def rank(scores: jnp.ndarray, top_k: int = 10) -> jnp.ndarray:
+    """Indices of the top-k results by decision score."""
+    k = min(top_k, scores.shape[0])
+    return jnp.argsort(-scores)[:k]

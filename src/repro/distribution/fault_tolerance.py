@@ -1,0 +1,125 @@
+"""Fault tolerance & elasticity policies for 1000+-node operation.
+
+Three pillars (DESIGN.md §5):
+
+1. **Checkpoint/restart** — ``training.checkpoint``: atomic saves,
+   checksums, async writer; restore is *elastic* (mesh-shape-agnostic).
+   ``ElasticMeshManager`` picks a mesh for whatever device count
+   survives and rebuilds shardings, so an 8-host job that loses 4 hosts
+   resumes at the last checkpoint on the remaining 4 without resharding
+   tools.
+
+2. **Straggler mitigation** — the paper's own discipline generalized:
+   deadline-based cutoff with a prior answer IS tail-latency control.
+   ``DeadlineSkipPolicy`` applies it to training (skip a straggling
+   grad-accum microbatch chunk and rescale) and serving (the Load
+   Shedder). Hedged dispatch covers redundant work issuance.
+
+3. **Health tracking** — ``HeartbeatTracker`` marks workers dead after
+   ``timeout`` missed beats; the mesh manager consumes its live set.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.launch import mesh as mesh_lib
+
+
+@dataclass
+class HeartbeatTracker:
+    timeout_s: float = 60.0
+    _last: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, worker_id: int, now: Optional[float] = None) -> None:
+        self._last[worker_id] = time.monotonic() if now is None else now
+
+    def live_workers(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return sorted(w for w, ts in self._last.items()
+                      if t - ts <= self.timeout_s)
+
+    def dead_workers(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return sorted(w for w, ts in self._last.items()
+                      if t - ts > self.timeout_s)
+
+
+def largest_mesh_shape(n_devices: int, prefer_model: int = 16
+                       ) -> Tuple[int, ...]:
+    """Biggest (data, model) grid fitting ``n_devices`` (powers of two).
+
+    Keeps the model axis as close to ``prefer_model`` as the device count
+    allows — TP degree changes less often than DP degree on failure.
+    """
+    n = 2 ** int(math.floor(math.log2(max(n_devices, 1))))
+    model = min(prefer_model, n)
+    return (n // model, model)
+
+
+class ElasticMeshManager:
+    """Rebuild (mesh, shardings) for the surviving device set."""
+
+    def __init__(self, prefer_model: int = 16):
+        self.prefer_model = prefer_model
+
+    def make_mesh(self, devices: Optional[Sequence] = None) -> Mesh:
+        devs = list(devices if devices is not None else jax.devices())
+        shape = largest_mesh_shape(len(devs), self.prefer_model)
+        n_used = shape[0] * shape[1]
+        return mesh_lib.mesh_from_devices(devs[:n_used], shape,
+                                          ("data", "model"))
+
+    def resume(self, ckpt_dir: str, tree_like, specs, devices=None):
+        """Elastic restore: new mesh + shardings + state from the last
+        checkpoint (leaves are saved unsharded; pjit reshards on entry)."""
+        from repro.distribution.sharding import shardings_of
+        from repro.training import checkpoint as CK
+        m = self.make_mesh(devices)
+        sh = shardings_of(specs, m)
+        state, extra = CK.restore(ckpt_dir, tree_like, shardings=sh)
+        return m, sh, state, extra
+
+
+@dataclass
+class DeadlineSkipPolicy:
+    """Straggler mitigation by deadline: work chunks that would overrun
+    the step deadline are skipped and the remainder rescaled — the
+    training-side analogue of the paper's PRIOR tier.
+    """
+    step_deadline_s: float
+    min_fraction: float = 0.5     # never keep less than this
+
+    def plan(self, chunk_times_s: Sequence[float]) -> List[bool]:
+        """Given projected per-chunk times, choose which chunks to run."""
+        keep: List[bool] = []
+        t = 0.0
+        n = len(chunk_times_s)
+        min_keep = math.ceil(self.min_fraction * n)
+        for i, c in enumerate(chunk_times_s):
+            if t + c <= self.step_deadline_s or i < min_keep:
+                keep.append(True)
+                t += c
+            else:
+                keep.append(False)
+        return keep
+
+    def rescale(self, keep: Sequence[bool]) -> float:
+        """Gradient rescale factor: kept chunks stand in for all."""
+        kept = sum(keep)
+        return len(keep) / max(kept, 1)
+
+
+@dataclass
+class HedgedDispatch:
+    """Serving-side hedging: re-issue a request to a backup replica if the
+    primary hasn't answered within the hedge latency (P95-tuned)."""
+    hedge_after_s: float
+
+    def should_hedge(self, elapsed_s: float, already_hedged: bool) -> bool:
+        return (not already_hedged) and elapsed_s >= self.hedge_after_s

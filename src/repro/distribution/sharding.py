@@ -1,0 +1,206 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs per arch
+family on the ``(pod, data, model)`` production mesh.
+
+Conventions (DESIGN.md §5):
+  * DP axes  = ("pod", "data") — batch/tokens/nodes/bags.
+  * TP axis  = "model" — attention heads, FFN hidden, vocab rows/cols.
+  * EP       = MoE expert dim over "model".
+  * SP       = KV-cache sequence dim over "model" (long-context decode
+    shards over ("data", "model") so a batch-1 cache spreads 256-wide).
+  * RecSys embedding tables row-shard over ("data", "model") — 256-way —
+    while activations stay on ("pod", "data"): the table axes and batch
+    axes deliberately differ (2D sharding), XLA inserts the exchange.
+
+Rules are substring matches on the param-tree path; optimizer state (m/v)
+mirrors the param specs automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (GNNConfig, RecsysConfig, ShapeSpec,
+                                TransformerConfig)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def table_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("data", "model"))
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _tf_rule(path: str, ndim: int, mesh: Mesh,
+             tied_embeddings: bool = False) -> P:
+    """Transformer param rule. ``ndim`` includes the stacked-layer dim for
+    scanned blocks; specs are right-aligned so the rule works for both."""
+    def right(*spec):
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if "moe" in path:
+        if "router" in path:
+            return P(*([None] * ndim))
+        if "shared" in path:
+            if re.search(r"\['(gate|up)'\]\['w'\]", path):
+                return right(None, "model")
+            if "down" in path:
+                return right("model", None)
+            return P(*([None] * ndim))
+        # expert-stacked weights (…, E, D, F) / (…, E, F, D): EP on E
+        if re.search(r"w_(gate|up|down)", path):
+            return right("model", None, None)
+        return P(*([None] * ndim))
+    if re.search(r"\['(wq|wk|wv)'\]\['w'\]", path):
+        return right(None, "model")
+    if re.search(r"\['(wq|wk|wv)'\]\['b'\]", path):
+        return right("model")
+    if re.search(r"\['wo'\]\['w'\]", path):
+        return right("model", None)
+    if re.search(r"\['(gate|up)'\]\['w'\]", path):
+        return right(None, "model")
+    if re.search(r"\['down'\]\['w'\]", path):
+        return right("model", None)
+    if "embed" in path and "table" in path:
+        # Untied: column (d_model) sharding — token gather AND its
+        # backward scatter-add stay local per shard (row sharding made
+        # XLA replicate the (V, D) f32 gradient; §Perf iter "embed-col").
+        # Tied: the table doubles as the unembed — column sharding would
+        # put the logits contraction on the sharded dim and materialize
+        # FULL-vocab f32 logits (8.4 GB/chunk for gemma2); rows win.
+        return right("model", None) if tied_embeddings \
+            else right(None, "model")
+    if "unembed" in path and path.endswith("['w']"):
+        return right(None, "model")          # vocab cols
+    return P(*([None] * ndim))               # norms, biases, scalars
+
+
+def _recsys_rule(path: str, ndim: int, mesh: Mesh) -> P:
+    if "tables" in path and "table" in path and ndim == 2:
+        return P(table_axes(mesh), None)     # row-sharded, 256-way
+    return P(*([None] * ndim))               # MLPs replicated (tiny)
+
+
+def _gnn_rule(path: str, ndim: int, mesh: Mesh) -> P:
+    return P(*([None] * ndim))               # 2-layer GCN params are tiny
+
+
+def param_specs(cfg: Any, params_shape: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec mirroring ``params_shape`` (from
+    jax.eval_shape)."""
+    if isinstance(cfg, TransformerConfig):
+        def rule(path, ndim, mesh, _tied=cfg.tie_embeddings):
+            return _tf_rule(path, ndim, mesh, tied_embeddings=_tied)
+    elif isinstance(cfg, RecsysConfig):
+        rule = _recsys_rule
+    elif isinstance(cfg, GNNConfig):
+        rule = _gnn_rule
+    else:
+        raise TypeError(type(cfg))
+
+    def one(path, leaf):
+        return rule(jax.tree_util.keystr(path), leaf.ndim, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def shardings_of(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree: Any, opt_state_shape: Any) -> Any:
+    """AdamWState(step, m, v): m/v mirror params, step replicated."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=P(), m=param_spec_tree, v=param_spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation specs per shape kind
+# ---------------------------------------------------------------------------
+
+def lm_batch_specs(shape: ShapeSpec, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+    if shape.kind == "train":
+        return {"tokens": P(dp, None), "labels": P(dp, None),
+                "mask": P(dp, None)}
+    if shape.kind == "prefill":
+        return {"tokens": P(dp, None)}
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            # SP: batch-1 long-context cache spreads over (data, model)
+            cache_seq = table_axes(mesh)
+            batch_ax: Optional[Tuple[str, ...]] = None
+        else:
+            cache_seq = ("model",)
+            batch_ax = dp
+        return {
+            "token": P(batch_ax),
+            "cache": {
+                "k": P(None, batch_ax, cache_seq, None, None),
+                "v": P(None, batch_ax, cache_seq, None, None),
+                "lengths": P(batch_ax),
+            },
+        }
+    raise ValueError(shape.kind)
+
+
+def recsys_batch_specs(cfg: RecsysConfig, shape: ShapeSpec,
+                       mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+    if cfg.model == "dlrm":
+        base = {"dense": P(dp, None), "sparse": P(dp, None)}
+    elif cfg.model == "bst":
+        base = {"hist": P(dp, None), "target": P(dp),
+                "other": P(dp, None)}
+    elif cfg.model == "two_tower":
+        base = {"user_id": P(dp), "user_feats": P(dp, None),
+                "item_id": P(dp), "item_feats": P(dp, None)}
+    elif cfg.model == "mind":
+        base = {"hist": P(dp, None), "hist_mask": P(dp, None),
+                "target": P(dp)}
+    else:
+        raise ValueError(cfg.model)
+    if shape.kind == "train":
+        if cfg.model in ("dlrm", "bst"):
+            base["labels"] = P(dp)
+        if cfg.model == "two_tower":
+            base["logq"] = P(dp)
+    if shape.kind == "retrieval":
+        # 1 query replicated; candidates sharded over everything usable
+        return {"query": jax.tree.map(lambda _: P(), base,
+                                      is_leaf=lambda x: isinstance(x, P)),
+                "cand_item_id": P(dp),
+                "cand_item_feats": P(dp, None)}
+    return base
+
+
+def gnn_batch_specs(shape: ShapeSpec, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+    if shape.name == "full_graph_sm":
+        # cora is tiny: replicate
+        return {"x": P(), "edge_index": P(), "labels": P(),
+                "label_mask": P()}
+    if shape.kind == "graph_full":
+        return {"x": P(dp, None), "edge_index": P(None, dp),
+                "labels": P(dp), "label_mask": P(dp)}
+    if shape.kind == "graph_minibatch":
+        return {"x": P(dp, None), "edge_index": P(None, dp),
+                "edge_mask": P(dp), "labels": P(dp),
+                "label_mask": P(dp)}
+    if shape.kind == "graph_batched":
+        return {"x": P(dp, None), "edge_index": P(None, dp),
+                "graph_ids": P(dp), "labels": P(dp)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,134 @@
+"""Pallas TPU flash-decode: one new token vs a long KV cache.
+
+Decode attention is bandwidth-bound (the KV cache read dominates), so the
+kernel streams KV blocks through VMEM with online-softmax state in
+scratch, skipping blocks beyond the sequence length (and before the
+sliding window). Grid = (batch, kv_heads, n_kv_blocks), kv innermost.
+Per-row cache lengths arrive via scalar prefetch so block skipping is
+data-dependent.
+
+The grouped q heads (G = Hq/Hkv) ride in the sublane dimension of a
+single (G, D) tile — no KV duplication for GQA.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   sm_scale: float, window: int, softcap: float,
+                   block_k: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+    needed = k_start < length
+    if window > 0:
+        needed &= (k_start + block_k - 1) > (length - 1 - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                 # (G, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        ok = k_pos < length
+        if window > 0:
+            ok &= k_pos > length - 1 - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            corr * l_prev + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        l = l_scr[:, :1]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                 v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                 window: int = 0, softcap: float = 0.0,
+                 sm_scale: Optional[float] = None, block_k: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, D); caches: (B, L, Hkv, D); lengths: (B,) int32.
+
+    Returns (B, Hq, D). ``lengths`` counts valid positions including the
+    newest token (already written to the cache).
+    """
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    block_k = min(block_k, L)
+    assert L % block_k == 0, (L, block_k)
+
+    qg = q.reshape(B, Hkv, G, D)
+    kh = jnp.moveaxis(k_cache, 2, 1)                     # (B, Hkv, L, D)
+    vh = jnp.moveaxis(v_cache, 2, 1)
+
+    grid = (B, Hkv, L // block_k)
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, window=window,
+        softcap=softcap, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, ki, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, ki, *_: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, ki, *_: (b, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, ki, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, LANES), jnp.float32),
+                pltpu.VMEM((G, LANES), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kh, vh)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+``interpret=True`` mode, and the model code selects them only when
+``use_pallas`` is set (the pure-jnp paths in ``repro.models`` are the
+default on CPU and the oracle for tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dot_interaction import dot_interaction as _dot_interaction
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.shed_partition import shed_partition as _shed_partition
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "sm_scale", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    sm_scale=None, block_q=128, block_k=128,
+                    interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, sm_scale=sm_scale,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "sm_scale",
+                                   "block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, window=0, softcap=0.0,
+                 sm_scale=None, block_k=256, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash_decode(q, k_cache, v_cache, lengths, window=window,
+                         softcap=softcap, sm_scale=sm_scale,
+                         block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dot_interaction(feats, *, block_b=128, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _dot_interaction(feats, block_b=block_b, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("u_capacity", "u_threshold",
+                                   "budget_dq", "block_n", "interpret"))
+def shed_partition(keys, valid, cache_keys, cache_values, *,
+                   u_capacity, u_threshold, budget_dq, block_n=1024,
+                   interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _shed_partition(keys, valid, cache_keys, cache_values,
+                           u_capacity, u_threshold, budget_dq,
+                           block_n=block_n, interpret=interpret)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+``tests/test_kernels.py`` across shape/dtype sweeps)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        sm_scale: Optional[float] = None):
+    """Naive full attention. q: (B,S,Hq,D); k,v: (B,S,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32)) * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, lengths, *, window=0,
+                     softcap=0.0, sm_scale: Optional[float] = None):
+    """One-token decode attention. q: (B,Hq,D); caches: (B,L,Hkv,D)."""
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg,
+                   k_cache.astype(jnp.float32)) * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(L)
+    ok = pos[None, :] < lengths[:, None]
+    if window > 0:
+        ok &= pos[None, :] > (lengths[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def dot_interaction_ref(feats):
+    """feats: (B, F, D) -> (B, F(F-1)/2) upper-triangle Gram entries."""
+    B, F, D = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats.astype(jnp.float32),
+                   feats.astype(jnp.float32))
+    iu, ju = np.triu_indices(F, k=1)
+    return z[:, iu, ju].astype(feats.dtype)
+
+
+def shed_partition_ref(keys, valid, cache_keys, cache_values,
+                       u_capacity, u_threshold, budget_dq
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle = trust_cache.lookup + shed_plan with explicit budget."""
+    from repro.core import trust_cache as TC
+    from repro.core.shedder import (TIER_CACHED, TIER_EVAL, TIER_INVALID,
+                                    TIER_PRIOR)
+    state = {"keys": cache_keys, "values": cache_values,
+             "age": jnp.zeros_like(cache_keys, jnp.int32),
+             "clock": jnp.zeros((), jnp.int32)}
+    vals, hit = TC.lookup(state, keys)
+    valid = valid.astype(bool)
+    hit = hit & valid
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - valid.astype(jnp.int32)
+    in_normal = valid & (pos < u_capacity)
+    tier = jnp.where(hit, TIER_CACHED, TIER_PRIOR)
+    tier = jnp.where(in_normal & ~hit, TIER_EVAL, tier)
+    dq = valid & ~in_normal & ~hit
+    d32 = dq.astype(jnp.int32)
+    rank = jnp.cumsum(d32) - d32
+    tier = jnp.where(dq & (rank < budget_dq), TIER_EVAL, tier)
+    tier = jnp.where(valid, tier, TIER_INVALID)
+    return tier.astype(jnp.int32), jnp.where(hit, vals, 0.0)

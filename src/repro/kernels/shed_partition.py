@@ -1,0 +1,135 @@
+"""Pallas TPU fused Trust-DB probe + load-shedding tier assignment.
+
+The paper's hot scheduling op (§5): for a stream of N candidate URLs,
+(1) probe the Trust DB cache, (2) split into Normal/Drop queues by arrival
+position vs Ucapacity, (3) grant drop-queue evaluation slots up to the
+deadline budget, (4) everything else falls to the average-trust prior.
+
+Kernel structure: grid over candidate blocks (arrival order). The cache
+(keys/values, set-associative) is VMEM-resident across all grid steps —
+at the production config (65536 x 4 x 8 B = 2 MB) it fits comfortably.
+Running counters (valid-so-far, drop-queue-evals-so-far) live in SMEM
+scratch and carry across the sequential grid, making the tier assignment
+an exact scan without host round-trips.
+
+Outputs per item: tier code, cached value. Matches
+``repro.core.shedder.shed_plan`` + ``trust_cache.lookup`` (the oracle in
+``ref.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.shedder import (TIER_CACHED, TIER_EVAL, TIER_INVALID,
+                                TIER_PRIOR)
+
+
+def _hash32(x):
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget_dq]
+                 keys_ref, valid_ref, ck_ref, cv_ref,
+                 tier_ref, cval_ref,
+                 cnt_scr, *, block_n: int, n_slots: int, n_ways: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_scr[0] = 0        # valid items so far
+        cnt_scr[1] = 0        # drop-queue eval candidates so far
+
+    ucap = params_ref[0]
+    budget_dq = params_ref[2]
+
+    keys = keys_ref[...]                                  # (bn,) uint32
+    valid = valid_ref[...] != 0
+
+    # --- Trust DB probe (set-associative, VMEM-resident) ---
+    slot = (_hash32(keys) % jnp.uint32(n_slots)).astype(jnp.int32)
+    hit = jnp.zeros((block_n,), jnp.bool_)
+    val = jnp.zeros((block_n,), jnp.float32)
+    for w in range(n_ways):                               # ways unrolled
+        ck = ck_ref[slot, w]                              # VMEM gather
+        cv = cv_ref[slot, w]
+        m = (ck == keys) & (keys != jnp.uint32(0))
+        val = jnp.where(m & ~hit, cv, val)
+        hit = hit | m
+    hit = hit & valid
+
+    # --- arrival position scan (exclusive running counts) ---
+    base_valid = cnt_scr[0]
+    v32 = valid.astype(jnp.int32)
+    pos = base_valid + jnp.cumsum(v32) - v32              # 0-based position
+    in_normal = valid & (pos < ucap)
+
+    tier = jnp.where(hit, TIER_CACHED, TIER_PRIOR)
+    tier = jnp.where(in_normal & ~hit, TIER_EVAL, tier)
+
+    dq_cand = valid & ~in_normal & ~hit
+    d32 = dq_cand.astype(jnp.int32)
+    base_dq = cnt_scr[1]
+    dq_rank = base_dq + jnp.cumsum(d32) - d32
+    tier = jnp.where(dq_cand & (dq_rank < budget_dq), TIER_EVAL, tier)
+    tier = jnp.where(valid, tier, TIER_INVALID)
+
+    cnt_scr[0] = base_valid + jnp.sum(v32)
+    cnt_scr[1] = base_dq + jnp.sum(d32)
+
+    tier_ref[...] = tier.astype(jnp.int32)
+    cval_ref[...] = jnp.where(hit, val, 0.0)
+
+
+def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
+                   cache_keys: jnp.ndarray, cache_values: jnp.ndarray,
+                   u_capacity, u_threshold, budget_dq, *,
+                   block_n: int = 1024, interpret: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """keys: (N,) uint32; valid: (N,) bool; cache_*: (slots, ways).
+
+    Returns (tier (N,) int32, cached_vals (N,) f32). ``budget_dq`` is the
+    drop-queue evaluation budget already derived from the effective
+    deadline (``core.shedder.shed_plan`` computes it identically).
+    """
+    n = keys.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_slots, n_ways = cache_keys.shape
+    params = jnp.asarray([u_capacity, u_threshold, budget_dq], jnp.int32)
+
+    kernel = functools.partial(_shed_kernel, block_n=block_n,
+                               n_slots=n_slots, n_ways=n_ways)
+    tier, cval = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n // block_n,),
+            in_specs=[
+                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
+                pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+            ],
+            scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(params, keys.astype(jnp.uint32), valid.astype(jnp.int32),
+      cache_keys, cache_values)
+    return tier, cval

@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes and record memory / cost / collective
+analyses for the roofline.
+
+MUST be invoked as a fresh process (``python -m repro.launch.dryrun``) —
+the XLA device-count flag above is set before any jax import.
+
+Usage:
+  python -m repro.launch.dryrun --mesh single            # 16x16 = 256
+  python -m repro.launch.dryrun --mesh multi             # 2x16x16 = 512
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all                    # both meshes
+
+Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.launch import hlo_analysis as HA
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: str, keep_hlo: bool = False,
+             variant: str = "") -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.devices.size
+    cell = ST.build_cell(arch_id, shape_name, mesh, variant=variant)
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "n_devices": int(n_dev), "kind": cell.shape.kind,
+           "loop_multiplier": cell.loop_multiplier,
+           "n_params": cell.meta["n_params"],
+           "n_active_params": cell.meta["n_active_params"],
+           "useful_flops_fwd": cell.meta.get("useful_flops_fwd", 0.0),
+           "tokens": cell.meta["tokens"], "ok": False}
+    try:
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(cell.step_fn,
+                             in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": HA.memory_stats(compiled),
+            "cost": HA.cost_stats(compiled),
+            "analysis": HA.analyze(hlo),
+        })
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print({k: v for k, v in (ca[0] if isinstance(ca, list)
+                                 else ca).items()
+               if k in ("flops", "bytes accessed")})
+        if keep_hlo:
+            with open(os.path.join(
+                    out_dir, f"{arch_id}__{shape_name}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # record the failure for triage
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        suffix = f"@{variant}" if variant else ""
+        path = os.path.join(out_dir,
+                            f"{arch_id}__{shape_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')})"
+    print(f"[{mesh_kind}] {arch_id} x {shape_name}{suffix}: {status} "
+          f"(lower {rec.get('lower_s', '-')}s, "
+          f"compile {rec.get('compile_s', '-')}s)", flush=True)
+    return rec
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", choices=["single", "multi"],
+                   default="single")
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true",
+                   help="run all cells on both meshes")
+    p.add_argument("--keep-hlo", action="store_true")
+    p.add_argument("--skip-done", action="store_true")
+    p.add_argument("--variant", default="",
+                   help="perf-iteration config variant (steps.VARIANTS)")
+    args = p.parse_args()
+
+    meshes = ["single", "multi"] if args.all else [args.mesh]
+    cells = ST.all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        out_dir = os.path.abspath(os.path.join(ART_DIR, mesh_kind))
+        os.makedirs(out_dir, exist_ok=True)
+        for arch_id, shape_name in cells:
+            path = os.path.join(out_dir, f"{arch_id}__{shape_name}.json")
+            if args.skip_done and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        continue
+            rec = run_cell(arch_id, shape_name, mesh_kind, out_dir,
+                           args.keep_hlo, variant=args.variant)
+            n_fail += 0 if rec["ok"] else 1
+    print(f"dry-run complete: {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,322 @@
+"""HLO analysis for the roofline, with while-loop (scan) accounting.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified: a
+length-10 scan of a matmul reports 1 matmul of FLOPs), so layer-scanned
+models would be undercounted ~n_layers-fold. This module parses the
+SPMD-partitioned optimized HLO instead:
+
+  * builds the computation call graph (while bodies weighted by trip
+    count parsed from the loop condition's compare constant; fusion /
+    call edges weighted 1),
+  * FLOPs   = 2 * numel(result) * contraction_size per ``dot``, scaled by
+    the computation's total execution multiplier (convolutions: none in
+    this framework),
+  * HBM bytes = Σ (operand + result buffer sizes) over *top-level*
+    instructions of executed computations — fusion-internal ops excluded
+    (their traffic is the fusion's I/O), bookkeeping ops skipped,
+  * collective bytes = result-buffer sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, same multipliers.
+
+These are estimators (documented in EXPERIMENTS.md §Roofline): fusion
+I/O over-approximates perfectly-reused VMEM traffic, and elementwise
+FLOPs are ignored (matmul-dominated workloads).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "u64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SKIP_BYTES_OPS = (
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "opt-barrier",
+    "partition-id", "replica-id", "iota",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_DOT_RE = re.compile(r"=\s*[a-z0-9]+\[([0-9,]*)\][^ ]*\s+dot\(")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(?:\([^=]*\)|"
+                    r"[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            total += _numel(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    """name -> instruction lines; also returns the entry computation."""
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            elif stripped and not stripped.startswith("//"):
+                comps[cur].append(stripped)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop bound = the largest s32 constant in the condition."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str
+                 ) -> Dict[str, float]:
+    """Total execution count per computation (call-graph walk)."""
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        return {c: 1.0 for c in comps}
+    mult[entry] = 1.0
+    # edges: (caller, callee, weight); fusion edges weight 1
+    order = [entry]
+    seen = {entry}
+    # BFS in call order; HLO call graphs are acyclic
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for line in comps[c]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for callee, w in ((cond, trips + 1), (body, trips)):
+                    if callee in comps:
+                        mult[callee] += mult[c] * w
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+                continue
+            for cm in _CALLS_RE.finditer(line):
+                callee = cm.group(1)
+                if callee in comps:
+                    mult[callee] += mult[c]
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+    return mult
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, str]:
+    """instruction name -> result shape text (optimized HLO omits operand
+    shapes at use sites, so shapes must come from definitions)."""
+    table: Dict[str, str] = {}
+    for line in lines:
+        nm = _NAME_RE.match(line)
+        if not nm:
+            continue
+        rhs = line.split("=", 1)[1]
+        # result shape = text before the op name token
+        table[nm.group(1)] = rhs.split(" ", 2)[1] if rhs.startswith(" ") \
+            else rhs.split(" ", 1)[0]
+    return table
+
+
+def _result_and_op(line: str) -> Tuple[str, str]:
+    """Returns (result shape text, op name) for an instruction line."""
+    rhs = line.split("=", 1)[1].strip()
+    # rhs like: "f32[16,3]{...} dot(...)" or "(f32[..], s32[..]) fusion(..)"
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return rhs[:i + 1], rhs[i + 1:].strip().split("(")[0].strip()
+        return rhs, ""
+    parts = rhs.split(" ", 1)
+    shape = parts[0]
+    op = parts[1].split("(")[0].strip() if len(parts) > 1 else ""
+    return shape, op
+
+
+def _operand_bytes(line: str, table: Dict[str, str]) -> int:
+    """Sum of operand buffer sizes (looked up from definitions)."""
+    if "(" not in line:
+        return 0
+    args = line.split("(", 1)[1]
+    # cut trailing attributes after the closing paren of the operand list
+    depth = 1
+    end = len(args)
+    for i, ch in enumerate(args):
+        depth += ch == "("
+        depth -= ch == ")"
+        if depth == 0:
+            end = i
+            break
+    total = 0
+    for name in _OPERAND_RE.findall(args[:end]):
+        shape = table.get(name)
+        if shape:
+            total += _shape_bytes(shape)
+    return total
+
+
+def _dot_flops(line: str, table: Dict[str, str]) -> int:
+    dm = _DOT_RE.search(line)
+    if not dm:
+        return 0
+    result_numel = _numel(dm.group(1))
+    lc = _LHS_CONTRACT_RE.search(line)
+    contract = 1
+    args = line.split(" dot(", 1)[1]
+    ops = _OPERAND_RE.findall(args)
+    if lc and ops:
+        lhs_shape = table.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            lhs_dims = sm.group(2).split(",") if sm.group(2) else []
+            for idx in (lc.group(1).split(",") if lc.group(1) else []):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= int(lhs_dims[i])
+    return 2 * result_numel * contract
+
+
+def _fusion_called(comps: Dict[str, List[str]]) -> set:
+    """Computations called from fusion instructions (bytes-excluded)."""
+    out = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                for cm in _CALLS_RE.finditer(line):
+                    out.add(cm.group(1))
+    return out
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    """Full analysis: flops, hbm bytes, collective bytes — loop-scaled,
+    per device."""
+    comps, entry = split_computations(hlo)
+    mult = _multipliers(comps, entry)
+    fusion_comps = _fusion_called(comps)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_comps
+        table = _symbol_table(lines)
+        for line in lines:
+            if "=" not in line:
+                continue
+            f = _dot_flops(line, table)
+            if f:
+                flops += f * m
+            result_shape, op = _result_and_op(line)
+            is_coll = None
+            for ck in _COLLECTIVES:
+                if op.startswith(ck):
+                    is_coll = ck
+                    break
+            if is_coll:
+                b = _shape_bytes(result_shape)
+                coll[is_coll] += b * m
+                coll_counts[is_coll] += 1
+                hbm_bytes += (b + _operand_bytes(line, table)) * m
+                continue
+            if in_fusion or not op or op in _SKIP_BYTES_OPS:
+                continue
+            name = _NAME_RE.match(line)
+            iname = name.group(1) if name else ""
+            if "convert" in iname and "bitcast" in iname:
+                # pure dtype-convert fusions: the CPU backend materializes
+                # f32 copies of bf16 dot operands; TPU MXU consumes bf16
+                # natively (convert fused into the dot) — charge nothing.
+                continue
+            if "dynamic-update-slice" in line:
+                # in-place update: traffic = the updated slice (read +
+                # write), not the whole aliased buffer. The slice size is
+                # the sum of non-aliased operands.
+                ops_b = []
+                args = line.split("(", 1)[1]
+                for nm in _OPERAND_RE.findall(args.split(")", 1)[0]):
+                    if nm in table:
+                        ops_b.append(_shape_bytes(table[nm]))
+                if ops_b:
+                    slice_b = sum(ops_b) - max(ops_b)
+                    hbm_bytes += 2 * slice_b * m
+                continue
+            hbm_bytes += (_shape_bytes(result_shape)
+                          + _operand_bytes(line, table)) * m
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+        "collective_counts": coll_counts,
+        "n_computations": len(comps),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(getattr(m, "argument_size_in_bytes", 0)),
+        "output_bytes": float(getattr(m, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(m, "temp_size_in_bytes", 0)),
+        "alias_bytes": float(getattr(m, "alias_size_in_bytes", 0)),
+        "generated_code_bytes": float(
+            getattr(m, "generated_code_size_in_bytes", 0)),
+    }
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    """XLA's own numbers (loop bodies counted once — kept as the lower
+    bound / cross-check; ``analyze`` provides the loop-scaled values)."""
+    c = compiled.cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    return {"flops": float(c.get("flops", 0.0)),
+            "bytes_accessed": float(c.get("bytes accessed", 0.0))}

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): single pod = (data=16, model=16) = 256 chips;
+multi-pod = (pod=2, data=16, model=16) = 512 chips. The dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import to materialize placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever local devices exist (tests/smoke)."""
+    import jax
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_from_devices(devices: Sequence, shape: Tuple[int, ...],
+                      axes: Tuple[str, ...]):
+    from jax.sharding import Mesh
+    arr = np.asarray(devices).reshape(shape)
+    return Mesh(arr, axes)

@@ -1,0 +1,86 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Boots a ServingEngine with the chosen trust-evaluator backbone, calibrates
+Ucapacity/Uthreshold to the measured evaluator throughput (the Load
+Monitor's job, §4), and serves a synthetic request stream — printing
+per-request regime/tier decisions and the SLO scoreboard. ``--adaptive``
+enables the §7 adaptive Very-Heavy controller.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="smollm-135m")
+    p.add_argument("--n-requests", type=int, default=10)
+    p.add_argument("--deadline-ms", type=float, default=50.0)
+    p.add_argument("--overload-deadline-ms", type=float, default=100.0)
+    p.add_argument("--adaptive", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    import jax.numpy as jnp
+    from repro.configs.base import TrustIRConfig
+    from repro.core.adaptive import AdaptiveWeightController
+    from repro.serving.engine import ServingEngine
+    from repro.serving.evaluators import make_evaluator
+
+    ev, mk = make_evaluator(args.arch, smoke=True)
+
+    def evaluate(chunk):
+        return np.asarray(ev({k: jnp.asarray(v)
+                              for k, v in chunk.items()}))
+
+    feats64 = mk(64)
+    evaluate(feats64)
+    t0 = time.perf_counter()
+    evaluate(feats64)
+    rate = 64 / max(time.perf_counter() - t0, 1e-6)
+    dl = args.deadline_ms / 1e3
+    odl = args.overload_deadline_ms / 1e3
+    cfg = TrustIRConfig(u_capacity=max(int(rate * dl), 16),
+                        u_threshold=max(int(rate * (odl - dl)), 8),
+                        deadline_s=dl, overload_deadline_s=odl,
+                        chunk_size=64)
+    print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
+          f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
+          f"(overload {odl * 1e3:.0f}ms)"
+          + (" [adaptive]" if args.adaptive else ""))
+
+    eng = ServingEngine(cfg, evaluate)
+    if args.adaptive:
+        eng.shedder.adaptive = AdaptiveWeightController()
+
+    r = np.random.default_rng(args.seed)
+    sizes = np.clip(r.zipf(1.4, size=args.n_requests) * 64, 64, 4096)
+    for n in sorted(set(int(s) for s in sizes)):   # warm jit per size
+        eng.shedder.process(np.arange(10**6, 10**6 + n, dtype=np.uint32),
+                            np.zeros(n, np.int32), mk(n, fseed=999))
+    eng.completed.clear()
+
+    for i, n in enumerate(int(s) for s in sizes):
+        resp = eng.submit(
+            np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
+                      dtype=np.uint32),
+            r.integers(0, 64, n).astype(np.int32), mk(n, fseed=i),
+            slo_s=odl * 2.5)
+        s = resp.shed
+        print(f"  req {i:>3} n={n:<5} {s.regime.name:<11} "
+              f"{resp.latency_s * 1e3:7.1f} ms  eval {s.n_evaluated:>5} "
+              f"cached {s.n_cached:>5} prior {s.n_prior:>5} "
+              f"{'SLO ok' if resp.met_slo else 'SLO MISS'}")
+    board = eng.slo_stats()
+    print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
+          f"{board['p99_s'] * 1e3:.1f} ms  SLO met "
+          f"{100 * board['slo_met_frac']:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

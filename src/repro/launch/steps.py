@@ -1,0 +1,491 @@
+"""Per-(arch × shape) step builders for the multi-pod dry-run.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a ``Cell`` carrying:
+  * ``step_fn``        — the function to lower (train/prefill/serve step),
+  * ``abstract_args``  — ShapeDtypeStruct pytrees for every input
+                         (``input_specs()`` — no device allocation),
+  * ``in_shardings`` / ``out_shardings`` — PartitionSpec pytrees,
+  * ``donate_argnums`` — buffers reused in-place (state / KV cache),
+  * ``loop_multiplier``— scan trip count (collectives inside the layer
+                         scan execute once per layer; the roofline
+                         multiplies body-collectives by this),
+  * ``meta``           — model/active params, token counts for §Roofline.
+
+Shape kinds map to steps exactly as assigned: ``train`` -> train_step
+(fwd+bwd+AdamW), ``prefill`` -> prefill scoring, ``decode`` -> serve_step
+(one token against a KV cache), recsys ``serve``/``retrieval`` ->
+forward scoring, graph kinds -> their train steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_bundle
+from repro.configs.base import (GNNConfig, RecsysConfig, ShapeSpec,
+                                TransformerConfig, reduced)
+from repro.distribution import sharding as SH
+from repro.training import optimizer as O
+from repro.training import train_loop as TL
+
+OPT_CFG = O.AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+# per-shape GNN dataset parameters (classes follow the public datasets)
+GNN_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 41,
+               "ogb_products": 47, "molecule": 2}
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeSpec
+    step_fn: Callable
+    abstract_args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    loop_multiplier: int
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract_params(init_fn) -> Any:
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+def _abstract_state(params_shape) -> TL.TrainState:
+    opt_shape = jax.eval_shape(O.adamw_init, params_shape)
+    return TL.TrainState(params=params_shape, opt=opt_shape, ef=None)
+
+
+def _state_specs(cfg, params_shape, mesh) -> TL.TrainState:
+    pspec = SH.param_specs(cfg, params_shape, mesh)
+    return TL.TrainState(params=pspec,
+                         opt=O.AdamWState(step=P(), m=pspec, v=pspec),
+                         ef=None)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(cfg: TransformerConfig, shape: ShapeSpec, mesh: Mesh,
+             arch_id: str) -> Cell:
+    from repro.models import transformer as T
+    dp = SH.dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    params_shape = _abstract_params(partial(T.init_params, cfg=cfg))
+    pspec = SH.param_specs(cfg, params_shape, mesh)
+    tokens_per_step = shape.global_batch * max(shape.seq_len, 1)
+    if shape.kind == "decode":
+        tokens_per_step = shape.global_batch      # one new token per row
+    meta = {"family": "lm", "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+            "tokens": tokens_per_step, "cfg": cfg,
+            # 2·N_active·D (fwd); train cells x3 in the roofline
+            "useful_flops_fwd": 2.0 * cfg.n_active_params()
+            * tokens_per_step}
+
+    if shape.kind == "train":
+        B, S = shape.global_batch, shape.seq_len
+
+        def loss_fn(p, batch):
+            # q_chunk 1024: online-softmax attention amortizes its
+            # (C, D) carry updates over larger KV blocks (256 was worse:
+            # §Perf iter "online-softmax", train variant)
+            return T.lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                             batch["mask"], q_chunk=1024, loss_chunk=512)
+
+        step = TL.make_train_step(loss_fn, OPT_CFG, jit=False)
+        state_shape = _abstract_state(params_shape)
+        batch_shape = {"tokens": _sds((B, S), jnp.int32),
+                       "labels": _sds((B, S), jnp.int32),
+                       "mask": _sds((B, S), jnp.float32)}
+        state_spec = _state_specs(cfg, params_shape, mesh)
+        batch_spec = SH.lm_batch_specs(shape, mesh)
+        # out: (state, metrics) — metrics replicated scalars
+        metrics_spec = None
+        return Cell(arch_id, shape, step, (state_shape, batch_shape),
+                    (state_spec, batch_spec), (state_spec, metrics_spec),
+                    donate_argnums=(0,),
+                    loop_multiplier=cfg.n_layers, meta=meta)
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+
+        def prefill_step(p, tokens):
+            # q_chunk 2048: shrinking to 512 was REFUTED (§Perf iter
+            # "prefill-chunk" — more simultaneous chunk buffers, memory
+            # term 10.7 -> 13.0 s); the (C, T) f32 score blocks are an
+            # XLA-path artifact the Pallas flash kernel removes on TPU
+            return T.prefill(p, cfg, tokens, q_chunk=2048)
+
+        batch_spec = SH.lm_batch_specs(shape, mesh)
+        cache_spec = {"k": P(None, dp, "model", None, None),
+                      "v": P(None, dp, "model", None, None),
+                      "lengths": P(dp)}
+        return Cell(arch_id, shape, prefill_step,
+                    (params_shape, _sds((B, S), jnp.int32)),
+                    (pspec, batch_spec["tokens"]),
+                    (P(dp), cache_spec),
+                    donate_argnums=(),
+                    loop_multiplier=cfg.n_layers, meta=meta)
+
+    if shape.kind == "decode":
+        B, L = shape.global_batch, shape.seq_len
+        cdt = {"bfloat16": jnp.bfloat16,
+               "float32": jnp.float32}[cfg.dtype]
+        cache_shape = {
+            "k": _sds((cfg.n_layers, B, L, cfg.n_kv_heads, cfg.d_head),
+                      cdt),
+            "v": _sds((cfg.n_layers, B, L, cfg.n_kv_heads, cfg.d_head),
+                      cdt),
+            "lengths": _sds((B,), jnp.int32),
+        }
+
+        def decode(p, token, cache):
+            return T.decode_step(p, cfg, token, cache)
+
+        specs = SH.lm_batch_specs(shape, mesh)
+        # logits (B, V): batch over dp (if batched), vocab over model
+        logits_spec = (P(dp, "model") if shape.global_batch > 1
+                       else P(None, "model"))
+        return Cell(arch_id, shape, decode,
+                    (params_shape, _sds((B,), jnp.int32), cache_shape),
+                    (pspec, specs["token"], specs["cache"]),
+                    (logits_spec, specs["cache"]),
+                    donate_argnums=(2,),
+                    loop_multiplier=cfg.n_layers, meta=meta)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_loss(cfg: RecsysConfig):
+    if cfg.model == "dlrm":
+        from repro.models.recsys import dlrm as M
+    elif cfg.model == "bst":
+        from repro.models.recsys import bst as M
+    elif cfg.model == "two_tower":
+        from repro.models.recsys import two_tower as M
+    elif cfg.model == "mind":
+        from repro.models.recsys import mind as M
+    else:
+        raise ValueError(cfg.model)
+    return M
+
+
+def _recsys_batch_shapes(cfg: RecsysConfig, n: int, train: bool) -> Dict:
+    i32, f32 = jnp.int32, jnp.float32
+    if cfg.model == "dlrm":
+        b = {"dense": _sds((n, cfg.n_dense), f32),
+             "sparse": _sds((n, len(cfg.tables)), i32)}
+        if train:
+            b["labels"] = _sds((n,), f32)
+    elif cfg.model == "bst":
+        b = {"hist": _sds((n, cfg.seq_len), i32),
+             "target": _sds((n,), i32),
+             "other": _sds((n, len(cfg.tables) - 1), i32)}
+        if train:
+            b["labels"] = _sds((n,), f32)
+    elif cfg.model == "two_tower":
+        b = {"user_id": _sds((n,), i32), "user_feats": _sds((n, 8), i32),
+             "item_id": _sds((n,), i32), "item_feats": _sds((n, 8), i32)}
+        if train:
+            b["logq"] = _sds((n,), f32)
+    elif cfg.model == "mind":
+        b = {"hist": _sds((n, cfg.hist_len), i32),
+             "hist_mask": _sds((n, cfg.hist_len), f32),
+             "target": _sds((n,), i32)}
+    else:
+        raise ValueError(cfg.model)
+    return b
+
+
+def _recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh,
+                 arch_id: str) -> Cell:
+    M = _recsys_loss(cfg)
+    dp = SH.dp_axes(mesh)
+    params_shape = _abstract_params(partial(M.init_params, cfg=cfg))
+    pspec = SH.param_specs(cfg, params_shape, mesh)
+    items = shape.batch or shape.n_candidates
+    # dense (non-table) params drive per-item compute; each item also
+    # reads ~n_fields embedding rows
+    table_params = sum(t.vocab * t.dim * t.count for t in cfg.tables)
+    dense_params = cfg.n_params() - table_params
+    emb_reads = sum(t.dim for t in cfg.tables)
+    meta = {"family": "recsys", "n_params": cfg.n_params(),
+            "n_active_params": dense_params + emb_reads, "cfg": cfg,
+            "tokens": items,
+            "useful_flops_fwd": 2.0 * (dense_params + emb_reads) * items}
+
+    if shape.kind == "train":
+        def loss_fn(p, batch):
+            return M.loss_fn(p, cfg, batch)
+
+        step = TL.make_train_step(loss_fn, OPT_CFG, jit=False)
+        state_shape = _abstract_state(params_shape)
+        state_spec = _state_specs(cfg, params_shape, mesh)
+        batch_shape = _recsys_batch_shapes(cfg, shape.batch, train=True)
+        batch_spec = SH.recsys_batch_specs(cfg, shape, mesh)
+        return Cell(arch_id, shape, step, (state_shape, batch_shape),
+                    (state_spec, batch_spec), (state_spec, None),
+                    donate_argnums=(0,), loop_multiplier=1, meta=meta)
+
+    if shape.kind == "serve":
+        n = shape.batch
+        batch_shape = _recsys_batch_shapes(cfg, n, train=False)
+        batch_spec = SH.recsys_batch_specs(cfg, shape, mesh)
+
+        if cfg.model == "dlrm":
+            def serve(p, b):
+                return M.relevance_scores(p, cfg, b["dense"], b["sparse"])
+        elif cfg.model == "bst":
+            def serve(p, b):
+                return M.relevance_scores(p, cfg, b["hist"], b["target"],
+                                          b["other"])
+        elif cfg.model == "two_tower":
+            def serve(p, b):
+                u = M.user_embed(p, cfg, b["user_id"], b["user_feats"])
+                i = M.item_embed(p, cfg, b["item_id"], b["item_feats"])
+                return jnp.sum(u * i, axis=-1)
+        else:  # mind
+            def serve(p, b):
+                return M.relevance_scores(p, cfg, b["hist"],
+                                          b["hist_mask"], b["target"])
+        return Cell(arch_id, shape, serve, (params_shape, batch_shape),
+                    (pspec, batch_spec), P(dp),
+                    donate_argnums=(), loop_multiplier=1, meta=meta)
+
+    if shape.kind == "retrieval":
+        N = shape.n_candidates
+        i32, f32 = jnp.int32, jnp.float32
+        if cfg.model == "two_tower":
+            args_shape = {
+                "query": {"user_id": _sds((1,), i32),
+                          "user_feats": _sds((1, 8), i32)},
+                "cand_item_id": _sds((N,), i32),
+                "cand_item_feats": _sds((N, 8), i32)}
+
+            def retr(p, a):
+                return M.retrieval_scores(p, cfg, a["query"],
+                                          a["cand_item_id"],
+                                          a["cand_item_feats"])[0]
+        elif cfg.model == "mind":
+            args_shape = {
+                "query": {"hist": _sds((1, cfg.hist_len), i32),
+                          "hist_mask": _sds((1, cfg.hist_len), f32)},
+                "cand_item_id": _sds((N,), i32)}
+
+            def retr(p, a):
+                from repro.models.recsys import embedding as E
+                v = M.user_interests(p, cfg, a["query"]["hist"],
+                                     a["query"]["hist_mask"])   # (1,K,d)
+                t = E.lookup(p["tables"]["item"], a["cand_item_id"],
+                             v.dtype)                            # (N,d)
+                s = jnp.einsum("kd,nd->nk", v[0], t)
+                return jnp.max(s.astype(jnp.float32), axis=-1)
+        elif cfg.model == "dlrm":
+            args_shape = {
+                "query": {"dense": _sds((1, cfg.n_dense), f32),
+                          "user_sparse": _sds((1, 13), i32)},
+                "cand_sparse": _sds((N, 13), i32)}
+
+            def retr(p, a):
+                dense = jnp.broadcast_to(a["query"]["dense"],
+                                         (N, cfg.n_dense))
+                user = jnp.broadcast_to(a["query"]["user_sparse"],
+                                        (N, 13))
+                sparse = jnp.concatenate([user, a["cand_sparse"]], axis=1)
+                return M.forward(p, cfg, dense, sparse)
+        else:  # bst
+            args_shape = {
+                "query": {"hist": _sds((1, cfg.seq_len), i32),
+                          "other": _sds((1, len(cfg.tables) - 1), i32)},
+                "cand_item_id": _sds((N,), i32)}
+
+            def retr(p, a):
+                hist = jnp.broadcast_to(a["query"]["hist"],
+                                        (N, cfg.seq_len))
+                other = jnp.broadcast_to(a["query"]["other"],
+                                         (N, len(cfg.tables) - 1))
+                return M.forward(p, cfg, hist, a["cand_item_id"], other)
+
+        def spec_like(tree):
+            return jax.tree.map(
+                lambda s: P() if s.shape[0] == 1 else
+                (P(dp) if s.ndim == 1 else P(dp, None)), tree)
+
+        args_spec = spec_like(args_shape)
+        return Cell(arch_id, shape, retr, (params_shape, args_shape),
+                    (pspec, args_spec), P(dp),
+                    donate_argnums=(), loop_multiplier=1, meta=meta)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(cfg0: GNNConfig, shape: ShapeSpec, mesh: Mesh,
+              arch_id: str) -> Cell:
+    from repro.models import gnn as G
+    dp = SH.dp_axes(mesh)
+    cfg = reduced(cfg0, d_feat=shape.d_feat or cfg0.d_feat,
+                  n_classes=GNN_CLASSES.get(shape.name, cfg0.n_classes),
+                  dropout=0.0)
+    params_shape = _abstract_params(partial(G.init_params, cfg=cfg))
+    pspec = SH.param_specs(cfg, params_shape, mesh)
+    # GCN fwd flops: per layer 2·N·d_in·d_out (matmul) + ~3·E·d_in
+    # (message scale + scatter-add)
+    n_nodes = shape.n_nodes * (shape.batch or 1) \
+        if shape.kind == "graph_batched" else shape.n_nodes
+    n_edges = shape.n_edges * (shape.batch or 1) \
+        if shape.kind == "graph_batched" else shape.n_edges
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) \
+        + [GNN_CLASSES.get(shape.name, cfg.n_classes)]
+    gnn_fwd = sum(2.0 * n_nodes * dims[i] * dims[i + 1]
+                  + 3.0 * n_edges * dims[i]
+                  for i in range(len(dims) - 1))
+    meta = {"family": "gnn", "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_params(), "cfg": cfg,
+            "tokens": n_nodes, "useful_flops_fwd": gnn_fwd}
+    i32, f32 = jnp.int32, jnp.float32
+    state_shape = _abstract_state(params_shape)
+    state_spec = _state_specs(cfg, params_shape, mesh)
+    batch_spec = SH.gnn_batch_specs(shape, mesh)
+
+    if shape.kind == "graph_full":
+        # pad N/E so (pod, data) sharding divides evenly; padded edges are
+        # masked, padded nodes carry zero label weight
+        def pad512(n):
+            return ((n + 511) // 512) * 512
+        N = shape.n_nodes if shape.name == "full_graph_sm" \
+            else pad512(shape.n_nodes)
+        E = shape.n_edges if shape.name == "full_graph_sm" \
+            else pad512(shape.n_edges)
+
+        def loss_fn(p, b):
+            return G.node_loss(p, cfg, b["x"], b["edge_index"],
+                               b["labels"], b["label_mask"],
+                               edge_mask=b.get("edge_mask"))
+
+        step = TL.make_train_step(loss_fn, OPT_CFG, jit=False)
+        batch_shape = {"x": _sds((N, cfg.d_feat), f32),
+                       "edge_index": _sds((2, E), i32),
+                       "labels": _sds((N,), i32),
+                       "label_mask": _sds((N,), f32)}
+        bspec = dict(batch_spec)
+        if shape.name != "full_graph_sm":
+            batch_shape["edge_mask"] = _sds((E,), f32)
+            bspec["edge_mask"] = P(dp)
+        return Cell(arch_id, shape, step, (state_shape, batch_shape),
+                    (state_spec, bspec), (state_spec, None),
+                    donate_argnums=(0,), loop_multiplier=1, meta=meta)
+
+    if shape.kind == "graph_minibatch":
+        sizes = [shape.batch_nodes]
+        for f in shape.fanout:
+            sizes.append(sizes[-1] * f)
+        n_sub = sum(sizes)
+        n_edges = sum(sizes[1:])
+        meta = dict(meta, tokens=n_sub)
+
+        def loss_fn(p, b):
+            return G.node_loss(p, cfg, b["x"], b["edge_index"],
+                               b["labels"], b["label_mask"],
+                               edge_mask=b["edge_mask"])
+
+        step = TL.make_train_step(loss_fn, OPT_CFG, jit=False)
+        batch_shape = {"x": _sds((n_sub, cfg.d_feat), f32),
+                       "edge_index": _sds((2, n_edges), i32),
+                       "edge_mask": _sds((n_edges,), f32),
+                       "labels": _sds((n_sub,), i32),
+                       "label_mask": _sds((n_sub,), f32)}
+        return Cell(arch_id, shape, step, (state_shape, batch_shape),
+                    (state_spec, batch_spec), (state_spec, None),
+                    donate_argnums=(0,), loop_multiplier=1, meta=meta)
+
+    if shape.kind == "graph_batched":
+        NG = shape.batch
+        N = NG * shape.nodes_per_graph
+        E = NG * shape.edges_per_graph
+        meta = dict(meta, tokens=N)
+
+        def loss_fn(p, b):
+            return G.graph_readout_loss(p, cfg, b["x"], b["edge_index"],
+                                        b["graph_ids"], NG, b["labels"])
+
+        step = TL.make_train_step(loss_fn, OPT_CFG, jit=False)
+        batch_shape = {"x": _sds((N, cfg.d_feat), f32),
+                       "edge_index": _sds((2, E), i32),
+                       "graph_ids": _sds((N,), i32),
+                       "labels": _sds((NG,), i32)}
+        bspec = dict(batch_spec)
+        bspec["labels"] = P(dp)
+        return Cell(arch_id, shape, step, (state_shape, batch_shape),
+                    (state_spec, bspec), (state_spec, None),
+                    donate_argnums=(0,), loop_multiplier=1, meta=meta)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+# Perf-iteration variants (§Perf hillclimb): config transforms applied on
+# top of the registry config; the dry-run records them under
+# ``<arch>__<shape>@<variant>.json``.
+VARIANTS = {
+    "ep_moe": lambda cfg: dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="ep_shard_map")),
+    # paper-faithful-era baseline (pre-§Perf): global sort/scatter MoE
+    "base_moe": lambda cfg: dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="dense_scatter")),
+}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               variant: str = "") -> Cell:
+    bundle = get_bundle(arch_id)
+    shape = next(s for s in bundle.shapes if s.name == shape_name)
+    cfg = bundle.config
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+    if isinstance(cfg, TransformerConfig):
+        return _lm_cell(cfg, shape, mesh, arch_id)
+    if isinstance(cfg, RecsysConfig):
+        return _recsys_cell(cfg, shape, mesh, arch_id)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(cfg, shape, mesh, arch_id)
+    raise TypeError(type(cfg))
+
+
+def input_specs(arch_id: str, shape_name: str, mesh: Mesh) -> Tuple:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    return build_cell(arch_id, shape_name, mesh).abstract_args
+
+
+def all_cells() -> list:
+    """The full 40-cell (arch × shape) matrix."""
+    from repro.configs import arch_ids
+    out = []
+    for a in arch_ids():
+        for s in get_bundle(a).shapes:
+            out.append((a, s.name))
+    return out

@@ -1,0 +1,184 @@
+"""GQA attention: chunked (flash-style) prefill/train + KV-cache decode.
+
+All shapes are ``(batch, seq, heads, d_head)``. Grouped-query attention is
+computed with the KV-head grouping kept explicit (no KV repeat), so TP
+sharding over heads stays clean.
+
+Prefill/train uses a q-chunked online computation (scan over query blocks)
+— the jnp analogue of the Pallas flash kernel in ``repro.kernels`` — so the
+(S, S) score matrix is never materialized for long sequences. Decode
+computes one token against the cache; with the cache sequence-sharded
+(SP), XLA partitions the softmax reductions with psums (flash-decoding
+combine).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B, Sq, Hkv, G, D); k: (B, Skv, Hkv, D) -> (B, Hkv, G, Sq, Skv)."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _mask_ok(q_pos, k_pos, causal: bool, window):
+    """Boolean visibility mask (Sq, Skv)."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    window = jnp.asarray(window)
+    ok &= (window <= 0) | (k_pos[None, :] > q_pos[:, None] - window)
+    return ok
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window):
+    """Additive mask bias (Sq, Skv) in fp32.
+
+    ``window`` may be a Python int or a traced scalar (layers scanned with
+    per-layer window values pass an int32 array element); window <= 0
+    disables the sliding-window constraint.
+    """
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    window = jnp.asarray(window)
+    win_ok = (window <= 0) | (k_pos[None, :] > q_pos[:, None] - window)
+    ok &= win_ok
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window=0, softcap: float = 0.0,
+              scale: Optional[float] = None,
+              q_chunk: int = 1024) -> jnp.ndarray:
+    """Full (prefill/train) attention.
+
+    q: (B, S, Hq, D); k, v: (B, S, Hkv, D). Returns (B, S, Hq, D).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+
+    # Online-softmax (flash) formulation in pure jnp — the exact jnp
+    # analogue of the Pallas kernel: each q chunk scans its causal KV
+    # prefix in (C, C) blocks carrying (max, denom, acc); only O(C^2)
+    # lives at once, the backward replays blocks sequentially under the
+    # chunk-level remat, and chunk i scans exactly i+1 blocks (static) so
+    # causal skipping costs nothing (§Perf iters "causal-skip" +
+    # "online-softmax").
+    @partial(jax.checkpoint, static_argnums=(3, 4))
+    def chunk_fn(q_blk, k_full, v_full, lo, kv_hi):
+        C = q_blk.shape[1]
+        q_pos = jnp.arange(lo, lo + C)
+        n_blk = kv_hi // C
+        kb = k_full[:, :kv_hi].reshape(B, n_blk, C, Hkv, D)
+        vb = v_full[:, :kv_hi].reshape(B, n_blk, C, Hkv, D)
+
+        def kv_step(carry, xs):
+            m_p, l_p, acc = carry
+            k_blk, v_blk, k0 = xs
+            s = _gqa_scores(q_blk, k_blk, scale)      # (B,H,G,C,Ck) f32
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            k_pos = k0 + jnp.arange(C)
+            ok = _mask_ok(q_pos, k_pos, causal, window)[None, None, None]
+            s = jnp.where(ok, s, NEG_INF)
+            m_c = jnp.max(s, axis=-1, keepdims=True)
+            m_n = jnp.maximum(m_p, m_c)
+            # ok-gating guards fully-masked blocks (m_n still NEG_INF:
+            # exp(0) would otherwise leak weight 1 per masked entry)
+            p = jnp.exp(s - m_n) * ok
+            corr = jnp.exp(jnp.minimum(m_p - m_n, 0.0))
+            l_n = l_p * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * corr[..., 0, None] + jnp.einsum(
+                "bhgst,bthd->bhgsd", p.astype(v_blk.dtype),
+                v_blk).astype(jnp.float32)
+            return (m_n, l_n, acc), None
+
+        shape5 = (B, Hkv, G, C, 1)
+        init = (jnp.full(shape5, NEG_INF, jnp.float32),
+                jnp.zeros(shape5, jnp.float32),
+                jnp.zeros((B, Hkv, G, C, D), jnp.float32))
+        if n_blk == 1:
+            (m, l, acc), _ = kv_step(init, (kb[:, 0], vb[:, 0],
+                                            jnp.int32(0)))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, init,
+                (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                 jnp.arange(n_blk, dtype=jnp.int32) * C))
+        safe_l = jnp.where(l > 0, l, 1.0)
+        out = (acc / safe_l[..., 0, None]).astype(q_blk.dtype)
+        return jnp.moveaxis(out, 3, 1)                # (B,C,Hkv,G,D)
+
+    if S <= q_chunk:
+        out = chunk_fn(qg, k, v, 0, S)
+    else:
+        assert S % q_chunk == 0, (S, q_chunk)
+        n_chunks = S // q_chunk
+        outs = []
+        for i in range(n_chunks):
+            lo, hi = i * q_chunk, (i + 1) * q_chunk
+            kv_hi = hi if causal else S
+            outs.append(chunk_fn(qg[:, lo:hi], k, v, lo, kv_hi))
+        out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, S, Hq, D)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                     window=0, softcap: float = 0.0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention against a KV cache.
+
+    q: (B, Hq, D); k_cache, v_cache: (B, L, Hkv, D); lengths: (B,) int32 —
+    the number of valid cache positions *including* the new token (i.e. the
+    new token was already written at index lengths-1). Returns (B, Hq, D).
+    """
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(L)
+    ok = pos[None, :] < lengths[:, None]                   # (B, L)
+    window = jnp.asarray(window)
+    win_ok = ((window <= 0)
+              | (pos[None, :] > (lengths[:, None] - 1 - window)))
+    ok &= win_ok
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache)
+    return out.reshape(B, Hq, D)
+
+
+def update_kv_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    write_pos: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one new (k, v) per sequence at per-row positions.
+
+    k_cache: (B, L, Hkv, D); k_new: (B, Hkv, D); write_pos: (B,) int32.
+    """
+    B = k_cache.shape[0]
+    rows = jnp.arange(B)
+    k_cache = k_cache.at[rows, write_pos].set(k_new.astype(k_cache.dtype),
+                                              mode="drop")
+    v_cache = v_cache.at[rows, write_pos].set(v_new.astype(v_cache.dtype),
+                                              mode="drop")
+    return k_cache, v_cache

@@ -1,0 +1,124 @@
+"""GCN message passing via ``jax.ops.segment_sum`` over an edge index.
+
+JAX sparse is BCOO-only, so message passing is implemented as the
+gather → edge-message → scatter (segment_sum) pattern — this IS the
+system's SpMM. Supports:
+  - full-batch training (cora, ogb_products),
+  - sampled minibatch training (padded 2-hop neighborhoods + real
+    host-side neighbor sampler in ``repro.training.data``),
+  - batched small graphs (molecule) via graph-id segment readout.
+
+In TrustServe the GCN doubles as the trust-propagation evaluator
+(TrustRank-style smoothing over the web link graph): node logits are
+squashed to [0, trust_scale] trust scores (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models import layers as L
+
+
+def init_params(key, cfg: GNNConfig) -> Dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    dims = ([cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1)
+            + [cfg.n_classes])
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"layers": [L.dense_init(k, dims[i], dims[i + 1], bias=True,
+                                    dtype=dt)
+                       for i, k in enumerate(keys)]}
+
+
+def _degree(edge_index: jnp.ndarray, n_nodes: int,
+            edge_mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    ones = jnp.ones((edge_index.shape[1],), jnp.float32)
+    if edge_mask is not None:
+        ones = ones * edge_mask
+    # +1 accounts for the self loop added in propagate()
+    return jax.ops.segment_sum(ones, edge_index[1], n_nodes) + 1.0
+
+
+def propagate(x: jnp.ndarray, edge_index: jnp.ndarray, *,
+              norm: str = "sym", aggregator: str = "mean",
+              edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One round of Ã·X message passing with self loops.
+
+    x: (N, F); edge_index: (2, E) int32 rows (src, dst). ``edge_mask``
+    zeroes padded edges (minibatch shapes).
+    """
+    n = x.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    deg = _degree(edge_index, n, edge_mask)
+    if norm == "sym":
+        coef = jax.lax.rsqrt(deg[src]) * jax.lax.rsqrt(deg[dst])
+        self_coef = 1.0 / deg
+    elif norm == "rw":
+        coef = 1.0 / deg[dst]
+        self_coef = 1.0 / deg
+    else:
+        coef = jnp.ones_like(deg[src])
+        self_coef = jnp.ones((n,), jnp.float32)
+    if edge_mask is not None:
+        coef = coef * edge_mask
+    msgs = x[src] * coef[:, None].astype(x.dtype)
+    if aggregator == "max":
+        agg = jax.ops.segment_max(jnp.where(edge_mask[:, None] > 0, msgs,
+                                            -jnp.inf)
+                                  if edge_mask is not None else msgs,
+                                  dst, n)
+        agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+    else:  # mean/sum are both expressed through the norm coefficient
+        agg = jax.ops.segment_sum(msgs, dst, n)
+    return agg + x * self_coef[:, None].astype(x.dtype)
+
+
+def forward(params: Dict, cfg: GNNConfig, x: jnp.ndarray,
+            edge_index: jnp.ndarray,
+            edge_mask: Optional[jnp.ndarray] = None,
+            dropout_rng=None) -> jnp.ndarray:
+    """Node logits (N, n_classes)."""
+    cdt = L.dtype_of(cfg.dtype)
+    h = x.astype(cdt)
+    n_layers = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        h = propagate(h, edge_index, norm=cfg.norm,
+                      aggregator=cfg.aggregator, edge_mask=edge_mask)
+        h = L.dense_apply(lp, h, cdt)
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+            if cfg.dropout > 0 and dropout_rng is not None:
+                keep = jax.random.bernoulli(dropout_rng, 1 - cfg.dropout,
+                                            h.shape)
+                h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
+    return h
+
+
+def node_loss(params: Dict, cfg: GNNConfig, x, edge_index, labels,
+              label_mask, edge_mask=None, dropout_rng=None) -> jnp.ndarray:
+    logits = forward(params, cfg, x, edge_index, edge_mask, dropout_rng)
+    return L.cross_entropy(logits, labels, label_mask)
+
+
+def graph_readout_loss(params: Dict, cfg: GNNConfig, x, edge_index,
+                       graph_ids, n_graphs: int, labels,
+                       edge_mask=None) -> jnp.ndarray:
+    """Batched small graphs: mean-pool node logits per graph, CE loss."""
+    logits = forward(params, cfg, x, edge_index, edge_mask)
+    pooled = jax.ops.segment_sum(logits, graph_ids, n_graphs)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), logits.dtype),
+                                 graph_ids, n_graphs)
+    pooled = pooled / jnp.maximum(counts, 1.0)[:, None]
+    return L.cross_entropy(pooled, labels)
+
+
+def trust_scores(params: Dict, cfg: GNNConfig, x, edge_index,
+                 trust_scale: float = 5.0,
+                 edge_mask=None) -> jnp.ndarray:
+    """Trust-propagation head: squash max-class logit to [0, scale]."""
+    logits = forward(params, cfg, x, edge_index, edge_mask)
+    conf = jax.nn.sigmoid(jnp.max(logits.astype(jnp.float32), axis=-1))
+    return conf * trust_scale

@@ -1,0 +1,204 @@
+"""Core neural layers as pure functions over parameter pytrees.
+
+No flax/haiku: parameters are nested dicts of jnp arrays; every layer is an
+``init(key, ...) -> params`` / ``apply(params, x, ...) -> y`` pair. Compute
+runs in ``cfg.dtype`` (bf16 on TPU), parameters live in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def lecun_normal(key, shape, fan_in, dtype=jnp.float32):
+    return trunc_normal(key, shape, math.sqrt(1.0 / fan_in), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, std: Optional[float] = None):
+    p = {"w": trunc_normal(key, (d_in, d_out),
+                           std if std is not None else math.sqrt(1.0 / d_in),
+                           dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], d_in: int, bias: bool = True,
+             dtype=jnp.float32):
+    """A plain ReLU MLP ``d_in -> dims[0] -> ... -> dims[-1]``."""
+    keys = jax.random.split(key, len(dims))
+    layers = []
+    d = d_in
+    for k, h in zip(keys, dims):
+        layers.append(dense_init(k, d, h, bias=bias, dtype=dtype))
+        d = h
+    return {"layers": layers}
+
+
+def mlp_apply(p, x, final_act: bool = False, compute_dtype=None):
+    n = len(p["layers"])
+    for i, layer in enumerate(p["layers"]):
+        x = dense_apply(layer, x, compute_dtype)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + scale)
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def glu_ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def glu_ffn_apply(p, x, act: str = "silu", compute_dtype=None):
+    g = dense_apply(p["gate"], x, compute_dtype)
+    u = dense_apply(p["up"], x, compute_dtype)
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return dense_apply(p["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (d_head/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]                     # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap + embedding helpers
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": trunc_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed_apply(p, tokens, compute_dtype=None):
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed_apply(p, x):
+    """Logits via the (possibly tied) embedding table."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Token-level CE with optional z-loss; logits (…, V), labels (…,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))

@@ -1,0 +1,96 @@
+"""BST — Behavior Sequence Transformer. [arXiv:1905.06874]
+
+Embeds the user behavior sequence (+ target item), runs ``n_blocks``
+transformer blocks over (seq_len + 1) positions with learned positional
+embeddings, flattens, concatenates other-feature embeddings, and feeds the
+1024-512-256 MLP → CTR logit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models import layers as L
+from repro.models.recsys import embedding as E
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.embed_dim
+    n_other = len(cfg.tables) - 1          # tables beyond "item"
+    keys = jax.random.split(key, len(cfg.tables) + cfg.n_blocks + 3)
+    tables = {t.name: E.table_init(k, t, dt)
+              for t, k in zip(cfg.tables, keys)}
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(keys[len(cfg.tables) + i], 5)
+        blocks.append({
+            "ln1": L.layernorm_init(d, dt),
+            "ln2": L.layernorm_init(d, dt),
+            "wq": L.dense_init(bk[0], d, d, bias=True, dtype=dt),
+            "wk": L.dense_init(bk[1], d, d, bias=True, dtype=dt),
+            "wv": L.dense_init(bk[2], d, d, bias=True, dtype=dt),
+            "wo": L.dense_init(bk[3], d, d, bias=True, dtype=dt),
+            "ffn": L.mlp_init(bk[4], (4 * d, d), d, dtype=dt),
+        })
+    seq = cfg.seq_len + 1
+    d_mlp_in = seq * d + n_other * d
+    return {
+        "tables": tables,
+        "pos": L.trunc_normal(keys[-3], (seq, d), 0.02, dt),
+        "blocks": blocks,
+        "mlp": L.mlp_init(keys[-2], tuple(cfg.mlp) + (1,), d_mlp_in,
+                          dtype=dt),
+    }
+
+
+def _block(bp: Dict, x: jnp.ndarray, n_heads: int, cdt) -> jnp.ndarray:
+    B, S, d = x.shape
+    dh = d // n_heads
+    h = L.layernorm_apply(bp["ln1"], x)
+    q = L.dense_apply(bp["wq"], h, cdt).reshape(B, S, n_heads, dh)
+    k = L.dense_apply(bp["wk"], h, cdt).reshape(B, S, n_heads, dh)
+    v = L.dense_apply(bp["wv"], h, cdt).reshape(B, S, n_heads, dh)
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(dh)
+    p = jax.nn.softmax(s, axis=-1).astype(cdt)
+    o = jnp.einsum("bhst,bthd->bshd", p, v).reshape(B, S, d)
+    x = x + L.dense_apply(bp["wo"], o, cdt)
+    h = L.layernorm_apply(bp["ln2"], x)
+    return x + L.mlp_apply(bp["ffn"], h, compute_dtype=cdt)
+
+
+def forward(params: Dict, cfg: RecsysConfig, hist: jnp.ndarray,
+            target: jnp.ndarray, other_idx: jnp.ndarray) -> jnp.ndarray:
+    """hist: (B, seq_len) item ids; target: (B,); other_idx: (B, n_other).
+
+    Returns CTR logits (B,).
+    """
+    cdt = L.dtype_of(cfg.dtype)
+    items = E.lookup(params["tables"]["item"],
+                     jnp.concatenate([hist, target[:, None]], axis=1), cdt)
+    x = items + params["pos"].astype(cdt)[None]
+    for bp in params["blocks"]:
+        x = _block(bp, x, cfg.n_heads, cdt)
+    B = x.shape[0]
+    other_names = [t.name for t in cfg.tables if t.name != "item"]
+    others = [E.lookup(params["tables"][n], other_idx[:, i], cdt)
+              for i, n in enumerate(other_names)]
+    flat = jnp.concatenate([x.reshape(B, -1)] + others, axis=-1)
+    out = L.mlp_apply(params["mlp"], flat, compute_dtype=cdt)
+    return out[:, 0].astype(jnp.float32)
+
+
+def loss_fn(params: Dict, cfg: RecsysConfig, batch: Dict) -> jnp.ndarray:
+    logits = forward(params, cfg, batch["hist"], batch["target"],
+                     batch["other"])
+    return L.bce_with_logits(logits, batch["labels"])
+
+
+def relevance_scores(params: Dict, cfg: RecsysConfig, hist, target, other,
+                     trust_scale: float = 5.0) -> jnp.ndarray:
+    return jax.nn.sigmoid(forward(params, cfg, hist, target, other)) * trust_scale

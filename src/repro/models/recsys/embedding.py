@@ -1,0 +1,87 @@
+"""Sparse embedding tables + EmbeddingBag, built from JAX primitives.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the bag is
+``jnp.take`` + mask + ``segment_sum`` (per taxonomy §RecSys, this IS part
+of the system). Tables row-shard over the mesh (``distribution.sharding``
+assigns PartitionSpec("model", None) or fully-sharded rows for the huge
+DLRM/two-tower tables).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EmbeddingTableConfig
+from repro.models import layers as L
+
+
+ROW_PAD = 512   # table rows padded so row-sharding divides any mesh axis
+                # combination up to 512-way; padding rows are unreachable
+                # (lookups clip to the true vocab)
+
+
+def padded_rows(vocab: int) -> int:
+    return ((vocab + ROW_PAD - 1) // ROW_PAD) * ROW_PAD
+
+
+def table_init(key, cfg: EmbeddingTableConfig, dtype=jnp.float32) -> Dict:
+    # 1/sqrt(dim) init, standard for recsys tables
+    return {"table": L.trunc_normal(key, (padded_rows(cfg.vocab), cfg.dim),
+                                    cfg.dim ** -0.5, dtype)}
+
+
+def lookup(p: Dict, idx: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    """Single-hot lookup. idx: (...,) int32 -> (..., dim)."""
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, idx, axis=0, mode="clip")
+
+
+def embedding_bag(p: Dict, idx: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  combiner: str = "sum",
+                  weights: Optional[jnp.ndarray] = None,
+                  compute_dtype=None) -> jnp.ndarray:
+    """Multi-hot bag reduce. idx: (B, n_hot) -> (B, dim).
+
+    mask: (B, n_hot) 1.0 for valid entries; combiner in {sum, mean, max}.
+    """
+    e = lookup(p, idx, compute_dtype)                 # (B, n_hot, dim)
+    if weights is not None:
+        e = e * weights[..., None].astype(e.dtype)
+    if mask is None:
+        mask = jnp.ones(idx.shape, e.dtype)
+    m = mask[..., None].astype(e.dtype)
+    if combiner == "sum":
+        return jnp.sum(e * m, axis=-2)
+    if combiner == "mean":
+        return (jnp.sum(e * m, axis=-2)
+                / jnp.maximum(jnp.sum(m, axis=-2), 1.0))
+    if combiner == "max":
+        neg = jnp.asarray(-1e30, e.dtype)
+        return jnp.max(jnp.where(m > 0, e, neg), axis=-2)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def ragged_embedding_bag(p: Dict, flat_idx: jnp.ndarray,
+                         segment_ids: jnp.ndarray, n_bags: int,
+                         combiner: str = "sum",
+                         compute_dtype=None) -> jnp.ndarray:
+    """True EmbeddingBag semantics over a ragged (offsets-style) layout.
+
+    flat_idx: (total_nnz,) indices; segment_ids: (total_nnz,) bag id per
+    index (equivalent to torch's offsets). Returns (n_bags, dim).
+    """
+    e = lookup(p, flat_idx, compute_dtype)            # (nnz, dim)
+    if combiner == "max":
+        out = jax.ops.segment_max(e, segment_ids, n_bags)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    s = jax.ops.segment_sum(e, segment_ids, n_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(flat_idx, e.dtype),
+                                  segment_ids, n_bags)
+        s = s / jnp.maximum(cnt, 1.0)[:, None]
+    return s

@@ -1,0 +1,93 @@
+"""MIND — Multi-Interest Network with Dynamic routing. [arXiv:1904.08030]
+
+Behavior-to-Interest (B2I) dynamic routing extracts ``n_interests``
+capsules from the user history; label-aware attention weights interests
+against the target item during training; serving scores an item by the
+max over interests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models import layers as L
+from repro.models.recsys import embedding as E
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, len(cfg.tables) + 3)
+    tables = {t.name: E.table_init(k, t, dt)
+              for t, k in zip(cfg.tables, keys)}
+    d = cfg.embed_dim
+    return {
+        "tables": tables,
+        "bilinear": L.trunc_normal(keys[-3], (d, d), d ** -0.5, dt),
+        # fixed (non-trained) routing-logit init, as in the paper
+        "routing_init": L.trunc_normal(keys[-2], (cfg.n_interests,
+                                                  cfg.hist_len), 1.0, dt),
+        "interest_mlp": L.mlp_init(keys[-1], (4 * d, d), d, dtype=dt),
+    }
+
+
+def _squash(v: jnp.ndarray) -> jnp.ndarray:
+    n2 = jnp.sum(jnp.square(v.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((n2 / (1.0 + n2)) * v.astype(jnp.float32)
+            * jax.lax.rsqrt(n2 + 1e-9)).astype(v.dtype)
+
+
+def user_interests(params: Dict, cfg: RecsysConfig, hist: jnp.ndarray,
+                   hist_mask: jnp.ndarray) -> jnp.ndarray:
+    """hist: (B, L) item ids; mask (B, L) -> interests (B, K, d)."""
+    cdt = L.dtype_of(cfg.dtype)
+    e = E.lookup(params["tables"]["item"], hist, cdt)        # (B, L, d)
+    u = e @ params["bilinear"].astype(cdt)                   # (B, L, d)
+    B, Lh, d = u.shape
+    K = cfg.n_interests
+    b = jnp.broadcast_to(params["routing_init"].astype(jnp.float32)[None],
+                         (B, K, Lh))
+    neg = jnp.asarray(-1e30, jnp.float32)
+    u32 = u.astype(jnp.float32)
+    m = hist_mask.astype(jnp.float32)
+    v = jnp.zeros((B, K, d), jnp.float32)
+    for _ in range(cfg.capsule_iters):                       # 3 iters, unrolled
+        w = jax.nn.softmax(jnp.where(m[:, None, :] > 0, b, neg), axis=1)
+        z = jnp.einsum("bkl,bld->bkd", w * m[:, None, :], u32)
+        v = _squash(z)
+        b = b + jnp.einsum("bkd,bld->bkl", v, u32)
+    # per-interest nonlinearity (H in the paper)
+    v = L.mlp_apply(params["interest_mlp"], v.astype(cdt), final_act=True,
+                    compute_dtype=cdt)
+    return v
+
+
+def loss_fn(params: Dict, cfg: RecsysConfig, batch: Dict,
+            pow_p: float = 2.0) -> jnp.ndarray:
+    """Label-aware attention + in-batch sampled softmax.
+
+    batch: hist (B, L), hist_mask (B, L), target (B,).
+    """
+    v = user_interests(params, cfg, batch["hist"], batch["hist_mask"])
+    t = E.lookup(params["tables"]["item"], batch["target"],
+                 v.dtype)                                     # (B, d)
+    # label-aware attention over interests
+    att = jnp.einsum("bkd,bd->bk", v, t).astype(jnp.float32)
+    w = jax.nn.softmax(pow_p * att, axis=-1)
+    u = jnp.einsum("bk,bkd->bd", w.astype(v.dtype), v)        # (B, d)
+    # in-batch softmax against all targets
+    all_t = E.lookup(params["tables"]["item"], batch["target"], v.dtype)
+    logits = u.astype(jnp.float32) @ all_t.astype(jnp.float32).T
+    labels = jnp.arange(u.shape[0])
+    return L.cross_entropy(logits, labels)
+
+
+def relevance_scores(params: Dict, cfg: RecsysConfig, hist, hist_mask,
+                     item_ids, trust_scale: float = 5.0) -> jnp.ndarray:
+    """Serve: max-over-interests dot score for (B,) items -> [0, scale]."""
+    v = user_interests(params, cfg, hist, hist_mask)          # (B, K, d)
+    t = E.lookup(params["tables"]["item"], item_ids, v.dtype)  # (B, d)
+    s = jnp.max(jnp.einsum("bkd,bd->bk", v, t).astype(jnp.float32), axis=-1)
+    return jax.nn.sigmoid(s) * trust_scale

@@ -1,0 +1,89 @@
+"""Batched serving engine with the Load Shedder as admission controller.
+
+Request lifecycle: arrive -> admission (the paper's three-tier ladder
+decides EVAL / CACHED / PRIOR per candidate batch) -> batched evaluation
+under the deadline -> response. LM decode requests additionally claim KV
+slots (continuous batching via ``KVCachePool``).
+
+The engine is the production face of ``core.shedder``: it owns the
+monitor (throughput EWMA), the Trust DB cache and the prior state, and
+exposes per-request SLO accounting for straggler/hedging policies
+(``distribution.fault_tolerance``).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import TrustIRConfig
+from repro.core.load_monitor import LoadMonitor
+from repro.core.shedder import LoadShedder, ShedResult, SimClock
+
+
+@dataclass
+class Request:
+    request_id: int
+    item_keys: np.ndarray
+    buckets: np.ndarray
+    features: Dict[str, np.ndarray]
+    arrival_s: float
+    slo_s: float
+
+
+@dataclass
+class Response:
+    request_id: int
+    trust: np.ndarray
+    tier: np.ndarray
+    latency_s: float
+    met_slo: bool
+    shed: ShedResult
+
+
+class ServingEngine:
+    def __init__(self, cfg: TrustIRConfig, evaluate_chunk: Callable,
+                 sim_clock: Optional[SimClock] = None):
+        self.cfg = cfg
+        self.monitor = LoadMonitor(cfg)
+        self.shedder = LoadShedder(cfg, evaluate_chunk,
+                                   monitor=self.monitor,
+                                   sim_clock=sim_clock)
+        self.sim_clock = sim_clock
+        self._ids = itertools.count()
+        self.completed: List[Response] = []
+
+    def _now(self) -> float:
+        return (self.sim_clock.now() if self.sim_clock
+                else time.monotonic())
+
+    def submit(self, item_keys: np.ndarray, buckets: np.ndarray,
+               features: Dict[str, np.ndarray],
+               slo_s: Optional[float] = None) -> Response:
+        rid = next(self._ids)
+        req = Request(rid, item_keys, buckets, features,
+                      arrival_s=self._now(),
+                      slo_s=slo_s or self.cfg.overload_deadline_s)
+        shed = self.shedder.process(req.item_keys, req.buckets,
+                                    req.features)
+        latency = self._now() - req.arrival_s
+        resp = Response(request_id=rid, trust=shed.trust, tier=shed.tier,
+                        latency_s=latency,
+                        met_slo=latency <= req.slo_s + 1e-9, shed=shed)
+        self.completed.append(resp)
+        return resp
+
+    def slo_stats(self) -> Dict[str, float]:
+        if not self.completed:
+            return {"n": 0}
+        lat = np.asarray([r.latency_s for r in self.completed])
+        return {
+            "n": len(self.completed),
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "slo_met_frac": float(np.mean([r.met_slo
+                                           for r in self.completed])),
+        }

@@ -1,0 +1,170 @@
+"""Trust/relevance evaluator backends: every assigned architecture wraps
+into the shedder's ``evaluate_chunk(features) -> scores`` protocol, making
+the paper's algorithm arch-agnostic (DESIGN.md §4).
+
+Each factory returns (evaluate_chunk, make_features) where
+``make_features(n, seed)`` synthesizes evaluator inputs for n items
+(documents/candidates) with leading dim n.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import GNNConfig, RecsysConfig, TransformerConfig
+
+
+def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
+                   trust_scale: float = 5.0,
+                   doc_len: int = 32) -> Tuple[Callable, Callable]:
+    cfg = get_config(arch_id, smoke=smoke)
+    key = jax.random.PRNGKey(seed)
+
+    if isinstance(cfg, TransformerConfig):
+        from repro.models import transformer as T
+        params = T.init_params(key, cfg)
+
+        @jax.jit
+        def evaluate(chunk: Dict) -> jnp.ndarray:
+            # mean token logprob -> squashed to [0, trust_scale]
+            lp = T.score_tokens(params, cfg, chunk["tokens"],
+                                q_chunk=doc_len)
+            return jax.nn.sigmoid(lp + jnp.log(float(cfg.vocab_size))
+                                  ) * trust_scale
+
+        def make_features(n: int, fseed: int = 0) -> Dict:
+            r = np.random.default_rng(fseed)
+            return {"tokens": r.integers(0, cfg.vocab_size,
+                                         size=(n, doc_len)
+                                         ).astype(np.int32)}
+        return evaluate, make_features
+
+    if isinstance(cfg, GNNConfig):
+        from repro.models import gnn as G
+        params = G.init_params(key, cfg)
+        deg = 8
+
+        @jax.jit
+        def evaluate(chunk: Dict) -> jnp.ndarray:
+            # per-chunk star subgraphs: each URL node + its neighbors;
+            # trust propagates from neighbor features (TrustRank-style)
+            x = chunk["x"].reshape(-1, cfg.d_feat)       # (n*(deg+1), F)
+            n = chunk["x"].shape[0]
+            src = chunk["edge_src"].reshape(-1)
+            dst = chunk["edge_dst"].reshape(-1)
+            ei = jnp.stack([src, dst])
+            scores = G.trust_scores(params, cfg, x, ei,
+                                    trust_scale=trust_scale)
+            centers = jnp.arange(n) * (deg + 1)
+            return scores[centers]
+
+        def make_features(n: int, fseed: int = 0) -> Dict:
+            r = np.random.default_rng(fseed)
+            x = r.normal(size=(n, deg + 1, cfg.d_feat)).astype(np.float32)
+            base = (np.arange(n) * (deg + 1))[:, None]
+            src = (base + 1 + np.arange(deg)[None]).astype(np.int32)
+            dst = np.broadcast_to(base, (n, deg)).astype(np.int32)
+            return {"x": x, "edge_src": src, "edge_dst": dst}
+        return evaluate, make_features
+
+    if isinstance(cfg, RecsysConfig):
+        if cfg.model == "dlrm":
+            from repro.models.recsys import dlrm as Mdl
+            params = Mdl.init_params(key, cfg)
+
+            @jax.jit
+            def evaluate(chunk: Dict) -> jnp.ndarray:
+                return Mdl.relevance_scores(params, cfg, chunk["dense"],
+                                            chunk["sparse"],
+                                            trust_scale=trust_scale)
+
+            def make_features(n: int, fseed: int = 0) -> Dict:
+                r = np.random.default_rng(fseed)
+                return {
+                    "dense": r.normal(size=(n, cfg.n_dense)
+                                      ).astype(np.float32),
+                    "sparse": np.stack(
+                        [r.integers(0, t.vocab, size=n)
+                         for t in cfg.tables], axis=1).astype(np.int32),
+                }
+            return evaluate, make_features
+
+        if cfg.model == "bst":
+            from repro.models.recsys import bst as Mdl
+            params = Mdl.init_params(key, cfg)
+
+            @jax.jit
+            def evaluate(chunk: Dict) -> jnp.ndarray:
+                return Mdl.relevance_scores(params, cfg, chunk["hist"],
+                                            chunk["target"],
+                                            chunk["other"],
+                                            trust_scale=trust_scale)
+
+            def make_features(n: int, fseed: int = 0) -> Dict:
+                r = np.random.default_rng(fseed)
+                iv = cfg.tables[0].vocab
+                return {
+                    "hist": r.integers(0, iv, size=(n, cfg.seq_len)
+                                       ).astype(np.int32),
+                    "target": r.integers(0, iv, size=n).astype(np.int32),
+                    "other": np.stack(
+                        [r.integers(0, t.vocab, size=n)
+                         for t in cfg.tables[1:]], axis=1
+                    ).astype(np.int32),
+                }
+            return evaluate, make_features
+
+        if cfg.model == "two_tower":
+            from repro.models.recsys import two_tower as Mdl
+            params = Mdl.init_params(key, cfg)
+
+            @jax.jit
+            def evaluate(chunk: Dict) -> jnp.ndarray:
+                q = {"user_id": chunk["user_id"][:1],
+                     "user_feats": chunk["user_feats"][:1]}
+                s = Mdl.retrieval_scores(params, cfg, q,
+                                         chunk["item_id"],
+                                         chunk["item_feats"],
+                                         trust_scale=trust_scale)
+                return s[0]
+
+            def make_features(n: int, fseed: int = 0) -> Dict:
+                r = np.random.default_rng(fseed)
+                return {
+                    "user_id": np.full((n,), 1, np.int32),
+                    "user_feats": np.zeros((n, 8), np.int32),
+                    "item_id": r.integers(0, cfg.tables[1].vocab,
+                                          size=n).astype(np.int32),
+                    "item_feats": r.integers(0, cfg.tables[3].vocab,
+                                             size=(n, 8)).astype(np.int32),
+                }
+            return evaluate, make_features
+
+        if cfg.model == "mind":
+            from repro.models.recsys import mind as Mdl
+            params = Mdl.init_params(key, cfg)
+
+            @jax.jit
+            def evaluate(chunk: Dict) -> jnp.ndarray:
+                return Mdl.relevance_scores(params, cfg, chunk["hist"],
+                                            chunk["hist_mask"],
+                                            chunk["item"],
+                                            trust_scale=trust_scale)
+
+            def make_features(n: int, fseed: int = 0) -> Dict:
+                r = np.random.default_rng(fseed)
+                iv = cfg.tables[0].vocab
+                return {
+                    "hist": r.integers(0, iv, size=(n, cfg.hist_len)
+                                       ).astype(np.int32),
+                    "hist_mask": np.ones((n, cfg.hist_len), np.float32),
+                    "item": r.integers(0, iv, size=n).astype(np.int32),
+                }
+            return evaluate, make_features
+
+    raise ValueError(f"no evaluator for {arch_id}")

@@ -1,0 +1,80 @@
+"""Slotted KV-cache manager for continuous-batching decode.
+
+A fixed pool of ``n_slots`` sequences (the decode batch) over a
+``max_len`` cache; requests claim a slot at admission and free it at
+completion. Device arrays stay static-shaped — slot claims/frees are
+host-side bookkeeping plus masked writes, so the decode step never
+recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TransformerConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class SlotAllocator:
+    n_slots: int
+    free: List[int] = field(default_factory=list)
+    owner: Dict[int, int] = field(default_factory=dict)   # slot -> req id
+
+    def __post_init__(self):
+        self.free = list(range(self.n_slots))[::-1]
+
+    def claim(self, request_id: int) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.owner[slot] = request_id
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot in self.owner:
+            del self.owner[slot]
+            self.free.append(slot)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free)
+
+
+class KVCachePool:
+    """Device-side cache + host-side slot map."""
+
+    def __init__(self, cfg: TransformerConfig, n_slots: int, max_len: int):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.alloc = SlotAllocator(n_slots)
+        self.cache = T.init_kv_cache(cfg, n_slots, max_len)
+
+    def admit(self, request_id: int, prompt_kv: Optional[Dict] = None,
+              prompt_len: int = 0) -> Optional[int]:
+        slot = self.alloc.claim(request_id)
+        if slot is None:
+            return None
+        lengths = self.cache["lengths"].at[slot].set(prompt_len)
+        self.cache = {**self.cache, "lengths": lengths}
+        if prompt_kv is not None:
+            k = self.cache["k"].at[:, slot, :prompt_len].set(
+                prompt_kv["k"][:, 0, :prompt_len])
+            v = self.cache["v"].at[:, slot, :prompt_len].set(
+                prompt_kv["v"][:, 0, :prompt_len])
+            self.cache = {**self.cache, "k": k, "v": v}
+        return slot
+
+    def retire(self, slot: int) -> None:
+        lengths = self.cache["lengths"].at[slot].set(0)
+        self.cache = {**self.cache, "lengths": lengths}
+        self.alloc.release(slot)
+
+    def active_mask(self) -> np.ndarray:
+        m = np.zeros((self.alloc.n_slots,), bool)
+        for slot in self.alloc.owner:
+            m[slot] = True
+        return m

@@ -1,0 +1,107 @@
+"""Train-step factory: grad accumulation, mixed precision, optional
+gradient compression, metric plumbing — family-agnostic (the loss_fn
+closes over the model).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import compression as C
+from repro.training import optimizer as O
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: O.AdamWState
+    ef: Any                      # error-feedback state or None
+
+
+def init_state(params: Any, compress: bool = False) -> TrainState:
+    return TrainState(params=params, opt=O.adamw_init(params),
+                      ef=C.ef_init(params) if compress else None)
+
+
+def make_train_step(loss_fn: Callable[[Any, Dict], jnp.ndarray],
+                    opt_cfg: O.AdamWConfig, *,
+                    grad_accum: int = 1,
+                    compress_grads: bool = False,
+                    donate: bool = True,
+                    jit: bool = True) -> Callable:
+    """Build ``step(state, batch) -> (state, metrics)``.
+
+    ``loss_fn(params, batch) -> scalar`` (may return (loss, aux)).
+    With ``grad_accum > 1``, every leaf of ``batch`` must have leading dim
+    ``grad_accum`` (microbatches scanned, gradients averaged).
+    """
+
+    def _loss(params, mb):
+        out = loss_fn(params, mb)
+        if isinstance(out, tuple):
+            return out[0], out[1]
+        return out, {}
+
+    grad_fn = jax.value_and_grad(_loss, has_aux=True)
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if grad_accum == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            aux = {}
+
+        ef = state.ef
+        metrics: Dict[str, jnp.ndarray] = {"loss": loss}
+        if compress_grads:
+            grads, ef, cm = C.compress_decompress(grads, ef)
+            metrics.update(cm)
+        new_params, new_opt, om = O.adamw_update(grads, state.opt, params,
+                                                 opt_cfg)
+        metrics.update(om)
+        for k, v in (aux.items() if isinstance(aux, dict) else []):
+            metrics[f"aux/{k}"] = v
+        return TrainState(new_params, new_opt, ef), metrics
+
+    if not jit:
+        return step
+    if donate:
+        return jax.jit(step, donate_argnums=(0,))
+    return jax.jit(step)
+
+
+def train(state: TrainState, step_fn: Callable, data_iter,
+          n_steps: int, *, log_every: int = 10,
+          checkpointer=None, ckpt_every: int = 0,
+          start_step: int = 0, hooks=()) -> Tuple[TrainState, list]:
+    """Simple training driver with checkpoint hooks; returns history."""
+    history = []
+    for i in range(start_step, start_step + n_steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == n_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+        if checkpointer is not None and ckpt_every and \
+                (i + 1) % ckpt_every == 0:
+            checkpointer.save(i + 1, state,
+                              extra={"step": i + 1})
+        for h in hooks:
+            h(i, state, metrics)
+    if checkpointer is not None:
+        checkpointer.wait()
+    return state, history

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run sets its own
+# 512-device flag in a separate process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,82 @@
+"""Adaptive Very-Heavy control (paper §7 future work): controller
+convergence + bounded weight + improvement over the static rule."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.trust_ir import smoke_config
+from repro.core import (LoadShedder, SimClock, SyntheticSearcher,
+                        TrustIRPipeline)
+from repro.core.adaptive import AdaptiveWeightController
+from repro.core.shedder import ShedResult, TIER_PRIOR
+
+
+def fake_result(uload, n_prior):
+    return ShedResult(
+        trust=np.zeros(uload), tier=np.zeros(uload, np.int32),
+        regime=None, response_time_s=0.0, deadline_eff_s=0.0,
+        n_evaluated=uload - n_prior, n_cached=0, n_prior=n_prior,
+        uload=uload)
+
+
+def test_weight_rises_under_excess_priors():
+    c = AdaptiveWeightController(target_prior_frac=0.1, w_init=0.2)
+    for _ in range(10):
+        c.observe(fake_result(100, 60))
+    assert c.weight > 0.2
+
+
+def test_weight_decays_when_no_priors():
+    c = AdaptiveWeightController(target_prior_frac=0.1, w_init=1.0)
+    for _ in range(30):
+        c.observe(fake_result(100, 0))
+    assert c.weight < 1.0
+
+
+def test_weight_stays_bounded():
+    c = AdaptiveWeightController(target_prior_frac=0.0, w_init=0.5,
+                                 w_max=2.0)
+    for _ in range(100):
+        c.observe(fake_result(100, 100))
+    assert 0.0 <= c.weight <= 2.0
+
+
+def test_adaptive_beats_static_on_fidelity_under_flood():
+    cfg = smoke_config()
+    searcher = SyntheticSearcher(corpus_size=20_000, seed=0)
+    n = 8 * (cfg.u_capacity + cfg.u_threshold)
+
+    def build(adaptive):
+        clock = SimClock(rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+        ctrl = AdaptiveWeightController(target_prior_frac=0.15,
+                                        w_init=0.5) if adaptive else None
+        shed = LoadShedder(cfg, lambda ch: np.asarray(ch["trust"]),
+                           sim_clock=clock, adaptive=ctrl)
+        return TrustIRPipeline(cfg, searcher, shed), ctrl
+
+    static_pipe, _ = build(False)
+    adapt_pipe, ctrl = build(True)
+    static_f, adapt_f = [], []
+    for i in range(12):
+        static_f.append(static_pipe.run_query(f"q{i}", n).trust_fidelity)
+        adapt_f.append(adapt_pipe.run_query(f"q{i}", n).trust_fidelity)
+    assert ctrl.weight > 0.5                     # controller engaged
+    assert np.mean(adapt_f[6:]) > np.mean(static_f[6:])
+
+
+def test_deadline_still_respected_with_adaptive():
+    cfg = smoke_config()
+    clock = SimClock(rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    ctrl = AdaptiveWeightController(target_prior_frac=0.05, w_init=0.5,
+                                    w_max=1.5)
+    shed = LoadShedder(cfg, lambda ch: np.asarray(ch["trust"]),
+                       sim_clock=clock, adaptive=ctrl)
+    pipe = TrustIRPipeline(cfg, SyntheticSearcher(corpus_size=20_000,
+                                                  seed=1), shed)
+    for i in range(8):
+        out = pipe.run_query(f"q{i}", 6 * cfg.u_capacity)
+        assert out.response_time_s <= out.shed.deadline_eff_s + 1e-9
+        assert out.shed.deadline_eff_s <= cfg.overload_deadline_s * (
+            1 + ctrl.w_max) + 1e-9
+        assert out.shed.no_item_dropped

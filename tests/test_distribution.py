@@ -1,0 +1,163 @@
+"""Distribution layer: sharding-spec validity for every arch, elastic
+mesh management, straggler policies, and an 8-host-device subprocess
+check of the compressed cross-pod reduction."""
+import subprocess
+import sys
+import textwrap
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import arch_ids, get_bundle
+from repro.configs.base import (GNNConfig, RecsysConfig,
+                                TransformerConfig)
+from repro.distribution import fault_tolerance as FT
+from repro.distribution import sharding as SH
+
+
+class FakeMesh:
+    """Stand-in mesh exposing axis_names/shape for spec construction."""
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _params_shape(arch):
+    b = get_bundle(arch)
+    cfg = b.config
+    if isinstance(cfg, TransformerConfig):
+        from repro.models import transformer as M
+        init = partial(M.init_params, cfg=cfg)
+    elif isinstance(cfg, RecsysConfig):
+        from repro.launch.steps import _recsys_loss
+        init = partial(_recsys_loss(cfg).init_params, cfg=cfg)
+    else:
+        from repro.models import gnn as M
+        init = partial(M.init_params, cfg=cfg)
+    return cfg, jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_param_specs_divide_evenly(arch):
+    """Every sharded param dim must divide by its mesh-axis product —
+    the invariant that made the dry-run fail before table padding."""
+    cfg, shape_tree = _params_shape(arch)
+    mesh = FakeMesh()
+    specs = SH.param_specs(cfg, shape_tree, mesh)
+
+    def check(path, leaf, spec):
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for d, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = (s,) if isinstance(s, str) else s
+            factor = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[d] % factor == 0, (
+                f"{jax.tree_util.keystr(path)} dim {d} = "
+                f"{leaf.shape[d]} not divisible by {factor} ({spec})")
+
+    jax.tree_util.tree_map_with_path(
+        check, shape_tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_transformer_spec_rules():
+    cfg, shape_tree = _params_shape("qwen2.5-14b")
+    specs = SH.param_specs(cfg, shape_tree, FakeMesh())
+    # untied: embed column-sharded (local gather + local scatter-grad)
+    assert specs["embed"]["table"] == P(None, "model")
+    assert specs["blocks"]["attn"]["wq"]["w"] == P(None, None, "model")
+    assert specs["blocks"]["attn"]["wo"]["w"] == P(None, "model", None)
+    assert specs["blocks"]["ffn"]["down"]["w"] == P(None, "model", None)
+    assert specs["blocks"]["ln1"]["scale"] == P(None, None)
+    assert specs["unembed"]["w"] == P(None, "model")
+    # tied (smollm): table doubles as unembed -> row-sharded
+    cfg_t, shape_t = _params_shape("smollm-135m")
+    specs_t = SH.param_specs(cfg_t, shape_t, FakeMesh())
+    assert specs_t["embed"]["table"] == P("model", None)
+
+
+def test_moe_expert_parallel_specs():
+    cfg, shape_tree = _params_shape("qwen3-moe-30b-a3b")
+    specs = SH.param_specs(cfg, shape_tree, FakeMesh())
+    assert specs["blocks"]["moe"]["w_gate"] == P(None, "model", None,
+                                                 None)
+    assert specs["blocks"]["moe"]["router"]["w"] == P(None, None, None)
+
+
+def test_recsys_tables_row_sharded():
+    cfg, shape_tree = _params_shape("dlrm-mlperf")
+    specs = SH.param_specs(cfg, shape_tree, FakeMesh())
+    t = specs["tables"]["sparse_0"]["table"]
+    assert t == P(("data", "model"), None)
+    assert specs["bot_mlp"]["layers"][0]["w"] == P(None, None)
+
+
+def test_largest_mesh_shape():
+    assert FT.largest_mesh_shape(512) == (32, 16)
+    assert FT.largest_mesh_shape(256) == (16, 16)
+    assert FT.largest_mesh_shape(300) == (16, 16)   # round down to 256
+    assert FT.largest_mesh_shape(8) == (1, 8)
+    assert FT.largest_mesh_shape(1) == (1, 1)
+
+
+def test_heartbeat_tracker():
+    hb = FT.HeartbeatTracker(timeout_s=10.0)
+    hb.beat(0, now=0.0)
+    hb.beat(1, now=0.0)
+    hb.beat(0, now=8.0)
+    assert hb.live_workers(now=12.0) == [0]
+    assert hb.dead_workers(now=12.0) == [1]
+
+
+def test_deadline_skip_policy():
+    pol = FT.DeadlineSkipPolicy(step_deadline_s=1.0, min_fraction=0.5)
+    keep = pol.plan([0.3, 0.3, 0.3, 0.3])       # 4 chunks, 1.2s total
+    assert keep == [True, True, True, False]
+    assert pol.rescale(keep) == pytest.approx(4 / 3)
+    # straggler chunk would blow the deadline but min_fraction forces it
+    keep2 = pol.plan([2.0, 2.0, 0.1, 0.1])
+    assert keep2[0] and keep2[1]
+
+
+def test_hedged_dispatch():
+    h = FT.HedgedDispatch(hedge_after_s=0.2)
+    assert not h.should_hedge(0.1, False)
+    assert h.should_hedge(0.25, False)
+    assert not h.should_hedge(0.25, True)
+
+
+def test_compressed_pod_mean_subprocess():
+    """int8-on-the-wire cross-pod mean vs exact mean, on 8 host devices
+    (subprocess so the device-count flag doesn't leak into this test
+    session)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.training.compression import compressed_pod_mean
+        mesh = jax.make_mesh((8,), ("pod",))
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(8, 1024)).astype(np.float32))
+        f = jax.shard_map(lambda a: compressed_pod_mean(a[0], "pod"),
+                          mesh=mesh, in_specs=P("pod", None),
+                          out_specs=P(), check_vma=False)
+        got = f(x)
+        exact = x.mean(0)
+        rel = float(jnp.max(jnp.abs(got - exact)))
+        scale = float(jnp.max(jnp.abs(exact)))
+        assert rel < 0.02 * max(scale, 1.0), (rel, scale)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=240,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"},
+                       cwd=__import__('os').path.dirname(
+                           __import__('os').path.dirname(
+                               __import__('os').path.abspath(__file__))))
+    assert "OK" in r.stdout, r.stderr[-2000:]

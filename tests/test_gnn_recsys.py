@@ -1,0 +1,172 @@
+"""GNN message passing vs dense-adjacency oracle; neighbor sampler;
+EmbeddingBag vs manual reduce; MIND capsule properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import EmbeddingTableConfig
+from repro.models import gnn as G
+from repro.models.recsys import embedding as E
+from repro.training import data as D
+
+KEY = jax.random.PRNGKey(2)
+
+
+def dense_gcn_propagate(x, edge_index, n):
+    """Oracle: Ã X with self loops via dense adjacency."""
+    A = np.zeros((n, n), np.float64)
+    src, dst = np.asarray(edge_index)
+    for s, d in zip(src, dst):
+        A[d, s] += 1.0
+    A = A + np.eye(n)
+    deg = A.sum(1)
+    Dn = np.diag(1.0 / np.sqrt(deg))
+    return Dn @ A @ Dn @ np.asarray(x, np.float64)
+
+
+@given(st.integers(3, 24), st.integers(0, 60), st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_propagate_matches_dense_oracle(n, e, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(n, 5)).astype(np.float32)
+    # dedupe edges: dense oracle below assumes simple graph
+    if e:
+        cand = r.integers(0, n, size=(2, e))
+        seen = sorted(set(map(tuple, cand.T)))
+        ei = np.asarray(seen, np.int32).T.reshape(2, -1)
+    else:
+        ei = np.zeros((2, 0), np.int32)
+    if ei.shape[1] == 0:
+        return
+    got = G.propagate(jnp.asarray(x), jnp.asarray(ei), norm="sym")
+    expect = dense_gcn_propagate(x, ei, n)
+    np.testing.assert_allclose(np.asarray(got, np.float64), expect,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_edge_mask_zeroes_padded_edges():
+    x = jnp.eye(4, dtype=jnp.float32)
+    ei = jnp.asarray([[0, 1, 2], [1, 2, 3]], jnp.int32)
+    full = G.propagate(x, ei, norm="sym")
+    masked = G.propagate(x, jnp.concatenate(
+        [ei, jnp.asarray([[3], [0]], jnp.int32)], axis=1),
+        norm="sym", edge_mask=jnp.asarray([1.0, 1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(masked),
+                               rtol=1e-5)
+
+
+def test_gcn_learns_cora_like_task():
+    """2-layer GCN reaches >80% train accuracy on a separable synthetic
+    community graph — sanity that propagation + training compose."""
+    from repro.training import optimizer as O
+    from repro.training import train_loop as TL
+    cfg = get_config("gcn-cora", smoke=True)
+    g = D.synthetic_graph(200, 1600, cfg.d_feat, cfg.n_classes, seed=0)
+    params = G.init_params(KEY, cfg)
+    state = TL.init_state(params)
+    step = TL.make_train_step(
+        lambda p, b: G.node_loss(p, cfg, b["x"], b["edge_index"],
+                                 b["labels"], b["train_mask"]),
+        O.AdamWConfig(lr=5e-2, warmup_steps=0, weight_decay=0.0,
+                      schedule="constant"))
+    batch = {k: jnp.asarray(v) for k, v in g.items()}
+    for _ in range(60):
+        state, m = step(state, batch)
+    logits = G.forward(state.params, cfg, batch["x"],
+                       batch["edge_index"])
+    acc = float(jnp.mean((jnp.argmax(logits, -1)
+                          == batch["labels"]).astype(jnp.float32)))
+    assert acc > 0.8, acc
+
+
+def test_neighbor_sampler_returns_real_neighbors():
+    g = D.synthetic_graph(100, 600, 4, 3, seed=1)
+    csr = D.CSRGraph(g["edge_index"], 100)
+    r = np.random.default_rng(0)
+    nodes = np.asarray([5, 10, 20], np.int32)
+    nbrs, mask = csr.sample_neighbors(nodes, 7, r)
+    src, dst = g["edge_index"]
+    for i, nd in enumerate(nodes):
+        in_nbrs = set(src[dst == nd].tolist())
+        for j in range(7):
+            if mask[i, j] > 0:
+                assert int(nbrs[i, j]) in in_nbrs
+
+
+def test_sampled_subgraph_shapes_static():
+    g = D.synthetic_graph(500, 4000, 8, 4, seed=2)
+    it = D.sampled_subgraph_batches(g, batch_nodes=16, fanout=(4, 3))
+    b1, b2 = next(it), next(it)
+    assert b1["x"].shape == (16 + 64 + 192, 8) == b2["x"].shape
+    assert b1["edge_index"].shape == (2, 64 + 192)
+    # determinism per step index
+    it2 = D.sampled_subgraph_batches(g, batch_nodes=16, fanout=(4, 3))
+    np.testing.assert_array_equal(next(it2)["x"], b1["x"])
+
+
+def test_embedding_bag_matches_manual():
+    tbl_cfg = EmbeddingTableConfig(name="t", vocab=50, dim=8)
+    p = E.table_init(KEY, tbl_cfg)
+    idx = jnp.asarray([[1, 2, 3], [4, 4, 0]], jnp.int32)
+    mask = jnp.asarray([[1, 1, 0], [1, 1, 1]], jnp.float32)
+    tbl = np.asarray(p["table"])
+    for comb in ["sum", "mean", "max"]:
+        got = np.asarray(E.embedding_bag(p, idx, mask, combiner=comb))
+        for b in range(2):
+            rows = [tbl[int(i)] for i, m in zip(idx[b], mask[b]) if m]
+            if comb == "sum":
+                expect = np.sum(rows, axis=0)
+            elif comb == "mean":
+                expect = np.mean(rows, axis=0)
+            else:
+                expect = np.max(rows, axis=0)
+            np.testing.assert_allclose(got[b], expect, rtol=1e-5)
+
+
+def test_ragged_embedding_bag_matches_padded():
+    tbl_cfg = EmbeddingTableConfig(name="t", vocab=30, dim=4)
+    p = E.table_init(KEY, tbl_cfg)
+    flat = jnp.asarray([3, 7, 7, 1, 2], jnp.int32)
+    seg = jnp.asarray([0, 0, 1, 1, 1], jnp.int32)
+    got = E.ragged_embedding_bag(p, flat, seg, 3, combiner="sum")
+    tbl = np.asarray(p["table"])
+    np.testing.assert_allclose(np.asarray(got)[0], tbl[3] + tbl[7],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got)[2], np.zeros(4))
+
+
+def test_table_rows_padded_for_sharding():
+    assert E.padded_rows(39884406) % 512 == 0
+    assert E.padded_rows(512) == 512
+    assert E.padded_rows(1) == 512
+
+
+def test_mind_capsules_respect_mask_and_squash():
+    from repro.models.recsys import mind as MI
+    cfg = get_config("mind", smoke=True)
+    p = MI.init_params(KEY, cfg)
+    hist = jax.random.randint(KEY, (3, cfg.hist_len), 0, 100)
+    mask = jnp.ones((3, cfg.hist_len))
+    v = MI.user_interests(p, cfg, hist, mask)
+    assert v.shape == (3, cfg.n_interests, cfg.embed_dim)
+    assert not bool(jnp.any(jnp.isnan(v)))
+    # masked history items must not change interests
+    hist2 = hist.at[:, -3:].set(7)
+    mask2 = mask.at[:, -3:].set(0.0)
+    v1 = MI.user_interests(p, cfg, hist.at[:, -3:].set(50), mask2)
+    v2 = MI.user_interests(p, cfg, hist2, mask2)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_two_tower_embeddings_normalized():
+    from repro.models.recsys import two_tower as TT
+    cfg = get_config("two-tower-retrieval", smoke=True)
+    p = TT.init_params(KEY, cfg)
+    u = TT.user_embed(p, cfg, jnp.asarray([1, 2]),
+                      jnp.zeros((2, 8), jnp.int32))
+    norms = np.linalg.norm(np.asarray(u, np.float32), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-3)

@@ -1,0 +1,76 @@
+"""The loop-aware HLO analyzer against hand-built HLO snippets, plus the
+scan-undercount regression (the reason it exists)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as HA
+
+TOY_HLO = """
+HloModule toy
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ip, %y)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%z, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body
+  %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  %ag = f32[16,8]{1,0} all-gather(%r), dimensions={0}
+  ROOT %out = f32[8,8]{1,0} dot(%ag, %ag), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_while_trip_count_scaling():
+    a = HA.analyze(TOY_HLO)
+    # body dot: 2*8*8*8 = 1024 flops x 5 trips; entry dot:
+    # result (8,8), contraction 16 -> 2*8*8*16 = 2048
+    assert a["flops"] == 5 * 1024 + 2048
+
+
+def test_collective_bytes_counted():
+    a = HA.analyze(TOY_HLO)
+    # all-gather result f32[16,8] = 512 bytes, executed once
+    assert a["collectives"]["all-gather"] == 512.0
+    assert a["collective_counts"]["all-gather"] == 1
+
+
+def test_operand_bytes_via_symbol_table():
+    comps, entry = HA.split_computations(TOY_HLO)
+    assert entry == "main"
+    table = HA._symbol_table(comps["main"])
+    assert HA._shape_bytes(table["ag"]) == 16 * 8 * 4
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """The regression this module guards: XLA counts scan bodies once."""
+    x = jnp.zeros((64, 64), jnp.float32)
+
+    def scanned(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None,
+                            length=10)
+        return y
+
+    c = jax.jit(scanned).lower(x).compile()
+    xla_flops = c.cost_analysis()["flops"]
+    ours = HA.analyze(c.as_text())["flops"]
+    one_matmul = 2 * 64 ** 3
+    assert xla_flops == pytest.approx(one_matmul, rel=0.2)
+    assert ours == pytest.approx(10 * one_matmul, rel=0.2)

@@ -1,0 +1,91 @@
+"""Integration: train a reduced LM for a few hundred steps (loss must
+drop), with mid-run checkpoint + kill + elastic resume producing
+bit-identical continuation."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.training import checkpoint as CK
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training import train_loop as TL
+
+
+@pytest.mark.slow
+def test_lm_training_loss_decreases_over_200_steps():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = O.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=200,
+                        weight_decay=0.01)
+    step = TL.make_train_step(
+        lambda p, b: T.lm_loss(p, cfg, b["tokens"], b["labels"]), opt)
+    state = TL.init_state(params)
+    it = D.lm_batches(cfg, batch=8, seq=32, seed=1)
+    state, hist = TL.train(state, step, it, n_steps=200, log_every=20)
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    # synthetic stream has learnable next-token structure
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_restart_is_bit_identical(tmp_path):
+    """Run A: 6 steps straight. Run B: 3 steps, checkpoint, 'crash',
+    restore, 3 more. Final params must match exactly."""
+    cfg = get_config("smollm-135m", smoke=True)
+    opt = O.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=100)
+
+    def loss_fn(p, b):
+        return T.lm_loss(p, cfg, b["tokens"], b["labels"])
+
+    step = TL.make_train_step(loss_fn, opt, donate=False)
+
+    def fresh_state():
+        return TL.init_state(T.init_params(jax.random.PRNGKey(0), cfg))
+
+    # run A
+    state_a = fresh_state()
+    it = D.lm_batches(cfg, batch=2, seq=16, seed=9)
+    for i in range(6):
+        state_a, _ = step(state_a, next(it))
+
+    # run B with crash at step 3
+    state_b = fresh_state()
+    it = D.lm_batches(cfg, batch=2, seq=16, seed=9)
+    for i in range(3):
+        state_b, _ = step(state_b, next(it))
+    CK.save(str(tmp_path), 3, state_b)
+    del state_b                                  # "crash"
+    like = jax.eval_shape(fresh_state)
+    state_b, _ = CK.restore(str(tmp_path), like)
+    it = D.lm_batches(cfg, batch=2, seq=16, seed=9, start_step=3)
+    for i in range(3):
+        state_b, _ = step(state_b, next(it))
+
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_with_compression_and_accum_still_learns():
+    cfg = get_config("smollm-135m", smoke=True)
+    opt = O.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    step = TL.make_train_step(
+        lambda p, b: T.lm_loss(p, cfg, b["tokens"], b["labels"]),
+        opt, grad_accum=2, compress_grads=True)
+    state = TL.init_state(T.init_params(jax.random.PRNGKey(0), cfg),
+                          compress=True)
+    it = D.lm_batches(cfg, batch=4, seq=16, seed=2)
+
+    def stacked():
+        while True:
+            a, b = next(it), next(it)
+            yield {k: np.stack([a[k], b[k]]) for k in a}
+
+    state, hist = TL.train(state, step, stacked(), n_steps=60,
+                           log_every=10)
+    assert hist[-1]["loss"] < hist[0]["loss"], hist

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape and
+dtype sweeps per kernel, plus hypothesis sweeps for the paper's
+shed_partition kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trust_cache as TC
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,win,cap", [
+    (2, 256, 4, 2, 64, 0, 0.0),        # GQA causal
+    (1, 256, 8, 4, 128, 64, 50.0),     # window + softcap (gemma2)
+    (2, 128, 3, 3, 64, 0, 0.0),        # MHA, odd heads (smollm)
+    (1, 512, 5, 1, 64, 128, 0.0),      # MQA + window
+])
+def test_flash_attention_matches_ref(B, S, Hq, Hkv, D, win, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=win,
+                              softcap=cap, block_q=64, block_k=64,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=win,
+                                     softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,Hq,Hkv,D,win,cap", [
+    (3, 512, 4, 2, 64, 0, 0.0),
+    (2, 512, 8, 1, 128, 100, 30.0),
+    (2, 256, 8, 8, 64, 0, 0.0),
+    (1, 1024, 9, 3, 64, 0, 0.0),       # smollm head layout
+])
+def test_flash_decode_matches_ref(B, L, Hq, Hkv, D, win, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, L, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, L, Hkv, D), dtype)
+    lengths = jnp.asarray(
+        (np.arange(B) * (L // max(B, 1)) % L + 1), jnp.int32)
+    out = ops.flash_decode(q, kc, vc, lengths, window=win, softcap=cap,
+                           block_k=128, interpret=True)
+    expect = ref.flash_decode_ref(q, kc, vc, lengths, window=win,
+                                  softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               **tol(dtype))
+
+
+def test_flash_decode_respects_lengths():
+    """Tokens beyond ``lengths`` must not influence the output."""
+    ks = jax.random.split(KEY, 3)
+    B, L, H, D = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, L, H, D))
+    vc = jax.random.normal(ks[2], (B, L, H, D))
+    lengths = jnp.asarray([100, 37], jnp.int32)
+    out1 = ops.flash_decode(q, kc, vc, lengths, interpret=True)
+    kc2 = kc.at[:, 200:].set(1e4)       # poison the invalid region
+    vc2 = vc.at[:, 200:].set(-1e4)
+    out2 = ops.flash_decode(q, kc2, vc2, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,F,D", [(37, 27, 128), (128, 27, 128),
+                                   (16, 8, 64), (5, 12, 32)])
+def test_dot_interaction_matches_ref(B, F, D, dtype):
+    x = jax.random.normal(KEY, (B, F, D), dtype)
+    out = ops.dot_interaction(x, block_b=16, interpret=True)
+    expect = ref.dot_interaction_ref(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               **tol(dtype))
+
+
+@given(st.integers(0, 2048), st.integers(1, 600), st.integers(0, 400),
+       st.integers(0, 500), st.integers(0, 4))
+@settings(max_examples=25, deadline=None)
+def test_shed_partition_matches_oracle(n_valid, ucap, uthr, budget,
+                                       cache_stride):
+    N = 2048
+    keys = jnp.arange(1, N + 1, dtype=jnp.uint32)
+    valid = jnp.arange(N) < n_valid
+    cache = TC.init(256, 4)
+    if cache_stride:
+        sel = keys[::cache_stride + 1]
+        cache = TC.insert(cache, sel, jnp.full(sel.shape, 2.5),
+                          jnp.ones(sel.shape, bool))
+    tier, cval = ops.shed_partition(
+        keys, valid, cache["keys"], cache["values"],
+        u_capacity=ucap, u_threshold=uthr, budget_dq=budget,
+        block_n=256, interpret=True)
+    tier_r, cval_r = ref.shed_partition_ref(
+        keys, valid, cache["keys"], cache["values"], ucap, uthr, budget)
+    assert bool(jnp.all(tier == tier_r))
+    np.testing.assert_allclose(np.asarray(cval), np.asarray(cval_r))

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import arch_ids, get_bundle, get_config
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training import train_loop as TL
+
+KEY = jax.random.PRNGKey(0)
+OPT = O.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+
+LM_ARCHS = ["smollm-135m", "qwen2.5-14b", "gemma2-2b",
+            "moonshot-v1-16b-a3b", "qwen3-moe-30b-a3b"]
+RECSYS_ARCHS = ["bst", "dlrm-mlperf", "two-tower-retrieval", "mind"]
+
+
+def test_registry_has_all_ten():
+    assert len(arch_ids()) == 10
+    for a in arch_ids():
+        b = get_bundle(a)
+        assert len(b.shapes) == 4
+        assert b.smoke is not None
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_forward_and_train(arch):
+    from repro.models import transformer as T
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    logits, _ = T.forward(params, cfg, toks, q_chunk=8)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    state = TL.init_state(params)
+    step = TL.make_train_step(
+        lambda p, b: T.lm_loss(p, cfg, b["tokens"], b["labels"]), OPT)
+    it = D.lm_batches(cfg, batch=2, seq=16)
+    state, m = step(state, next(it))
+    assert np.isfinite(float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode(arch):
+    from repro.models import transformer as T
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(KEY, cfg)
+    cache = T.init_kv_cache(cfg, 2, 8)
+    tok = jax.random.randint(KEY, (2,), 0, cfg.vocab_size)
+    logits, cache = T.decode_step(params, cfg, tok, cache)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert int(cache["lengths"][0]) == 1
+
+
+def test_gnn_smoke():
+    from repro.models import gnn as G
+    cfg = get_config("gcn-cora", smoke=True)
+    params = G.init_params(KEY, cfg)
+    g = D.synthetic_graph(60, 240, cfg.d_feat, cfg.n_classes, seed=3)
+    logits = G.forward(params, cfg, jnp.asarray(g["x"]),
+                       jnp.asarray(g["edge_index"]))
+    assert logits.shape == (60, cfg.n_classes)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    state = TL.init_state(params)
+    step = TL.make_train_step(
+        lambda p, b: G.node_loss(p, cfg, b["x"], b["edge_index"],
+                                 b["labels"], b["train_mask"]), OPT)
+    state, m = step(state, {k: jnp.asarray(v) for k, v in g.items()})
+    assert np.isfinite(float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_train(arch):
+    cfg = get_config(arch, smoke=True)
+    from repro.launch.steps import _recsys_loss
+    M = _recsys_loss(cfg)
+    params = M.init_params(KEY, cfg)
+    state = TL.init_state(params)
+    step = TL.make_train_step(lambda p, b: M.loss_fn(p, cfg, b), OPT)
+    batch = next(D.recsys_batches(cfg, batch=8))
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_moe_routes_to_multiple_experts():
+    from repro.models import moe as MO
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    p = MO.moe_init(KEY, 64, cfg.moe)
+    x = jax.random.normal(KEY, (64, 64))
+    out, metrics = MO.moe_apply(p, x, cfg.moe, compute_dtype=jnp.float32)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out)))
+    assert float(metrics["moe_aux_loss"]) > 0
+    assert float(metrics["moe_drop_frac"]) < 0.5
+
+
+def test_moe_capacity_drops_become_residual_only():
+    """Overflowed tokens keep the residual path (PRIOR tier, DESIGN §4):
+    with capacity_factor tiny, output shrinks but never NaNs."""
+    import dataclasses
+    from repro.models import moe as MO
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True).moe
+    tiny = dataclasses.replace(cfg, capacity_factor=0.05)
+    p = MO.moe_init(KEY, 32, tiny)
+    x = jax.random.normal(KEY, (128, 32))
+    out, metrics = MO.moe_apply(p, x, tiny, compute_dtype=jnp.float32)
+    assert float(metrics["moe_drop_frac"]) > 0.3
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_gemma2_softcap_bounds_logits():
+    from repro.models import transformer as T
+    cfg = get_config("gemma2-2b", smoke=True)
+    params = T.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    logits, _ = T.forward(params, cfg, toks)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap

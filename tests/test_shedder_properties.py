@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the shedding plan invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TIER_CACHED, TIER_EVAL, TIER_INVALID, TIER_PRIOR,
+                        Regime, classify, classify_jnp, effective_deadline,
+                        gather_eval_indices, shed_plan)
+
+PLAN_KW = dict(deadline_s=0.5, overload_deadline_s=1.0,
+               very_heavy_weight=0.5)
+
+
+@st.composite
+def plan_inputs(draw):
+    n = draw(st.integers(8, 256))
+    n_valid = draw(st.integers(0, n))
+    hit_frac = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    ucap = draw(st.integers(1, 300))
+    uthr = draw(st.integers(0, 200))
+    r = np.random.default_rng(seed)
+    valid = np.zeros(n, bool)
+    valid[:n_valid] = True          # arrival order: valid prefix
+    hit = (r.random(n) < hit_frac) & valid
+    return valid, hit, ucap, uthr
+
+
+@given(plan_inputs())
+@settings(max_examples=80, deadline=None)
+def test_every_valid_item_gets_a_tier(inputs):
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    tier = np.asarray(plan["tier"])
+    # the paper's central invariant: no valid item is dropped
+    assert (tier[valid] != TIER_INVALID).all()
+    assert (tier[~valid] == TIER_INVALID).all()
+
+
+@given(plan_inputs())
+@settings(max_examples=80, deadline=None)
+def test_cache_hits_never_evaluated(inputs):
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    tier = np.asarray(plan["tier"])
+    assert (tier[hit] == TIER_CACHED).all()
+
+
+@given(plan_inputs())
+@settings(max_examples=80, deadline=None)
+def test_normal_queue_always_evaluated(inputs):
+    """First Ucapacity non-cached items are always EVAL (§5.2 has no
+    deadline check)."""
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    tier = np.asarray(plan["tier"])
+    pos = np.cumsum(valid) - 1
+    normal_noncached = valid & (pos < ucap) & ~hit
+    assert (tier[normal_noncached] == TIER_EVAL).all()
+
+
+@given(plan_inputs())
+@settings(max_examples=80, deadline=None)
+def test_eval_budget_respected(inputs):
+    """Drop-queue evaluations never exceed the deadline budget."""
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    tier = np.asarray(plan["tier"])
+    pos = np.cumsum(valid) - 1
+    dq_eval = (tier == TIER_EVAL) & (pos >= ucap) & valid
+    assert dq_eval.sum() <= int(plan["eval_budget_dq"])
+
+
+@given(plan_inputs())
+@settings(max_examples=80, deadline=None)
+def test_regime_matches_host_classifier(inputs):
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    uload = int(valid.sum())
+    assert int(plan["regime"]) == classify(uload, ucap, uthr).value
+    assert int(classify_jnp(uload, ucap, uthr)) == int(plan["regime"])
+
+
+@given(plan_inputs())
+@settings(max_examples=60, deadline=None)
+def test_gather_eval_indices_matches_tiers(inputs):
+    valid, hit, ucap, uthr = inputs
+    plan = shed_plan(jnp.asarray(valid), jnp.asarray(hit), ucap, uthr,
+                     **PLAN_KW)
+    tier = np.asarray(plan["tier"])
+    n_eval = int((tier == TIER_EVAL).sum())
+    idx, ev_valid = gather_eval_indices(plan["tier"], max_evals=len(valid))
+    idx, ev_valid = np.asarray(idx), np.asarray(ev_valid)
+    assert ev_valid.sum() == n_eval
+    assert (tier[idx[ev_valid]] == TIER_EVAL).all()
+    # arrival order preserved among gathered eval items
+    assert (np.diff(idx[ev_valid]) > 0).all()
+
+
+@given(st.integers(1, 10_000), st.integers(1, 2_000),
+       st.integers(0, 2_000))
+@settings(max_examples=100, deadline=None)
+def test_deadline_monotone_in_load(uload, ucap, uthr):
+    kw = PLAN_KW
+    d1 = effective_deadline(uload, ucap, uthr, **{
+        "deadline_s": kw["deadline_s"],
+        "overload_deadline_s": kw["overload_deadline_s"],
+        "weight": kw["very_heavy_weight"]})
+    d2 = effective_deadline(uload + 100, ucap, uthr, **{
+        "deadline_s": kw["deadline_s"],
+        "overload_deadline_s": kw["overload_deadline_s"],
+        "weight": kw["very_heavy_weight"]})
+    assert d2 >= d1 - 1e-9          # heavier load never shrinks deadline
+    assert d1 <= kw["overload_deadline_s"] * (
+        1 + kw["very_heavy_weight"]) + 1e-9

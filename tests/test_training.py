@@ -1,0 +1,125 @@
+"""Optimizer math, grad accumulation, compression (error feedback)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training import compression as C
+from repro.training import optimizer as O
+from repro.training import train_loop as TL
+
+
+def test_adamw_matches_reference_math():
+    """One AdamW step vs a hand-written numpy reference."""
+    cfg = O.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                        weight_decay=0.0, clip_norm=0.0,
+                        warmup_steps=0, total_steps=10,
+                        schedule="constant")
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    state = O.adamw_init(p)
+    new_p, new_state, _ = O.adamw_update(g, state, p, cfg)
+
+    gw = np.asarray([0.1, 0.2, -0.3])
+    m = 0.1 * gw
+    v = 0.01 * gw * gw
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    expect = np.asarray([1.0, -2.0, 3.0]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-6)
+    assert int(new_state.step) == 1
+
+
+def test_weight_decay_is_decoupled():
+    cfg = O.AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=0.0,
+                        warmup_steps=0, schedule="constant")
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    new_p, _, _ = O.adamw_update(g, O.adamw_init(p), p, cfg)
+    # pure decay: w - lr*wd*w
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [2.0 - 0.1 * 0.5 * 2.0], rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), 10.0)}
+    clipped, norm = O.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(800.0))
+    total = O.global_norm(clipped)
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = O.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                        min_lr_frac=0.1)
+    lr0 = float(O.schedule_lr(cfg, jnp.asarray(0)))
+    lr5 = float(O.schedule_lr(cfg, jnp.asarray(5)))
+    lr10 = float(O.schedule_lr(cfg, jnp.asarray(10)))
+    lr_end = float(O.schedule_lr(cfg, jnp.asarray(110)))
+    assert lr0 == 0.0 and lr5 == pytest.approx(0.5)
+    assert lr10 == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_accum_equals_big_batch():
+    """grad_accum=2 over half-batches == one step over the full batch."""
+    key = jax.random.PRNGKey(3)
+    W = jax.random.normal(key, (4, 4))
+    p0 = {"w": W}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    x = jax.random.normal(key, (8, 4))
+    y = jax.random.normal(jax.random.PRNGKey(4), (8, 4))
+    opt = O.AdamWConfig(lr=0.1, warmup_steps=0, clip_norm=0.0,
+                        weight_decay=0.0, schedule="constant")
+    s1 = TL.init_state(p0)
+    step1 = TL.make_train_step(loss_fn, opt, donate=False)
+    s1, m1 = step1(s1, {"x": x, "y": y})
+
+    s2 = TL.init_state(p0)
+    step2 = TL.make_train_step(loss_fn, opt, grad_accum=2, donate=False)
+    stacked = {"x": x.reshape(2, 4, 4), "y": y.reshape(2, 4, 4)}
+    s2, m2 = step2(s2, stacked)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), rtol=1e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4000))
+@settings(max_examples=30, deadline=None)
+def test_compression_error_feedback_bounded(seed, n):
+    """EF residual stays below one quantization step per element."""
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    ef = C.ef_init({"g": g})
+    deq, new_ef, _ = C.compress_decompress({"g": g}, ef)
+    # per-chunk max error <= scale/2 + EF carries it, so |e| <= max|g|/127
+    max_err = float(jnp.max(jnp.abs(new_ef["g"])))
+    assert max_err <= float(jnp.max(jnp.abs(g))) / 127.0 + 1e-6
+
+
+def test_compression_converges_with_error_feedback():
+    """Compressed-gradient SGD tracks exact SGD on a quadratic."""
+    w_exact = np.array(5.0, np.float32)
+    w_comp = np.array(5.0, np.float32)
+    ef = C.ef_init({"g": jnp.zeros(())})
+    lr = 0.3
+    for _ in range(40):
+        g = 2 * w_exact
+        w_exact = w_exact - lr * g
+        gc = {"g": jnp.asarray(2 * w_comp)}
+        deq, ef, _ = C.compress_decompress(gc, ef)
+        w_comp = w_comp - lr * float(deq["g"])
+    assert abs(w_comp) < 1e-2 and abs(w_exact) < 1e-2
+
+
+def test_quantize_dequantize_roundtrip_accuracy():
+    r = np.random.default_rng(0)
+    g = jnp.asarray(r.normal(size=(5000,)).astype(np.float32) * 3)
+    q, s = C._quant_leaf(g)
+    deq = C._dequant_leaf(q, s, g.shape, jnp.float32)
+    rel = float(jnp.max(jnp.abs(deq - g))) / float(jnp.max(jnp.abs(g)))
+    assert rel < 1.0 / 100                 # ~1/127 + rounding
+    assert q.dtype == jnp.int8

@@ -1,0 +1,106 @@
+"""Trust DB cache: unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import average_trust as AT
+from repro.core import trust_cache as TC
+
+
+def test_insert_then_lookup():
+    state = TC.init(64, 4)
+    keys = jnp.asarray([5, 9, 1000, 77], jnp.uint32)
+    vals = jnp.asarray([1.0, 2.0, 3.0, 4.5], jnp.float32)
+    state = TC.insert(state, keys, vals, jnp.ones(4, bool))
+    got, hit = TC.lookup(state, keys)
+    assert bool(jnp.all(hit))
+    assert np.allclose(np.asarray(got), np.asarray(vals))
+
+
+def test_miss_on_absent_keys():
+    state = TC.init(64, 4)
+    state = TC.insert(state, jnp.asarray([5], jnp.uint32),
+                      jnp.asarray([1.0]), jnp.ones(1, bool))
+    _, hit = TC.lookup(state, jnp.asarray([6, 7], jnp.uint32))
+    assert not bool(jnp.any(hit))
+
+
+def test_key_zero_reserved():
+    state = TC.init(64, 4)
+    state = TC.insert(state, jnp.asarray([0], jnp.uint32),
+                      jnp.asarray([9.0]), jnp.ones(1, bool))
+    _, hit = TC.lookup(state, jnp.asarray([0], jnp.uint32))
+    assert not bool(jnp.any(hit))
+
+
+def test_update_existing_key():
+    state = TC.init(64, 2)
+    k = jnp.asarray([42], jnp.uint32)
+    state = TC.insert(state, k, jnp.asarray([1.0]), jnp.ones(1, bool))
+    state = TC.insert(state, k, jnp.asarray([2.0]), jnp.ones(1, bool))
+    got, hit = TC.lookup(state, k)
+    assert bool(hit[0]) and float(got[0]) == 2.0
+    # no duplicate entry created
+    assert int(jnp.sum((state["keys"] == 42).astype(jnp.int32))) == 1
+
+
+def test_masked_insert_is_noop():
+    state = TC.init(64, 2)
+    k = jnp.asarray([42], jnp.uint32)
+    state2 = TC.insert(state, k, jnp.asarray([1.0]),
+                       jnp.zeros(1, bool))
+    _, hit = TC.lookup(state2, k)
+    assert not bool(hit[0])
+
+
+def test_eviction_keeps_capacity_bound():
+    slots, ways = 16, 2
+    state = TC.init(slots, ways)
+    for start in range(0, 512, 64):
+        ks = jnp.arange(start + 1, start + 65, dtype=jnp.uint32)
+        state = TC.insert(state, ks, jnp.ones(64), jnp.ones(64, bool))
+    assert float(TC.occupancy(state)) <= 1.0
+    assert int(jnp.sum((state["keys"] != 0).astype(jnp.int32))) \
+        <= slots * ways
+
+
+@given(st.lists(st.tuples(st.integers(1, 10_000),
+                          st.floats(0.0, 5.0, allow_nan=False)),
+                min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_lookup_returns_last_inserted_value(pairs):
+    """For any insert sequence, a hit returns the latest value written
+    for that key (misses allowed after eviction — but never a stale or
+    wrong-key value)."""
+    state = TC.init(128, 4)
+    latest = {}
+    for k, v in pairs:
+        state = TC.insert(state, jnp.asarray([k], jnp.uint32),
+                          jnp.asarray([v], jnp.float32),
+                          jnp.ones(1, bool))
+        latest[k] = v
+    keys = list(latest)
+    got, hit = TC.lookup(state, jnp.asarray(keys, jnp.uint32))
+    for i, k in enumerate(keys):
+        if bool(hit[i]):
+            assert float(got[i]) == np.float32(latest[k])
+
+
+def test_average_trust_global_mean():
+    state = AT.init(1, init_value=2.5)
+    assert float(AT.query(state, jnp.asarray([0]))[0]) == 2.5
+    vals = jnp.asarray([4.0, 4.0, 4.0])
+    state = AT.update(state, jnp.zeros(3, jnp.int32), vals,
+                      jnp.ones(3, bool), ewma=1.0)
+    assert float(AT.query(state, jnp.asarray([0]))[0]) == 4.0
+
+
+def test_average_trust_per_bucket():
+    state = AT.init(4, init_value=2.5)
+    buckets = jnp.asarray([0, 0, 1], jnp.int32)
+    vals = jnp.asarray([5.0, 5.0, 1.0])
+    state = AT.update(state, buckets, vals, jnp.ones(3, bool), ewma=1.0)
+    got = AT.query(state, jnp.asarray([0, 1, 2], jnp.int32))
+    assert float(got[0]) == 5.0
+    assert float(got[1]) == 1.0
+    assert float(got[2]) == 2.5   # untouched bucket keeps prior
