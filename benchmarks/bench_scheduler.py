@@ -1,0 +1,150 @@
+"""Scheduled engine vs per-request synchronous submit().
+
+Acceptance benchmark for the ``repro.scheduling`` subsystem: the same
+request stream (many small candidate sets — the regime where per-request
+overhead dominates) is pushed through
+
+  * the synchronous path: one ``submit()`` per request — every request
+    pays its own Trust-DB probe, cache insert, prior update, and a
+    partially-filled evaluator chunk;
+  * the scheduled path: ``enqueue`` everything, then ``drain`` — the
+    micro-batcher coalesces requests into budget-shaped batches, so
+    those costs amortize across the batch and evaluator chunks run full.
+
+Both paths use the SAME evaluator, chunk size, and shedder config
+(equal batch budget); the batch bound stays under Ucapacity so neither
+path sheds — equal work, and throughput isolates scheduling overhead.
+Target: >= 2x request throughput for the scheduled path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+D_FEAT = 16
+
+
+def _make_evaluator(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (D_FEAT,))) / np.sqrt(D_FEAT)
+
+    @jax.jit
+    def ev(chunk):
+        return jax.nn.sigmoid(chunk["x"] @ jnp.asarray(w)) * 5.0
+
+    def evaluate(chunk: Dict) -> np.ndarray:
+        return np.asarray(ev({"x": jnp.asarray(chunk["x"])}))
+    return evaluate
+
+
+def _requests(n_requests: int, items_per_req: int, seed: int = 0,
+              key_offset: int = 0) -> List[Tuple]:
+    r = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        base = key_offset + i * 100_000 + 1
+        keys = np.arange(base, base + items_per_req, dtype=np.uint32)
+        buckets = r.integers(0, 64, items_per_req).astype(np.int32)
+        feats = {"x": r.normal(size=(items_per_req, D_FEAT)
+                               ).astype(np.float32)}
+        reqs.append((keys, buckets, feats))
+    return reqs
+
+
+def main(n_requests: int = 192, items_per_req: int = 32,
+         batch_items: int = 2048) -> Dict:
+    if n_requests <= 0 or items_per_req <= 0 or batch_items <= 0:
+        raise SystemExit("bench_scheduler: --n-requests, --items-per-req "
+                         "and --batch-items must be positive")
+    from repro.configs.base import TrustIRConfig
+    from repro.scheduling import SchedulerConfig
+    from repro.serving.engine import ServingEngine
+
+    # Ucapacity above both the per-request size and the batch bound:
+    # every item is fully evaluated on both paths (equal work).
+    cfg = TrustIRConfig(u_capacity=4096, u_threshold=2048,
+                        deadline_s=0.5, overload_deadline_s=1.0,
+                        chunk_size=64, cache_slots=8192)
+    evaluate = _make_evaluator()
+    out: Dict = {"n_requests": n_requests,
+                 "items_per_req": items_per_req,
+                 "batch_items": batch_items}
+
+    # ---- synchronous: one submit() per request ----
+    # One-chunk batch bound: submit() pads each request to a single
+    # evaluator chunk, exactly what the pre-scheduler engine paid —
+    # the baseline must not be taxed with the scheduled path's full
+    # budget-shaped padding.
+    eng = ServingEngine(cfg, evaluate,
+                        sched_cfg=SchedulerConfig(
+                            max_batch_items=cfg.chunk_size))
+    for keys, buckets, feats in _requests(4, items_per_req,
+                                          key_offset=50_000_000):
+        eng.submit(keys, buckets, feats)          # warmup / compile
+    eng.completed.clear()
+    reqs = _requests(n_requests, items_per_req)
+    t0 = time.perf_counter()
+    for keys, buckets, feats in reqs:
+        eng.submit(keys, buckets, feats)
+    wall_sync = time.perf_counter() - t0
+    s = eng.slo_stats()
+    out["sync"] = {"wall_s": wall_sync, "rps": n_requests / wall_sync,
+                   "p50_s": s["p50_s"], "p99_s": s["p99_s"]}
+
+    # ---- scheduled: enqueue all, drain micro-batches ----
+    eng = ServingEngine(cfg, evaluate,
+                        sched_cfg=SchedulerConfig(
+                            max_batch_items=batch_items))
+    for keys, buckets, feats in _requests(4, items_per_req,
+                                          key_offset=50_000_000):
+        eng.enqueue(keys, buckets, feats)
+    eng.drain()                                   # warmup / compile
+    eng.completed.clear()
+    reqs = _requests(n_requests, items_per_req)
+    t0 = time.perf_counter()
+    for keys, buckets, feats in reqs:
+        eng.enqueue(keys, buckets, feats)
+    eng.drain()
+    wall_sched = time.perf_counter() - t0
+    s = eng.slo_stats()
+    st = eng.scheduler_stats()
+    out["sched"] = {"wall_s": wall_sched,
+                    "rps": n_requests / wall_sched,
+                    "p50_s": s["p50_s"], "p99_s": s["p99_s"],
+                    "n_batches": st["n_batches"],
+                    "mean_batch_fill": st["mean_batch_fill"]}
+
+    out["speedup"] = out["sched"]["rps"] / out["sync"]["rps"]
+    out["speedup_ok"] = bool(out["speedup"] >= 2.0)
+
+    print(f"workload: {n_requests} requests x {items_per_req} items "
+          f"(chunk {cfg.chunk_size}, batch bound {batch_items})")
+    for k in ("sync", "sched"):
+        r = out[k]
+        print(f"  {k:>5}: {r['rps']:8.1f} req/s   "
+              f"p50 {r['p50_s'] * 1e3:7.2f} ms   "
+              f"p99 {r['p99_s'] * 1e3:7.2f} ms")
+    print(f"  scheduled/sync throughput = {out['speedup']:.2f}x "
+          f"({'PASS' if out['speedup_ok'] else 'FAIL'}: target >= 2x)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-requests", type=int, default=192)
+    ap.add_argument("--items-per-req", type=int, default=32)
+    ap.add_argument("--batch-items", type=int, default=2048)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = main(args.n_requests, args.items_per_req, args.batch_items)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

@@ -4,6 +4,7 @@ convention, followed by the human-readable sections.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -18,7 +19,8 @@ def _timed(name, fn):
 def main() -> None:
     from benchmarks import (bench_adaptive, bench_heavy_load,
                             bench_response_time, bench_roofline,
-                            bench_throughput, bench_very_heavy_load)
+                            bench_scheduler, bench_throughput,
+                            bench_very_heavy_load)
 
     csv_rows = []
 
@@ -51,6 +53,18 @@ def main() -> None:
     print("=" * 72)
     name, us, rows = _timed("adaptive_control", bench_adaptive.main)
     csv_rows.append((name, us, "PI on extension weight vs static"))
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: priority scheduler vs synchronous submit "
+          "(repro.scheduling)")
+    print("=" * 72)
+    name, us, rows = _timed("scheduler", bench_scheduler.main)
+    csv_rows.append((name, us,
+                     f"{rows['speedup']:.2f}x req throughput vs sync"))
+    with open("BENCH_scheduler.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_scheduler.json")
 
     print()
     print("=" * 72)

@@ -3,8 +3,13 @@ REAL neural trust evaluator under a bursty overload workload.
 
 The engine admits each request through the paper's three-tier ladder; a
 Zipf workload produces occasional "book"-style floods. Reports P50/P99
-latency, SLO attainment, and the answer-tier mix — then repeats the same
-workload against the process-all baseline for contrast.
+latency, SLO attainment, and the answer-tier mix for three systems on
+the same workload:
+
+  * proposed (load shedding) — per-request synchronous submit(),
+  * proposed + scheduler     — priority admission, EDF queues, and
+    cross-request micro-batching (``repro.scheduling``),
+  * existing (process-all)   — the paper's baseline.
 
     PYTHONPATH=src python examples/serve_overload.py [--arch smollm-135m]
 """
@@ -16,6 +21,7 @@ import numpy as np
 
 from repro.configs.base import TrustIRConfig
 from repro.core import ProcessAll, SimClock
+from repro.scheduling import Priority, SchedulerConfig
 from repro.serving.engine import ServingEngine
 from repro.serving.evaluators import make_evaluator
 
@@ -48,28 +54,47 @@ def main():
     r = np.random.default_rng(0)
     sizes = np.clip(r.zipf(1.4, size=args.n_requests) * 64, 64, 4096)
 
-    for label, engine in [
-            ("proposed (load shedding)", ServingEngine(cfg, evaluate)),
+    prios = r.choice([Priority.CRITICAL, Priority.HIGH, Priority.NORMAL,
+                      Priority.LOW], size=args.n_requests,
+                     p=[0.1, 0.2, 0.5, 0.2])
+    slo = cfg.overload_deadline_s * (1 + cfg.very_heavy_weight)
+    for label, engine, scheduled in [
+            ("proposed (load shedding)",
+             ServingEngine(cfg, evaluate), False),
+            ("proposed + scheduler",
+             ServingEngine(cfg, evaluate, sched_cfg=SchedulerConfig()),
+             True),
             ("existing (process-all)",
-             _process_all_engine(cfg, evaluate))]:
+             _process_all_engine(cfg, evaluate), False)]:
         # warm jit paths per request size
         for n in sorted(set(int(s) for s in sizes)):
             engine.shedder.process(
                 np.arange(10**6, 10**6 + n, dtype=np.uint32),
                 np.zeros(n, np.int32), mk(n, fseed=99))
+        # ... and the padded micro-batch shape both paths submit through
+        engine.enqueue(np.arange(10**6, 10**6 + 64, dtype=np.uint32),
+                       np.zeros(64, np.int32), mk(64, fseed=98))
+        engine.drain()
         engine.completed.clear()
         tiers = np.zeros(4, np.int64)
         for i, n in enumerate(sizes):
             n = int(n)
             feats = mk(n, fseed=i)
-            resp = engine.submit(
-                np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
-                          dtype=np.uint32),
-                r.integers(0, 64, n).astype(np.int32), feats,
-                slo_s=cfg.overload_deadline_s
-                * (1 + cfg.very_heavy_weight))
-            binc = np.bincount(resp.tier, minlength=4)
-            tiers += binc
+            keys = np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
+                             dtype=np.uint32)
+            buckets = r.integers(0, 64, n).astype(np.int32)
+            if scheduled:
+                engine.enqueue(keys, buckets, feats, slo_s=slo,
+                               priority=Priority(prios[i]))
+                if (i + 1) % 4 == 0:
+                    engine.drain(max_batches=1)
+            else:
+                resp = engine.submit(keys, buckets, feats, slo_s=slo)
+                tiers += np.bincount(resp.tier, minlength=4)
+        if scheduled:
+            engine.drain()
+            for resp in engine.completed:
+                tiers += np.bincount(resp.tier, minlength=4)
         s = engine.slo_stats()
         print(f"\n[{label}] {s['n']} requests "
               f"(sizes {sizes.min()}..{sizes.max()})")
@@ -78,6 +103,12 @@ def main():
               f"{100 * s['slo_met_frac']:.0f}%")
         print(f"  answers: evaluated {tiers[0]}, cached {tiers[1]}, "
               f"prior {tiers[2]}  (dropped: {tiers[3]})")
+        if scheduled:
+            st = engine.scheduler_stats()
+            print(f"  scheduler: {st['n_batches']} batches, mean fill "
+                  f"{st['mean_batch_fill']:.0f} items, "
+                  f"{st['n_rejected']} rejected "
+                  f"{st['rejected_by_reason']}")
 
 
 def _process_all_engine(cfg, evaluate):

@@ -24,13 +24,15 @@ class ProcessAll(LoadShedder):
     """Existing System [1]: no shedding — evaluate everything."""
 
     def process(self, item_keys: np.ndarray, buckets: np.ndarray,
-                features) -> ShedResult:
+                features, n_valid: Optional[int] = None) -> ShedResult:
         t_start = self._now()
-        n = len(item_keys)
+        n_total = len(item_keys)
+        n = n_total if n_valid is None else int(n_valid)
         ucap, uthr = self.monitor.parameters()
-        idx = np.arange(n)
-        trust = self._eval(features, idx)
-        tier = np.full((n,), TIER_EVAL, np.int32)
+        trust = np.zeros((n_total,), np.float32)
+        tier = np.full((n_total,), TIER_INVALID, np.int32)
+        trust[:n] = self._eval(features, np.arange(n))
+        tier[:n] = TIER_EVAL
         rt = self._now() - t_start
         return ShedResult(trust=trust, tier=tier,
                           regime=classify(n, ucap, uthr),
@@ -47,14 +49,15 @@ class RLSEDA(LoadShedder):
         self._rng = np.random.default_rng(seed)
 
     def process(self, item_keys: np.ndarray, buckets: np.ndarray,
-                features) -> ShedResult:
+                features, n_valid: Optional[int] = None) -> ShedResult:
         t_start = self._now()
-        n = len(item_keys)
+        n_total = len(item_keys)
+        n = n_total if n_valid is None else int(n_valid)
         ucap, uthr = self.monitor.parameters()
         budget = min(n, ucap + uthr)
         keep = np.sort(self._rng.permutation(n)[:budget])
-        trust = np.zeros((n,), np.float32)
-        tier = np.full((n,), TIER_INVALID, np.int32)   # shed == dropped
+        trust = np.zeros((n_total,), np.float32)
+        tier = np.full((n_total,), TIER_INVALID, np.int32)  # shed == dropped
         if len(keep):
             trust[keep] = self._eval(features, keep)
             tier[keep] = TIER_EVAL

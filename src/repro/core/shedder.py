@@ -266,9 +266,20 @@ class LoadShedder:
 
     # -- the algorithm (§5.1 Load_Shedder) ----------------------------------
     def process(self, item_keys: np.ndarray, buckets: np.ndarray,
-                features) -> ShedResult:
+                features, n_valid: Optional[int] = None) -> ShedResult:
+        """Shed one (possibly padded) batch.
+
+        ``n_valid`` marks the valid prefix of a padded batch (the
+        scheduler's micro-batches keep array shapes static across
+        drains so device ops hit their executable caches instead of
+        recompiling per batch size). Items past ``n_valid`` are padding:
+        excluded from Uload, tiered ``TIER_INVALID``, and masked out of
+        the Trust-DB / prior fold-back. Default: the whole batch is
+        valid (the original per-request behavior).
+        """
         t_start = self._now()
-        n = len(item_keys)
+        n_total = len(item_keys)
+        n = n_total if n_valid is None else int(n_valid)
         ucap, uthr = self.monitor.parameters()
         regime = classify(n, ucap, uthr)
         deadline_eff = effective_deadline(
@@ -284,8 +295,9 @@ class LoadShedder:
         cached_vals = np.asarray(cached_vals)
         hit = np.asarray(hit)
 
-        trust = np.zeros((n,), np.float32)
-        tier = np.full((n,), TIER_PRIOR, np.int32)
+        trust = np.zeros((n_total,), np.float32)
+        tier = np.full((n_total,), TIER_INVALID, np.int32)
+        tier[:n] = TIER_PRIOR
 
         # ---- Normal Queue (§5.2): first Ucapacity items ----
         n_normal = min(n, ucap)
@@ -301,10 +313,10 @@ class LoadShedder:
         # ---- Drop Queue (§5.3 / §5.4) ----
         if n > n_normal:
             dq = np.arange(n_normal, n)
-            dq_hit = dq[hit[n_normal:]]
+            dq_hit = dq[hit[n_normal:n]]
             trust[dq_hit] = cached_vals[dq_hit]
             tier[dq_hit] = TIER_CACHED
-            dq_eval_cand = dq[~hit[n_normal:]]
+            dq_eval_cand = dq[~hit[n_normal:n]]
             # Evaluate until the (extended) deadline. Chunk-granular
             # adaptation of §5.3's per-URL clock check: only start a chunk
             # if its estimated completion still fits within the deadline.

@@ -14,13 +14,37 @@ from jax.sharding import PartitionSpec as P
 
 
 def ambient_mesh():
-    try:
+    try:                                  # jax >= 0.5: jax.set_mesh
         m = jax.sharding.get_abstract_mesh()
+        if m is not None and not getattr(m, "empty", True):
+            return m
     except Exception:
-        return None
-    if m is None or getattr(m, "empty", True):
-        return None
-    return m
+        pass
+    try:                                  # jax 0.4.x: `with mesh:` context
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if m is not None and not getattr(m, "empty", True):
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def use_mesh(mesh):
+    """Version-portable ambient-mesh context: ``jax.set_mesh`` on new
+    jax, the classic ``with mesh:`` resource context on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map (replication checks off on both)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def axis_in_mesh(name: str) -> bool:

@@ -2,9 +2,12 @@
 
 Boots a ServingEngine with the chosen trust-evaluator backbone, calibrates
 Ucapacity/Uthreshold to the measured evaluator throughput (the Load
-Monitor's job, §4), and serves a synthetic request stream — printing
-per-request regime/tier decisions and the SLO scoreboard. ``--adaptive``
-enables the §7 adaptive Very-Heavy controller.
+Monitor's job, §4), and serves a synthetic request stream through the
+priority scheduler (``repro.scheduling``): requests arrive with a
+CRITICAL/HIGH/NORMAL/LOW mix, are admitted per-regime, queue EDF, and
+drain as budget-shaped micro-batches. ``--sync`` restores the original
+per-request synchronous path; ``--adaptive`` enables the §7 adaptive
+Very-Heavy controller.
 """
 from __future__ import annotations
 
@@ -22,12 +25,17 @@ def main() -> int:
     p.add_argument("--deadline-ms", type=float, default=50.0)
     p.add_argument("--overload-deadline-ms", type=float, default=100.0)
     p.add_argument("--adaptive", action="store_true")
+    p.add_argument("--sync", action="store_true",
+                   help="per-request synchronous submit() path")
+    p.add_argument("--drain-every", type=int, default=4,
+                   help="drain a micro-batch every N enqueues")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
     import jax.numpy as jnp
     from repro.configs.base import TrustIRConfig
     from repro.core.adaptive import AdaptiveWeightController
+    from repro.scheduling import Priority
     from repro.serving.engine import ServingEngine
     from repro.serving.evaluators import make_evaluator
 
@@ -51,7 +59,8 @@ def main() -> int:
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
           f"(overload {odl * 1e3:.0f}ms)"
-          + (" [adaptive]" if args.adaptive else ""))
+          + (" [adaptive]" if args.adaptive else "")
+          + (" [sync]" if args.sync else " [scheduled]"))
 
     eng = ServingEngine(cfg, evaluate)
     if args.adaptive:
@@ -59,22 +68,54 @@ def main() -> int:
 
     r = np.random.default_rng(args.seed)
     sizes = np.clip(r.zipf(1.4, size=args.n_requests) * 64, 64, 4096)
+    # Priority mix: mostly NORMAL, some HIGH/CRITICAL, a LOW tail.
+    prio_choices = [Priority.CRITICAL, Priority.HIGH, Priority.NORMAL,
+                    Priority.LOW]
+    prios = r.choice(4, size=args.n_requests, p=[0.1, 0.2, 0.5, 0.2])
     for n in sorted(set(int(s) for s in sizes)):   # warm jit per size
         eng.shedder.process(np.arange(10**6, 10**6 + n, dtype=np.uint32),
                             np.zeros(n, np.int32), mk(n, fseed=999))
+    # ... and the padded micro-batch shape the submit/drain path uses
+    eng.enqueue(np.arange(1, 65, dtype=np.uint32),
+                np.zeros(64, np.int32), mk(64, fseed=998))
+    eng.drain()
     eng.completed.clear()
 
     for i, n in enumerate(int(s) for s in sizes):
-        resp = eng.submit(
-            np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
-                      dtype=np.uint32),
-            r.integers(0, 64, n).astype(np.int32), mk(n, fseed=i),
-            slo_s=odl * 2.5)
-        s = resp.shed
-        print(f"  req {i:>3} n={n:<5} {s.regime.name:<11} "
-              f"{resp.latency_s * 1e3:7.1f} ms  eval {s.n_evaluated:>5} "
-              f"cached {s.n_cached:>5} prior {s.n_prior:>5} "
-              f"{'SLO ok' if resp.met_slo else 'SLO MISS'}")
+        prio = prio_choices[int(prios[i])]
+        keys = np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
+                         dtype=np.uint32)
+        buckets = r.integers(0, 64, n).astype(np.int32)
+        if args.sync:
+            resp = eng.submit(keys, buckets, mk(n, fseed=i),
+                              slo_s=odl * 2.5, priority=prio)
+            s = resp.shed
+            print(f"  req {i:>3} n={n:<5} {prio.name:<9} "
+                  f"{s.regime.name:<11} {resp.latency_s * 1e3:7.1f} ms  "
+                  f"eval {s.n_evaluated:>5} cached {s.n_cached:>5} "
+                  f"prior {s.n_prior:>5} "
+                  f"{'SLO ok' if resp.met_slo else 'SLO MISS'}")
+        else:
+            eng.enqueue(keys, buckets, mk(n, fseed=i), slo_s=odl * 2.5,
+                        priority=prio)
+            if (i + 1) % args.drain_every == 0:
+                eng.drain(max_batches=1)
+    if not args.sync:
+        eng.drain()
+        for resp in eng.completed:
+            s = resp.shed
+            flag = ("REJECTED " + resp.reason if not resp.admitted
+                    else ("SLO ok" if resp.met_slo else "SLO MISS"))
+            print(f"  req {resp.request_id:>3} n={len(resp.trust):<5} "
+                  f"{resp.priority.name:<9} {s.regime.name:<11} "
+                  f"{resp.latency_s * 1e3:7.1f} ms  "
+                  f"eval {s.n_evaluated:>5} cached {s.n_cached:>5} "
+                  f"prior {s.n_prior:>5} {flag}")
+        st = eng.scheduler_stats()
+        print(f"scheduler: {st['n_batches']} batches, mean fill "
+              f"{st['mean_batch_fill']:.0f} items, "
+              f"{st['n_rejected']} rejected {st['rejected_by_reason']}, "
+              f"{st['n_hedges']} hedges")
     board = eng.slo_stats()
     print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "

@@ -214,8 +214,10 @@ def moe_apply_ep(p: Dict, x: jnp.ndarray, cfg: MoEConfig, *,
             compute_dtype=compute_dtype)
         return jax.lax.psum(partial, "model")
 
+    from repro.distribution.constraints import shard_map
+
     tok_spec = P(dp, None)
-    out = jax.shard_map(
+    out = shard_map(
         ep_region, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec,
                   P("model", None, None), P("model", None, None),

@@ -1,0 +1,53 @@
+"""Priority-aware admission & scheduling in front of the Load Shedder.
+
+Request lifecycle (who owns each hop):
+
+    arrive   ServingEngine.enqueue          stamp arrival + SLO deadline
+       |
+    admit    scheduling.priorities          per-regime priority ladder
+             scheduling.ratelimit           per-tenant token buckets
+       |                                    (reject => explicit Response
+       |                                     from the average-trust
+       |                                     prior, admitted=False)
+    queue    scheduling.queues              EDF within class, strict
+       |                                    priority across classes,
+       |                                    static-capacity backpressure
+    batch    scheduling.batcher             coalesce queued candidate
+       |                                    sets into one padded,
+       |                                    budget-shaped micro-batch
+    shed     core.shedder                   ONE three-regime shedding
+       |                                    decision per micro-batch
+       |                                    (EVAL / CACHED / PRIOR tiers)
+    respond  scheduling.scheduler.drain     split per-request Responses;
+                                            hedged re-dispatch via
+                                            distribution.fault_tolerance
+
+No *admitted* request is ever dropped: every item leaves with a trust
+value (paper §5 invariant, preserved across the batching layer), and
+every rejection is an observable ``Response`` with a reason — never
+silence.
+"""
+from repro.scheduling.batcher import (MicroBatch, MicroBatcher,
+                                      to_fused_inputs)
+from repro.scheduling.priorities import (AdmissionPolicy, Priority,
+                                         REASON_QUEUE_FULL,
+                                         REASON_RATE_LIMITED,
+                                         REASON_SHED_LOW_HEAVY,
+                                         REASON_SHED_LOW_VERY_HEAVY,
+                                         REASON_SHED_NORMAL_VERY_HEAVY)
+from repro.scheduling.queues import (EDFQueue, PriorityQueueBank,
+                                     QueuedRequest)
+from repro.scheduling.ratelimit import TenantRateLimiter, TokenBucket
+from repro.scheduling.scheduler import (Request, Response, Scheduler,
+                                        SchedulerConfig, SchedulerStats)
+
+__all__ = [
+    "AdmissionPolicy", "Priority",
+    "REASON_QUEUE_FULL", "REASON_RATE_LIMITED", "REASON_SHED_LOW_HEAVY",
+    "REASON_SHED_LOW_VERY_HEAVY", "REASON_SHED_NORMAL_VERY_HEAVY",
+    "EDFQueue", "PriorityQueueBank", "QueuedRequest",
+    "TenantRateLimiter", "TokenBucket",
+    "MicroBatch", "MicroBatcher", "to_fused_inputs",
+    "Request", "Response", "Scheduler", "SchedulerConfig",
+    "SchedulerStats",
+]

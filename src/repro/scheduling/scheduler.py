@@ -1,0 +1,280 @@
+"""The scheduling event loop: admit -> enqueue -> drain micro-batches.
+
+Ties the subsystem together in front of the Load Shedder:
+
+  1. **Admit** (``submit``): classify the *offered* load (queued items +
+     incoming candidates) into the paper's three regimes and apply the
+     per-regime priority ladder (``priorities.AdmissionPolicy``) plus
+     per-tenant token buckets (``ratelimit``). Rejections return an
+     explicit ``Response`` answered from the average-trust prior —
+     ``admitted=False``, machine-readable ``reason`` — never a silent
+     drop.
+  2. **Enqueue**: admitted requests enter per-priority EDF queues with
+     static-capacity backpressure (``queues``).
+  3. **Drain** (``drain``): the batcher coalesces queued requests into
+     padded, budget-shaped micro-batches (``batcher``) and each batch
+     runs through ``LoadShedder.process`` as ONE shedding decision under
+     the effective deadline; per-request responses are split back out.
+     Requests that have waited past the hedge latency are re-dispatched
+     at CRITICAL priority via ``distribution.fault_tolerance
+     .HedgedDispatch`` (first completion wins, twin is deduplicated).
+
+The paper's no-drop invariant survives end to end: every *admitted*
+request leaves ``drain`` with a trust value per item (property-tested
+under all three regimes in ``tests/test_scheduling.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import TrustIRConfig
+from repro.core.regimes import Regime, classify
+from repro.core.shedder import (LoadShedder, ShedResult, TIER_CACHED,
+                                TIER_EVAL, TIER_PRIOR)
+from repro.distribution.fault_tolerance import HedgedDispatch
+from repro.scheduling.batcher import MicroBatch, MicroBatcher
+from repro.scheduling.priorities import (AdmissionPolicy, Priority,
+                                         REASON_QUEUE_FULL,
+                                         REASON_RATE_LIMITED)
+from repro.scheduling.queues import PriorityQueueBank, QueuedRequest
+from repro.scheduling.ratelimit import TenantRateLimiter
+
+
+@dataclass
+class Request:
+    request_id: int
+    item_keys: np.ndarray
+    buckets: np.ndarray
+    features: Dict[str, np.ndarray]
+    arrival_s: float
+    slo_s: float
+
+
+@dataclass
+class Response:
+    request_id: int
+    trust: np.ndarray
+    tier: np.ndarray
+    latency_s: float
+    met_slo: bool
+    shed: ShedResult
+    priority: Priority = Priority.NORMAL
+    admitted: bool = True
+    reason: str = ""                 # rejection reason when not admitted
+    queue_delay_s: float = 0.0
+    hedged: bool = False
+
+
+@dataclass
+class SchedulerConfig:
+    # Items per micro-batch; 0 derives Ucapacity + Uthreshold rounded up
+    # to the evaluator chunk size (the budget `shed_plan` shapes to).
+    max_batch_items: int = 0
+    queue_capacity_requests: int = 1024      # per priority class
+    low_watermark: float = 0.5
+    normal_watermark: float = 0.9
+    tenant_rate_items_per_s: float = float("inf")
+    tenant_burst_items: float = float("inf")
+    hedge_after_s: float = 0.0               # 0 disables hedging
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // max(mult, 1)) * max(mult, 1)
+
+
+@dataclass
+class SchedulerStats:
+    n_submitted: int = 0
+    n_admitted: int = 0
+    n_rejected: int = 0
+    rejected_by_reason: Dict[str, int] = field(default_factory=dict)
+    n_batches: int = 0
+    n_batched_items: int = 0
+    n_hedges: int = 0
+
+    def as_dict(self) -> Dict:
+        return {"n_submitted": self.n_submitted,
+                "n_admitted": self.n_admitted,
+                "n_rejected": self.n_rejected,
+                "rejected_by_reason": dict(self.rejected_by_reason),
+                "n_batches": self.n_batches,
+                "n_batched_items": self.n_batched_items,
+                "n_hedges": self.n_hedges,
+                "mean_batch_fill": (self.n_batched_items
+                                    / max(self.n_batches, 1))}
+
+
+class Scheduler:
+    """Priority-aware admission + EDF queueing + micro-batched shedding.
+
+    ``now`` is the clock (``time.monotonic`` or a ``SimClock.now``
+    bound method) — shared with the shedder so queue delays and shed
+    response times add up on one timeline.
+    """
+
+    def __init__(self, cfg: TrustIRConfig, shedder: LoadShedder,
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 now: Optional[Callable[[], float]] = None):
+        self.cfg = cfg
+        self.shedder = shedder
+        self.sched_cfg = sched_cfg or SchedulerConfig()
+        self._now = now or shedder._now
+        self.policy = AdmissionPolicy(
+            low_watermark=self.sched_cfg.low_watermark,
+            normal_watermark=self.sched_cfg.normal_watermark)
+        self.bank = PriorityQueueBank(
+            self.sched_cfg.queue_capacity_requests)
+        self.limiter = TenantRateLimiter(
+            self.sched_cfg.tenant_rate_items_per_s,
+            self.sched_cfg.tenant_burst_items)
+        self.max_batch_items = self.sched_cfg.max_batch_items or \
+            _round_up(cfg.u_capacity + cfg.u_threshold, cfg.chunk_size)
+        self.batcher = MicroBatcher(self.max_batch_items)
+        self.hedge = (HedgedDispatch(self.sched_cfg.hedge_after_s)
+                      if self.sched_cfg.hedge_after_s > 0 else None)
+        self.stats = SchedulerStats()
+        self._answered: set = set()   # rids whose hedged twin is queued
+
+    # -- admission ----------------------------------------------------------
+    @property
+    def queued_items(self) -> int:
+        return self.bank.n_items
+
+    def offered_regime(self, incoming_items: int = 0) -> Regime:
+        ucap, uthr = self.shedder.monitor.parameters()
+        return classify(self.bank.n_items + incoming_items, ucap, uthr)
+
+    def submit(self, request: Request,
+               priority: Priority = Priority.NORMAL,
+               tenant: str = "default") -> Optional[Response]:
+        """Admit or reject ``request``. Returns ``None`` when the request
+        was queued, or the explicit rejection ``Response`` otherwise."""
+        self.stats.n_submitted += 1
+        now = self._now()
+        n = len(request.item_keys)
+        regime = self.offered_regime(n)
+        reason = self.policy.decide(priority, regime,
+                                    self.bank.fill_frac(priority))
+        if reason is None and \
+                len(self.bank.queues[priority]) >= \
+                self.bank.queues[priority].capacity:
+            reason = REASON_QUEUE_FULL
+        if reason is None and priority is not Priority.CRITICAL \
+                and not self.limiter.allow(tenant, n, now):
+            # Checked last (after the shed ladder AND backpressure) so
+            # tokens are only consumed by requests that actually enter
+            # the queue.
+            reason = REASON_RATE_LIMITED
+        if reason is None:
+            qreq = QueuedRequest(request=request, priority=priority,
+                                 tenant=tenant,
+                                 deadline_t=request.arrival_s
+                                 + request.slo_s,
+                                 enqueue_t=now)
+            admitted = self.bank.push(qreq)
+            assert admitted          # capacity checked above
+            self.stats.n_admitted += 1
+            return None
+        self.stats.n_rejected += 1
+        self.stats.rejected_by_reason[reason] = \
+            self.stats.rejected_by_reason.get(reason, 0) + 1
+        return self._reject(request, priority, regime, reason)
+
+    def _reject(self, request: Request, priority: Priority,
+                regime: Regime, reason: str) -> Response:
+        """Explicit rejection: answered from the average-trust prior (the
+        shedder's own fallback tier), so even shed traffic leaves with a
+        trust value per item."""
+        n = len(request.item_keys)
+        means = np.asarray(self.shedder.prior["mean"])
+        trust = means[np.asarray(request.buckets) % len(means)
+                      ].astype(np.float32)
+        tier = np.full((n,), TIER_PRIOR, np.int32)
+        shed = ShedResult(trust=trust, tier=tier, regime=regime,
+                          response_time_s=0.0, deadline_eff_s=0.0,
+                          n_evaluated=0, n_cached=0, n_prior=n, uload=n)
+        latency = max(self._now() - request.arrival_s, 0.0)
+        return Response(request_id=request.request_id, trust=trust,
+                        tier=tier, latency_s=latency,
+                        met_slo=latency <= request.slo_s + 1e-9,
+                        shed=shed, priority=priority, admitted=False,
+                        reason=reason)
+
+    # -- hedging ------------------------------------------------------------
+    def _hedge_scan(self) -> None:
+        """Re-dispatch long-waiting non-CRITICAL requests at CRITICAL
+        priority (first completion wins; twin deduplicated in
+        ``_execute``)."""
+        now = self._now()
+        crit = self.bank.queues[Priority.CRITICAL]
+        for p in (Priority.HIGH, Priority.NORMAL, Priority.LOW):
+            for qreq in self.bank.queues[p].entries():
+                if self.hedge.should_hedge(now - qreq.enqueue_t,
+                                           qreq.hedged):
+                    # Pushed straight into the CRITICAL queue but keeps
+                    # its original priority for response accounting.
+                    twin = QueuedRequest(
+                        request=qreq.request, priority=qreq.priority,
+                        tenant=qreq.tenant, deadline_t=qreq.deadline_t,
+                        enqueue_t=qreq.enqueue_t, hedged=True)
+                    if crit.push(twin):
+                        qreq.hedged = True
+                        self.stats.n_hedges += 1
+
+    # -- drain --------------------------------------------------------------
+    def drain(self, max_batches: Optional[int] = None) -> List[Response]:
+        """Form and execute micro-batches until the queues are empty (or
+        ``max_batches`` is reached)."""
+        out: List[Response] = []
+        n_done = 0
+        while max_batches is None or n_done < max_batches:
+            if self.hedge is not None:
+                self._hedge_scan()
+            batch = self.batcher.form(self.bank)
+            if batch is None:
+                break
+            out.extend(self._execute(batch))
+            n_done += 1
+        return out
+
+    def _execute(self, batch: MicroBatch) -> List[Response]:
+        # Full padded arrays + n_valid: shapes stay static across drains
+        # so device ops reuse cached executables instead of recompiling
+        # per batch fill level.
+        nv = batch.n_valid
+        shed = self.shedder.process(batch.item_keys, batch.buckets,
+                                    batch.features, n_valid=nv)
+        end = self._now()
+        batch_start = end - shed.response_time_s
+        self.stats.n_batches += 1
+        self.stats.n_batched_items += nv
+        responses: List[Response] = []
+        for qreq, s, ln in batch.slices:
+            rid = qreq.request.request_id
+            if rid in self._answered:       # hedged twin already served
+                self._answered.discard(rid)
+                continue
+            tier = shed.tier[s:s + ln]
+            sub = ShedResult(
+                trust=shed.trust[s:s + ln], tier=tier,
+                regime=shed.regime,
+                response_time_s=shed.response_time_s,
+                deadline_eff_s=shed.deadline_eff_s,
+                n_evaluated=int((tier == TIER_EVAL).sum()),
+                n_cached=int((tier == TIER_CACHED).sum()),
+                n_prior=int((tier == TIER_PRIOR).sum()),
+                uload=shed.uload)
+            latency = end - qreq.request.arrival_s
+            responses.append(Response(
+                request_id=rid, trust=sub.trust, tier=tier,
+                latency_s=latency,
+                met_slo=latency <= qreq.request.slo_s + 1e-9,
+                shed=sub, priority=qreq.priority,
+                queue_delay_s=max(batch_start - qreq.enqueue_t, 0.0),
+                hedged=qreq.hedged))
+            if qreq.hedged:
+                self._answered.add(rid)     # skip the queued twin later
+        return responses

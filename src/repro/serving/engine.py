@@ -1,20 +1,33 @@
-"""Batched serving engine with the Load Shedder as admission controller.
+"""Batched serving engine: priority scheduler + Load Shedder admission.
 
-Request lifecycle: arrive -> admission (the paper's three-tier ladder
-decides EVAL / CACHED / PRIOR per candidate batch) -> batched evaluation
-under the deadline -> response. LM decode requests additionally claim KV
-slots (continuous batching via ``KVCachePool``).
+Request lifecycle: arrive -> admit (``repro.scheduling`` priority ladder
++ per-tenant rate limits) -> EDF queue -> micro-batch -> shed (the
+paper's three-tier ladder decides EVAL / CACHED / PRIOR per coalesced
+batch) -> response. LM decode requests additionally claim KV slots
+(continuous batching via ``KVCachePool``).
 
 The engine is the production face of ``core.shedder``: it owns the
 monitor (throughput EWMA), the Trust DB cache and the prior state, and
 exposes per-request SLO accounting for straggler/hedging policies
 (``distribution.fault_tolerance``).
+
+API:
+  * ``enqueue(...) -> request_id`` then ``drain() -> [Response]`` — the
+    scheduled path: requests coalesce into budget-shaped micro-batches
+    (one Trust-DB probe / insert / prior update and full evaluator
+    chunks per *batch* instead of per request).
+  * ``submit(...) -> Response`` — compat shim for the original
+    synchronous API: enqueue + drain, returns this request's response.
+
+Rejected requests (LOW priority under pressure, rate-limited tenants,
+queue backpressure) complete immediately with an explicit
+``admitted=False`` response answered from the average-trust prior —
+the no-drop invariant extends to the admission layer.
 """
 from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -22,68 +35,106 @@ import numpy as np
 from repro.configs.base import TrustIRConfig
 from repro.core.load_monitor import LoadMonitor
 from repro.core.shedder import LoadShedder, ShedResult, SimClock
+from repro.scheduling import (Priority, Request, Response, Scheduler,
+                              SchedulerConfig)
 
-
-@dataclass
-class Request:
-    request_id: int
-    item_keys: np.ndarray
-    buckets: np.ndarray
-    features: Dict[str, np.ndarray]
-    arrival_s: float
-    slo_s: float
-
-
-@dataclass
-class Response:
-    request_id: int
-    trust: np.ndarray
-    tier: np.ndarray
-    latency_s: float
-    met_slo: bool
-    shed: ShedResult
+__all__ = ["Request", "Response", "ServingEngine"]
 
 
 class ServingEngine:
     def __init__(self, cfg: TrustIRConfig, evaluate_chunk: Callable,
-                 sim_clock: Optional[SimClock] = None):
+                 sim_clock: Optional[SimClock] = None,
+                 sched_cfg: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.monitor = LoadMonitor(cfg)
-        self.shedder = LoadShedder(cfg, evaluate_chunk,
-                                   monitor=self.monitor,
-                                   sim_clock=sim_clock)
+        shedder = LoadShedder(cfg, evaluate_chunk,
+                              monitor=self.monitor,
+                              sim_clock=sim_clock)
         self.sim_clock = sim_clock
+        self.scheduler = Scheduler(cfg, shedder,
+                                   sched_cfg or SchedulerConfig(),
+                                   now=self._now)
         self._ids = itertools.count()
         self.completed: List[Response] = []
+
+    # The scheduler executes whatever shedder the engine carries, so the
+    # two references stay one (baseline drivers swap in ProcessAll/RLSEDA
+    # by assigning ``engine.shedder``).
+    @property
+    def shedder(self) -> LoadShedder:
+        return self.scheduler.shedder
+
+    @shedder.setter
+    def shedder(self, s: LoadShedder) -> None:
+        self.scheduler.shedder = s
 
     def _now(self) -> float:
         return (self.sim_clock.now() if self.sim_clock
                 else time.monotonic())
 
-    def submit(self, item_keys: np.ndarray, buckets: np.ndarray,
-               features: Dict[str, np.ndarray],
-               slo_s: Optional[float] = None) -> Response:
+    # -- scheduled API ------------------------------------------------------
+    def enqueue(self, item_keys: np.ndarray, buckets: np.ndarray,
+                features: Dict[str, np.ndarray],
+                slo_s: Optional[float] = None,
+                priority: Priority = Priority.NORMAL,
+                tenant: str = "default") -> int:
+        """Admit a request into the scheduler; returns its request id.
+
+        A rejected request completes immediately (its explicit response
+        lands in ``self.completed``); an admitted one completes on a
+        subsequent ``drain``.
+        """
         rid = next(self._ids)
+        # NOTE: an explicit slo_s=0.0 is honored (`or` would silently
+        # replace it with the config default).
         req = Request(rid, item_keys, buckets, features,
                       arrival_s=self._now(),
-                      slo_s=slo_s or self.cfg.overload_deadline_s)
-        shed = self.shedder.process(req.item_keys, req.buckets,
-                                    req.features)
-        latency = self._now() - req.arrival_s
-        resp = Response(request_id=rid, trust=shed.trust, tier=shed.tier,
-                        latency_s=latency,
-                        met_slo=latency <= req.slo_s + 1e-9, shed=shed)
-        self.completed.append(resp)
-        return resp
+                      slo_s=(self.cfg.overload_deadline_s
+                             if slo_s is None else slo_s))
+        rejection = self.scheduler.submit(req, priority=priority,
+                                          tenant=tenant)
+        if rejection is not None:
+            self.completed.append(rejection)
+        return rid
 
+    def drain(self, max_batches: Optional[int] = None) -> List[Response]:
+        """Drain queued micro-batches; returns the responses produced."""
+        out = self.scheduler.drain(max_batches)
+        self.completed.extend(out)
+        return out
+
+    # -- compat shim (original synchronous API) -----------------------------
+    def submit(self, item_keys: np.ndarray, buckets: np.ndarray,
+               features: Dict[str, np.ndarray],
+               slo_s: Optional[float] = None,
+               priority: Priority = Priority.NORMAL,
+               tenant: str = "default") -> Response:
+        """Enqueue + drain; returns this request's response."""
+        rid = self.enqueue(item_keys, buckets, features, slo_s=slo_s,
+                           priority=priority, tenant=tenant)
+        self.drain()
+        for resp in reversed(self.completed):
+            if resp.request_id == rid:
+                return resp
+        raise RuntimeError(            # pragma: no cover — no-drop invariant
+            f"request {rid} produced no response")
+
+    # -- observability ------------------------------------------------------
     def slo_stats(self) -> Dict[str, float]:
-        if not self.completed:
-            return {"n": 0}
-        lat = np.asarray([r.latency_s for r in self.completed])
+        admitted = [r for r in self.completed if r.admitted]
+        if not admitted:
+            return {"n": 0, "n_rejected": len(self.completed),
+                    "p50_s": float("nan"), "p99_s": float("nan"),
+                    "slo_met_frac": float("nan")}
+        lat = np.asarray([r.latency_s for r in admitted])
         return {
-            "n": len(self.completed),
+            "n": len(admitted),
+            "n_rejected": len(self.completed) - len(admitted),
             "p50_s": float(np.percentile(lat, 50)),
             "p99_s": float(np.percentile(lat, 99)),
             "slo_met_frac": float(np.mean([r.met_slo
-                                           for r in self.completed])),
+                                           for r in admitted])),
         }
+
+    def scheduler_stats(self) -> Dict:
+        return self.scheduler.stats.as_dict()

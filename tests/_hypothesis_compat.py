@@ -1,0 +1,123 @@
+"""``hypothesis`` shim: real library when installed, mini-runner otherwise.
+
+The property tests depend on ``hypothesis`` (declared as a test extra in
+``pyproject.toml``). Some environments — notably the hermetic container the
+tier-1 suite runs in — cannot install it, and an unconditional import used
+to break *collection* of five whole test modules. This module keeps the
+suite collectable and the properties exercised either way:
+
+* with ``hypothesis`` installed, re-exports the real ``given`` /
+  ``settings`` / ``strategies`` untouched (shrinking, the example
+  database, ``--hypothesis-*`` flags all work);
+* without it, provides a deterministic random-sampling fallback covering
+  exactly the strategy surface the suite uses (``integers``, ``floats``,
+  ``lists``, ``tuples``, ``sampled_from``, ``booleans``, ``composite``).
+  Examples are drawn from a seed derived from the test name, so failures
+  reproduce run-to-run; there is no shrinking.
+
+Test modules import from here instead of ``hypothesis`` directly:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # fallback mini-runner
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    # Sampling-only stand-in runs fewer examples than real hypothesis
+    # would; enough to exercise the invariants without shrinking support.
+    _MAX_EXAMPLES_CAP = 25
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=None,
+                   allow_infinity=None, width=64):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s._draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = (min_size + 16) if max_size is None else max_size
+
+            def draw(rng):
+                k = int(rng.integers(min_size, hi + 1))
+                return [elements._draw(rng) for _ in range(k)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            @functools.wraps(fn)
+            def make(*args, **kwargs):
+                def draw_composite(rng):
+                    return fn(lambda s: s._draw(rng), *args, **kwargs)
+                return _Strategy(draw_composite)
+            return make
+
+    st = _strategies()
+
+    def settings(max_examples=100, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies_pos, **strategies_kw):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = min(getattr(runner, "_compat_max_examples", 100),
+                        _MAX_EXAMPLES_CAP)
+                # Stable per-test seed: failures reproduce across runs.
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    pos = tuple(s._draw(rng) for s in strategies_pos)
+                    kw = {k: s._draw(rng)
+                          for k, s in strategies_kw.items()}
+                    try:
+                        fn(*args, *pos, **kw, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i}: args={pos} "
+                            f"kwargs={kw}") from e
+            # settings() may be applied either inside (attr copied by
+            # functools.wraps) or outside (attr set on `runner`).
+            # pytest must not mistake the drawn parameters for fixtures:
+            # hide the wrapped signature.
+            runner.__signature__ = inspect.Signature()
+            del runner.__wrapped__
+            return runner
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

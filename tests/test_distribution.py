@@ -143,9 +143,10 @@ def test_compressed_pod_mean_subprocess():
         mesh = jax.make_mesh((8,), ("pod",))
         x = jnp.asarray(np.random.default_rng(0).normal(
             size=(8, 1024)).astype(np.float32))
-        f = jax.shard_map(lambda a: compressed_pod_mean(a[0], "pod"),
-                          mesh=mesh, in_specs=P("pod", None),
-                          out_specs=P(), check_vma=False)
+        from repro.distribution.constraints import shard_map
+        f = shard_map(lambda a: compressed_pod_mean(a[0], "pod"),
+                      mesh=mesh, in_specs=P("pod", None),
+                      out_specs=P())
         got = f(x)
         exact = x.mean(0)
         rel = float(jnp.max(jnp.abs(got - exact)))

@@ -16,6 +16,7 @@ def test_ep_moe_matches_dense_scatter():
         from jax.sharding import PartitionSpec as P
         from repro.configs.base import MoEConfig
         from repro.models import moe as MO
+        from repro.distribution.constraints import use_mesh
 
         cfg = MoEConfig(n_experts=8, top_k=2, d_expert=32,
                         capacity_factor=8.0, dispatch="dense_scatter")
@@ -26,23 +27,25 @@ def test_ep_moe_matches_dense_scatter():
         ref, m_ref = MO.moe_apply(p, x, cfg, compute_dtype=jnp.float32)
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        from jax.sharding import NamedSharding
+        S = lambda *spec: NamedSharding(mesh, P(*spec))
+        with use_mesh(mesh):
             ep = jax.jit(lambda p, x: MO.moe_apply_ep(
                 p, x, cfg, compute_dtype=jnp.float32)[0],
-                in_shardings=(None, P("data", None)),
-                out_shardings=P("data", None))(p, x)
+                in_shardings=(S(), S("data", None)),
+                out_shardings=S("data", None))(p, x)
         err = float(jnp.max(jnp.abs(ref - ep)))
         assert err < 1e-4, err
         # gradient parity through the EP region
         def loss_ep(p):
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 out = jax.jit(lambda p: MO.moe_apply_ep(
                     p, x, cfg, compute_dtype=jnp.float32)[0])(p)
             return jnp.sum(out ** 2)
         def loss_ref(p):
             return jnp.sum(MO.moe_apply(p, x, cfg,
                                         compute_dtype=jnp.float32)[0] ** 2)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             g_ep = jax.jit(jax.grad(lambda p: jnp.sum(MO.moe_apply_ep(
                 p, x, cfg, compute_dtype=jnp.float32)[0] ** 2)))(p)
         g_ref = jax.grad(loss_ref)(p)

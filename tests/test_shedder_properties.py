@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) for the shedding plan invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (TIER_CACHED, TIER_EVAL, TIER_INVALID, TIER_PRIOR,
                         Regime, classify, classify_jnp, effective_deadline,

@@ -1,7 +1,7 @@
 """Trust DB cache: unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import average_trust as AT
 from repro.core import trust_cache as TC
