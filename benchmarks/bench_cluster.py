@@ -1,0 +1,153 @@
+"""Serving-fleet scaling: 1 vs 2 vs 4 replicas (repro.cluster).
+
+Acceptance benchmark for the cluster subsystem. The SAME Very-Heavy
+multi-tenant Poisson workload (8 tenants, mixed CRITICAL/HIGH/NORMAL/
+LOW, Zipf result counts — offered load many multiples of one replica's
+evaluation rate) is driven through fleets of 1, 2, and 4 replicas at
+EQUAL per-replica batch budget (same ``TrustIRConfig``, so every
+replica derives the same budget). Replicas run on independent simulated clocks
+(parallel hardware); fleet makespan is the slowest replica's clock, so
+
+    scheduled throughput = admitted items (or requests) / makespan.
+
+Targets (ISSUE 2 acceptance):
+  * 4-replica throughput >= 2x the 1-replica scheduled throughput;
+  * 4-replica p99 response time no worse than 1-replica under the
+    Very-Heavy regime;
+  * hedged twins deduplicated — exactly one Response per request_id
+    fleet-wide (the no-drop invariant, now cluster-width).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+
+def _very_heavy_tenants(n_tenants: int, qps_each: float,
+                        slo_s: float) -> List:
+    from repro.scheduling import Priority
+    from repro.serving.simulator import TenantSpec
+    mix = {Priority.CRITICAL: 0.05, Priority.HIGH: 0.25,
+           Priority.NORMAL: 0.5, Priority.LOW: 0.2}
+    return [TenantSpec(f"tenant{i}", qps=qps_each, priority_mix=mix,
+                       zipf_a=1.5, min_results=50, max_results=1500,
+                       slo_s=slo_s)
+            for i in range(n_tenants)]
+
+
+def run_fleet(n_replicas: int, n_queries: int, seed: int = 0) -> Dict:
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.configs.base import TrustIRConfig
+    from repro.core.pipeline import SyntheticSearcher
+    from repro.serving.simulator import (MultiTenantWorkload,
+                                         run_cluster_workload)
+
+    cfg = TrustIRConfig(u_capacity=256, u_threshold=128,
+                        deadline_s=0.05, overload_deadline_s=0.1,
+                        chunk_size=32, cache_slots=4096,
+                        n_replicas=n_replicas)
+    per_replica_rate = cfg.u_capacity / cfg.deadline_s    # items/s
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ch["trust"]),    # oracle evaluator
+        cluster_cfg=ClusterConfig(hedge_after_s=0.5, max_hedges=1,
+                                  hedge_budget_frac=0.05,
+                                  autoscale=True),
+        sim_rate_items_per_s=per_replica_rate)
+
+    # Offered load far past ONE replica's evaluation rate: deeply Very
+    # Heavy for a single host, saturating for a 4-replica fleet.
+    slo_s = 2.0
+    wl = MultiTenantWorkload(
+        tenants=_very_heavy_tenants(8, qps_each=25.0, slo_s=slo_s),
+        n_queries=n_queries, seed=seed)
+    # Corpus large vs the Trust-DB: cache hits help but neither side
+    # serves mostly from cache (a tiny corpus lets ONE replica answer
+    # most items from its shared cache for free, which only measures
+    # corpus overlap, not fleet capacity).
+    rep = run_cluster_workload(
+        coord, SyntheticSearcher(corpus_size=500_000, seed=seed), wl)
+
+    admitted = [r for r in rep.responses if r.admitted]
+    rids = [r.request_id for r in rep.responses]
+    makespan = coord.makespan_s()
+    items = sum(len(r.trust) for r in admitted)
+    lat = np.asarray([r.latency_s for r in admitted])
+    st = rep.scheduler_stats
+    n_hedges = st["cluster"]["n_hedges"]
+    return {
+        "n_replicas": n_replicas,
+        "batch_items_per_replica": coord.max_batch_items,
+        "n_responses": len(rep.responses),
+        "n_admitted": len(admitted),
+        "n_rejected": len(rep.responses) - len(admitted),
+        "makespan_s": makespan,
+        "items_per_s": items / max(makespan, 1e-9),
+        "req_per_s": len(admitted) / max(makespan, 1e-9),
+        "p50_s": float(np.percentile(lat, 50)) if len(lat) else None,
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else None,
+        "slo_met_frac": (float(np.mean([r.met_slo for r in admitted]))
+                         if admitted else None),
+        "n_hedges": n_hedges,
+        "hedge_rate": n_hedges / max(len(admitted), 1),
+        "n_steals": st["cluster"]["n_steals"],
+        "n_twin_drops": st["cluster"]["n_twin_drops"],
+        # exactly one Response per request_id, fleet-wide
+        "dedup_ok": bool(len(rids) == len(set(rids))
+                         and len(rids) == st["n_submitted"]),
+    }
+
+
+def main(n_queries: int = 480, seed: int = 0) -> Dict:
+    if n_queries <= 0:
+        raise SystemExit("bench_cluster: --n-queries must be positive")
+    out: Dict = {"n_queries": n_queries, "fleets": {}}
+    for n in (1, 2, 4):
+        out["fleets"][str(n)] = run_fleet(n, n_queries, seed)
+
+    f1, f4 = out["fleets"]["1"], out["fleets"]["4"]
+    out["speedup_4v1"] = f4["items_per_s"] / max(f1["items_per_s"], 1e-9)
+    out["speedup_ok"] = bool(out["speedup_4v1"] >= 2.0)
+    out["p99_ok"] = bool(f4["p99_s"] is not None and f1["p99_s"]
+                         is not None and f4["p99_s"] <= f1["p99_s"])
+    out["dedup_ok"] = all(f["dedup_ok"]
+                          for f in out["fleets"].values())
+
+    print(f"workload: {n_queries} queries, 8 tenants, Very-Heavy mix "
+          f"(offered load >> one replica's rate), equal per-replica "
+          f"batch budget {f1['batch_items_per_replica']} items")
+    print(f"{'replicas':>8} {'items/s':>10} {'req/s':>8} {'p50':>9} "
+          f"{'p99':>9} {'SLO':>5} {'hedge%':>7} {'steals':>7} "
+          f"{'rej':>5}")
+    def _ms(v):
+        return f"{v * 1e3:>7.1f}ms" if v is not None else f"{'-':>9}"
+
+    for n in (1, 2, 4):
+        f = out["fleets"][str(n)]
+        slo = (f"{100 * f['slo_met_frac']:>4.0f}%"
+               if f['slo_met_frac'] is not None else f"{'-':>5}")
+        print(f"{n:>8} {f['items_per_s']:>10.0f} {f['req_per_s']:>8.1f} "
+              f"{_ms(f['p50_s'])} {_ms(f['p99_s'])} {slo} "
+              f"{100 * f['hedge_rate']:>6.1f}% {f['n_steals']:>7} "
+              f"{f['n_rejected']:>5}")
+    print(f"  4v1 scheduled throughput = {out['speedup_4v1']:.2f}x "
+          f"({'PASS' if out['speedup_ok'] else 'FAIL'}: target >= 2x); "
+          f"p99 {'PASS' if out['p99_ok'] else 'FAIL'} (no worse than "
+          f"1-replica); twin dedup "
+          f"{'PASS' if out['dedup_ok'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-queries", type=int, default=480)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = main(args.n_queries, args.seed)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

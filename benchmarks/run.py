@@ -17,10 +17,10 @@ def _timed(name, fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_adaptive, bench_heavy_load,
-                            bench_response_time, bench_roofline,
-                            bench_scheduler, bench_throughput,
-                            bench_very_heavy_load)
+    from benchmarks import (bench_adaptive, bench_cluster,
+                            bench_heavy_load, bench_response_time,
+                            bench_roofline, bench_scheduler,
+                            bench_throughput, bench_very_heavy_load)
 
     csv_rows = []
 
@@ -65,6 +65,19 @@ def main() -> None:
     with open("BENCH_scheduler.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_scheduler.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: serving fleet 1 vs 2 vs 4 replicas "
+          "(repro.cluster)")
+    print("=" * 72)
+    name, us, rows = _timed("cluster", bench_cluster.main)
+    csv_rows.append((name, us,
+                     f"{rows['speedup_4v1']:.2f}x items/s 4 vs 1 "
+                     f"replicas"))
+    with open("BENCH_cluster.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_cluster.json")
 
     print()
     print("=" * 72)

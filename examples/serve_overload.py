@@ -9,6 +9,9 @@ the same workload:
   * proposed (load shedding) — per-request synchronous submit(),
   * proposed + scheduler     — priority admission, EDF queues, and
     cross-request micro-batching (``repro.scheduling``),
+  * proposed + cluster       — the scheduler replicated into an
+    N-replica fleet (``repro.cluster``): consistent-hash tenant
+    routing, work-stealing, hedged re-dispatch to backup replicas,
   * existing (process-all)   — the paper's baseline.
 
     PYTHONPATH=src python examples/serve_overload.py [--arch smollm-135m]
@@ -19,7 +22,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import TrustIRConfig
+from repro.cluster import ClusterConfig, ClusterCoordinator
+from repro.configs.base import TrustIRConfig, reduced
 from repro.core import ProcessAll, SimClock
 from repro.scheduling import Priority, SchedulerConfig
 from repro.serving.engine import ServingEngine
@@ -30,6 +34,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet size for the cluster system")
     args = ap.parse_args()
 
     ev, mk = make_evaluator(args.arch, smoke=True)
@@ -58,22 +64,42 @@ def main():
                       Priority.LOW], size=args.n_requests,
                      p=[0.1, 0.2, 0.5, 0.2])
     slo = cfg.overload_deadline_s * (1 + cfg.very_heavy_weight)
+    n_rep = max(args.replicas, 1)
+    cluster = ClusterCoordinator(
+        reduced(cfg, n_replicas=n_rep), evaluate,
+        cluster_cfg=ClusterConfig(hedge_after_s=slo / 2,
+                                  autoscale=True),
+        sched_cfg=SchedulerConfig())
     for label, engine, scheduled in [
             ("proposed (load shedding)",
              ServingEngine(cfg, evaluate), False),
             ("proposed + scheduler",
              ServingEngine(cfg, evaluate, sched_cfg=SchedulerConfig()),
              True),
+            (f"proposed + cluster (x{n_rep})", cluster, True),
             ("existing (process-all)",
              _process_all_engine(cfg, evaluate), False)]:
-        # warm jit paths per request size
+        # warm jit paths per request size — on EVERY replica, so no
+        # compile lands in a measured request's latency
+        warm_shedders = ([rep.engine.shedder for rep in engine.replicas]
+                         if isinstance(engine, ClusterCoordinator)
+                         else [engine.shedder])
         for n in sorted(set(int(s) for s in sizes)):
-            engine.shedder.process(
-                np.arange(10**6, 10**6 + n, dtype=np.uint32),
-                np.zeros(n, np.int32), mk(n, fseed=99))
-        # ... and the padded micro-batch shape both paths submit through
-        engine.enqueue(np.arange(10**6, 10**6 + 64, dtype=np.uint32),
-                       np.zeros(64, np.int32), mk(64, fseed=98))
+            for shedder in warm_shedders:
+                shedder.process(
+                    np.arange(10**6, 10**6 + n, dtype=np.uint32),
+                    np.zeros(n, np.int32), mk(n, fseed=99))
+        # ... and the padded micro-batch shape both paths submit
+        # through — per replica, since the ring would warm only one
+        if isinstance(engine, ClusterCoordinator):
+            for rep in engine.replicas:
+                rep.engine.enqueue(
+                    np.arange(10**6, 10**6 + 64, dtype=np.uint32),
+                    np.zeros(64, np.int32), mk(64, fseed=98))
+                rep.engine.drain()
+        else:
+            engine.enqueue(np.arange(10**6, 10**6 + 64, dtype=np.uint32),
+                           np.zeros(64, np.int32), mk(64, fseed=98))
         engine.drain()
         engine.completed.clear()
         tiers = np.zeros(4, np.int64)
@@ -85,9 +111,10 @@ def main():
             buckets = r.integers(0, 64, n).astype(np.int32)
             if scheduled:
                 engine.enqueue(keys, buckets, feats, slo_s=slo,
-                               priority=Priority(prios[i]))
+                               priority=Priority(prios[i]),
+                               tenant=f"tenant{i % (4 * n_rep)}")
                 if (i + 1) % 4 == 0:
-                    engine.drain(max_batches=1)
+                    engine.drain(1)          # one batch (or round)
             else:
                 resp = engine.submit(keys, buckets, feats, slo_s=slo)
                 tiers += np.bincount(resp.tier, minlength=4)
@@ -109,6 +136,11 @@ def main():
                   f"{st['mean_batch_fill']:.0f} items, "
                   f"{st['n_rejected']} rejected "
                   f"{st['rejected_by_reason']}")
+            if "cluster" in st:
+                c = st["cluster"]
+                print(f"  cluster: {c['n_steals']} steals, "
+                      f"{c['n_hedges']} hedges, {c['n_twin_drops']} "
+                      f"twins deduplicated")
 
 
 def _process_all_engine(cfg, evaluate):

@@ -1,0 +1,42 @@
+"""Multi-replica serving fleet on top of ``repro.scheduling``.
+
+Fleet request lifecycle (who owns each hop):
+
+    route    cluster.routing                consistent-hash ring maps
+       |                                    tenant -> replica shard
+       |                                    (weighted vnodes, minimal
+       |                                    remap on join/leave)
+    admit    replica's own Scheduler        PR-1 ladder vs THAT
+       |                                    replica's regime; explicit
+       |                                    prior-answered rejections
+    steal    cluster.coordinator            hot bank -> idle sibling,
+       |                                    from the BACK of the lowest
+       |                                    non-empty class (EDF heads
+       |                                    never reorder)
+    drain    cluster.coordinator            one micro-batch per replica
+       |                                    per round (round-robin)
+    hedge    distribution.fault_tolerance   stuck requests race a twin
+       |                                    on a REAL backup replica;
+       |                                    first completion wins,
+       |                                    loser deduplicated
+    adapt    cluster.autoscale_watermarks   fleet LoadMonitor EWMA ->
+                                            adaptive AdmissionPolicy
+                                            watermarks + tenant quotas
+
+Every replica is a full independent serving stack (own shedder, cache,
+prior, monitor — ``cluster.replica``); ``n_replicas=1`` degenerates to
+the single-host PR-1 behaviour exactly.
+"""
+from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
+                                                WatermarkAutoscaler)
+from repro.cluster.coordinator import (ClusterConfig, ClusterCoordinator,
+                                       ClusterStats)
+from repro.cluster.replica import ReplicaHandle
+from repro.cluster.routing import ConsistentHashRing, stable_hash
+
+__all__ = [
+    "ConsistentHashRing", "stable_hash",
+    "ReplicaHandle",
+    "ClusterConfig", "ClusterCoordinator", "ClusterStats",
+    "WatermarkAutoscaler", "ClusterLoadSnapshot",
+]

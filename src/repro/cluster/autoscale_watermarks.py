@@ -1,0 +1,153 @@
+"""Adaptive admission watermarks + tenant quotas from fleet load.
+
+PR 1 left ``AdmissionPolicy`` watermarks and tenant token-bucket quotas
+as *static* config (a ROADMAP open item). This module closes the loop
+the way ``core.adaptive`` closes it on the Very-Heavy extension weight:
+observe, aggregate, push new setpoints.
+
+Aggregation: each replica's ``LoadMonitor`` EWMA throughput yields its
+(Ucapacity, Uthreshold); the cluster's capacity is their sum (capacity
+planning for vertical search: provision per replica, reason per
+fleet). Cluster **pressure** is the EWMA-smoothed ratio of fleet queued
+items to fleet (Ucapacity + Uthreshold) — 0 is an idle fleet, 1 means
+the backlog alone fills every replica's extended-deadline budget.
+
+Control law (proportional, clamped):
+
+* admission watermarks interpolate from each replica's CONFIGURED
+  policy (its ``AdmissionPolicy`` at first sight — the idle anchor)
+  down to a floor (saturated), so LOW and then NORMAL traffic starts
+  shedding *earlier* on every replica as the fleet heats up — before
+  queues hit static backpressure — without discarding the operator's
+  ``SchedulerConfig`` watermarks;
+* per-tenant quotas are re-derived from measured capacity: tenant rate
+  on replica ``r`` = ``tenant_capacity_frac * cluster_rate *
+  share(r)``, where ``share(r)`` is the replica's fraction of fleet
+  throughput — a tenant may consume at most that fraction of the
+  *measured* fleet, not of a stale config guess.
+
+The static single-host behaviour is the degenerate case: one replica,
+``update`` never called.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from repro.scheduling import AdmissionPolicy
+
+from repro.cluster.replica import ReplicaHandle
+
+
+@dataclass
+class ClusterLoadSnapshot:
+    """One autoscaler update, for observability and tests."""
+    u_capacity: int                  # fleet Ucapacity (sum of replicas)
+    u_threshold: int                 # fleet Uthreshold
+    rate_items_per_s: float          # fleet EWMA throughput
+    queued_items: int                # fleet backlog
+    pressure: float                  # smoothed backlog / fleet budget
+    low_watermark: float             # as pushed to the FIRST replica
+    normal_watermark: float          # (per-replica when anchors differ)
+    tenant_rates: Dict[str, float]   # per-replica items/s per tenant
+
+    def as_dict(self) -> Dict:
+        return {"u_capacity": self.u_capacity,
+                "u_threshold": self.u_threshold,
+                "rate_items_per_s": self.rate_items_per_s,
+                "queued_items": self.queued_items,
+                "pressure": self.pressure,
+                "low_watermark": self.low_watermark,
+                "normal_watermark": self.normal_watermark,
+                "tenant_rates": dict(self.tenant_rates)}
+
+
+class WatermarkAutoscaler:
+    def __init__(self, base_low: float = 0.5, base_normal: float = 0.9,
+                 floor_low: float = 0.1, floor_normal: float = 0.5,
+                 ewma: float = 0.5,
+                 tenant_capacity_frac: float = 0.5,
+                 tenant_burst_s: float = 2.0):
+        if not (0.0 <= floor_low <= base_low <= 1.0):
+            raise ValueError("need 0 <= floor_low <= base_low <= 1")
+        if not (0.0 <= floor_normal <= base_normal <= 1.0):
+            raise ValueError("need 0 <= floor_normal <= base_normal <= 1")
+        # Fallback idle anchors, used only when a replica's configured
+        # policy cannot be read; normally each replica's own
+        # AdmissionPolicy at first sight is the anchor.
+        self.base_low = base_low
+        self.base_normal = base_normal
+        self.floor_low = floor_low
+        self.floor_normal = floor_normal
+        self.ewma = ewma
+        # <=0 disables quota pushing (watermarks only).
+        self.tenant_capacity_frac = tenant_capacity_frac
+        self.tenant_burst_s = tenant_burst_s
+        self._pressure = 0.0
+        self._anchors: Dict[str, Tuple[float, float]] = {}
+        self.n_updates = 0
+
+    @property
+    def pressure(self) -> float:
+        return self._pressure
+
+    def cluster_parameters(self, replicas: Sequence[ReplicaHandle]
+                           ) -> Tuple[int, int, float]:
+        """Fleet (Ucapacity, Uthreshold, rate) — per-replica LoadMonitor
+        EWMA estimates, summed."""
+        ucap = uthr = 0
+        rate = 0.0
+        for rep in replicas:
+            c, t = rep.monitor.parameters()
+            ucap += c
+            uthr += t
+            rate += rep.monitor.rate
+        return ucap, uthr, rate
+
+    def update(self, replicas: Sequence[ReplicaHandle],
+               tenants: Iterable[str] = ()) -> ClusterLoadSnapshot:
+        """Observe fleet load, then push watermarks (every replica) and
+        tenant quotas (every replica x tenant) derived from it."""
+        ucap, uthr, rate = self.cluster_parameters(replicas)
+        queued = sum(rep.queued_items for rep in replicas)
+        raw = queued / max(ucap + uthr, 1)
+        self._pressure = (self.ewma * min(raw, 1.0)
+                          + (1 - self.ewma) * self._pressure)
+        p = min(max(self._pressure, 0.0), 1.0)
+
+        tenant_rates: Dict[str, float] = {}
+        tenant_list: List[str] = sorted(set(tenants))
+        low_wm = self.base_low
+        normal_wm = self.base_normal
+        for i, rep in enumerate(replicas):
+            # Idle anchor = the replica's CONFIGURED policy, captured
+            # the first time this autoscaler sees it (the policy object
+            # itself is replaced by every update below).
+            if rep.replica_id not in self._anchors:
+                pol = rep.scheduler.policy
+                self._anchors[rep.replica_id] = (
+                    pol.low_watermark, pol.normal_watermark)
+            base_low, base_normal = self._anchors[rep.replica_id]
+            rep_low = min(base_low, self.floor_low) \
+                + (base_low - min(base_low, self.floor_low)) * (1.0 - p)
+            rep_normal = min(base_normal, self.floor_normal) \
+                + (base_normal - min(base_normal, self.floor_normal)) \
+                * (1.0 - p)
+            if i == 0:                  # reported snapshot values
+                low_wm, normal_wm = rep_low, rep_normal
+            rep.scheduler.policy = AdmissionPolicy(
+                low_watermark=rep_low, normal_watermark=rep_normal)
+            if self.tenant_capacity_frac > 0 and tenant_list:
+                share = rep.monitor.rate / max(rate, 1e-9)
+                t_rate = self.tenant_capacity_frac * rate * share
+                for tenant in tenant_list:
+                    rep.scheduler.limiter.configure(
+                        tenant, rate=t_rate,
+                        burst=t_rate * self.tenant_burst_s)
+                    tenant_rates[f"{rep.replica_id}:{tenant}"] = t_rate
+
+        self.n_updates += 1
+        return ClusterLoadSnapshot(
+            u_capacity=ucap, u_threshold=uthr, rate_items_per_s=rate,
+            queued_items=queued, pressure=p, low_watermark=low_wm,
+            normal_watermark=normal_wm, tenant_rates=tenant_rates)

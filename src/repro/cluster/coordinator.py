@@ -1,0 +1,362 @@
+"""The cluster event loop: route -> admit -> steal -> drain -> hedge.
+
+``ClusterCoordinator`` turns N independent ``ReplicaHandle`` stacks
+into one serving fleet:
+
+* **route** — tenants map to replicas through the consistent-hash ring
+  (``routing``): sticky (per-tenant cache/prior locality), weighted,
+  and minimally disturbed by membership changes.
+* **admit** — the chosen replica's own scheduler applies the PR-1
+  admission ladder against *its* regime; rejections surface through the
+  coordinator as the same explicit prior-answered ``Response``.
+* **steal** — when one replica's ``PriorityQueueBank`` runs hot while a
+  sibling idles, queued work migrates from the *back* of the victim's
+  lowest-importance non-empty class (``PriorityQueueBank.steal_back``):
+  latest-deadline, least-important requests move, the victim's EDF
+  heads never reorder.
+* **drain** — micro-batches execute round-robin across replicas, one
+  batch per replica per round (fair progress; on simulated clocks the
+  replicas genuinely overlap in time).
+* **hedge** — requests stuck past the hedge latency are re-dispatched
+  to a REAL backup replica (the ring's next distinct replica for the
+  tenant) at CRITICAL priority and the twins race; the first completed
+  copy wins and the loser is deduplicated fleet-wide by the
+  coordinator, so the no-drop invariant stays "exactly one Response
+  per request" across the fleet. Re-hedging (a backup that is itself
+  overloaded) is allowed up to ``max_hedges``, all of it token-bucket
+  capped at a fraction of admitted traffic (``HedgedDispatch``).
+
+Closing the loop, a ``WatermarkAutoscaler`` periodically aggregates
+per-replica ``LoadMonitor`` EWMA rates into fleet (Ucapacity,
+Uthreshold) and pushes adaptive admission watermarks + tenant quotas
+back onto every replica.
+
+``TrustIRConfig.n_replicas = 1`` is the degenerate case: one replica,
+no stealing, hedging disabled (no backup exists) — behaviour identical
+to a bare ``ServingEngine``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import TrustIRConfig
+from repro.distribution.fault_tolerance import HedgedDispatch
+from repro.scheduling import Priority, Response, SchedulerConfig
+from repro.serving.engine import slo_stats_of
+
+from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
+                                                WatermarkAutoscaler)
+from repro.cluster.replica import ReplicaHandle
+from repro.cluster.routing import ConsistentHashRing
+
+
+@dataclass
+class ClusterConfig:
+    """Fleet-level policy knobs (per-replica policy stays in
+    ``SchedulerConfig``)."""
+    steal_threshold_items: int = 1      # min queued-item imbalance
+    max_steals_per_round: int = 8
+    hedge_after_s: float = 0.0          # 0 disables cluster hedging
+    max_hedges: int = 1                 # re-dispatches per request
+    hedge_budget_frac: float = 0.05     # hedge tokens per admitted req
+    autoscale: bool = False             # adaptive watermarks + quotas
+    autoscale_every: int = 4            # drain rounds between updates
+    vnodes_per_weight: int = 64
+
+
+@dataclass
+class ClusterStats:
+    n_enqueued: int = 0
+    n_steals: int = 0
+    n_hedges: int = 0                   # cross-replica re-dispatches
+    n_twin_drops: int = 0               # hedge losers deduplicated
+    n_drain_rounds: int = 0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class ClusterCoordinator:
+    def __init__(self, cfg: TrustIRConfig, evaluate_chunk: Callable,
+                 cluster_cfg: Optional[ClusterConfig] = None,
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 sim_rate_items_per_s: Optional[float] = None,
+                 autoscaler: Optional[WatermarkAutoscaler] = None,
+                 kv_pools: Optional[List] = None):
+        self.cfg = cfg
+        self.cluster_cfg = cluster_cfg or ClusterConfig()
+        n = max(1, int(cfg.n_replicas))
+        weights = (tuple(cfg.replica_weights) if cfg.replica_weights
+                   else (1.0,) * n)
+        if len(weights) != n:
+            raise ValueError(
+                f"replica_weights has {len(weights)} entries for "
+                f"n_replicas={n}")
+
+        cc = self.cluster_cfg
+        hedging = cc.hedge_after_s > 0 and n > 1
+        self.hedge = (HedgedDispatch(cc.hedge_after_s,
+                                     max_hedges=cc.max_hedges,
+                                     budget_frac=cc.hedge_budget_frac)
+                      if hedging else None)
+        base_sched = sched_cfg or SchedulerConfig()
+        if hedging:
+            # The cluster owns hedging (twins race REAL replicas);
+            # engine-internal same-queue hedging would double-dispatch.
+            base_sched = dataclasses.replace(base_sched,
+                                             hedge_after_s=0.0)
+
+        self._ids = itertools.count()   # fleet-unique request ids
+        self.ring = ConsistentHashRing(cc.vnodes_per_weight)
+        self.replicas: List[ReplicaHandle] = []
+        for i, w in enumerate(weights):
+            rid = f"r{i}"
+            self.replicas.append(ReplicaHandle(
+                rid, cfg, evaluate_chunk, weight=w,
+                sched_cfg=base_sched,
+                sim_rate_items_per_s=sim_rate_items_per_s,
+                kv_pool=(kv_pools[i] if kv_pools else None),
+                request_ids=self._ids))
+            self.ring.add(rid, w)
+        self.by_id: Dict[str, ReplicaHandle] = {
+            r.replica_id: r for r in self.replicas}
+
+        self.autoscaler = autoscaler or (WatermarkAutoscaler()
+                                         if cc.autoscale else None)
+        self.last_snapshot: Optional[ClusterLoadSnapshot] = None
+        self.tenants_seen: set = set()
+        self.stats = ClusterStats()
+        self.completed: List[Response] = []
+        self._responded: set = set()    # fleet-wide answered rids
+
+    # -- fleet views ---------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def queued_items(self) -> int:
+        return sum(r.queued_items for r in self.replicas)
+
+    @property
+    def max_batch_items(self) -> int:
+        return self.replicas[0].scheduler.max_batch_items
+
+    def makespan_s(self) -> float:
+        """Latest replica clock (simulated fleets): total time the fleet
+        needed — replicas run in parallel, so the slowest one bounds
+        throughput."""
+        return max((r.clock.t for r in self.replicas
+                    if r.clock is not None), default=0.0)
+
+    # -- route + admit -------------------------------------------------------
+    def route(self, tenant: str) -> ReplicaHandle:
+        return self.by_id[self.ring.route(tenant)]
+
+    def enqueue(self, item_keys: np.ndarray, buckets: np.ndarray,
+                features: Dict[str, np.ndarray],
+                slo_s: Optional[float] = None,
+                priority: Priority = Priority.NORMAL,
+                tenant: str = "default",
+                needs_kv_slot: bool = False,
+                t_arrival: Optional[float] = None) -> int:
+        """Route by tenant, then admit on that replica. Returns the
+        fleet-unique request id; a rejection completes immediately into
+        ``self.completed``."""
+        rep = self.route(tenant)
+        if t_arrival is not None:
+            rep.advance_to(t_arrival)
+        self.tenants_seen.add(tenant)
+        n_before = len(rep.engine.completed)
+        rid = rep.engine.enqueue(item_keys, buckets, features,
+                                 slo_s=slo_s, priority=priority,
+                                 tenant=tenant,
+                                 needs_kv_slot=needs_kv_slot)
+        self.stats.n_enqueued += 1
+        # A rejection completes immediately; only ADMITTED traffic
+        # earns hedge budget (rejected floods must not raise the cap).
+        if self.hedge is not None \
+                and len(rep.engine.completed) == n_before:
+            self.hedge.note_request()
+        self._collect()                 # surface immediate rejections
+        return rid
+
+    # -- steal ---------------------------------------------------------------
+    def _steal_rebalance(self) -> None:
+        """Migrate work from the hottest bank to the idlest while the
+        imbalance exceeds the threshold. Steals come off the BACK of the
+        victim's lowest-importance non-empty class and a class is never
+        robbed below 2 entries, so every EDF head stays put."""
+        if self.n_replicas < 2:
+            return
+        for _ in range(self.cluster_cfg.max_steals_per_round):
+            by_load = sorted(self.replicas,
+                             key=lambda r: (r.queued_items,
+                                            r.replica_id))
+            idle, hot = by_load[0], by_load[-1]
+            gap = hot.queued_items - idle.queued_items
+            if gap < self.cluster_cfg.steal_threshold_items:
+                break
+            qreq = hot.bank.steal_back()
+            if qreq is None:            # nothing stealable (heads only)
+                break
+            if qreq.n_items >= gap:
+                # Moving it would leave the gap as large or larger
+                # (just inverted) — the same jumbo request would be
+                # stolen straight back next iteration. Undo and stop.
+                hot.bank.push(qreq)
+                break
+            # The request has been queued (hence stealable) since its
+            # enqueue time — the victim's clock being further ahead only
+            # means the victim already worked deep into ITS backlog.
+            idle.advance_to(qreq.enqueue_t)
+            if not idle.bank.push(qreq):
+                hot.bank.push(qreq)     # thief full: undo, stop trying
+                break
+            self.stats.n_steals += 1
+
+    # -- hedge ---------------------------------------------------------------
+    def _backup_for(self, tenant: str, current: ReplicaHandle,
+                    n_prior_hedges: int = 0
+                    ) -> Optional[ReplicaHandle]:
+        """Hedge target for the ``n_prior_hedges + 1``-th dispatch of a
+        ``tenant`` request waiting on ``current``.
+
+        The k-th hedge walks to the k-th distinct ring replica past the
+        primary, so a RE-hedge (the backup is itself overloaded)
+        escalates to a replica that does not already hold a copy
+        instead of bouncing between the primary/backup pair. Skips
+        ``current`` (a stolen copy may sit off its chain position);
+        None once the chain is exhausted — every replica has a copy."""
+        chain = self.ring.route_chain(tenant, self.n_replicas)
+        for rid in chain[n_prior_hedges + 1:]:
+            if rid != current.replica_id:
+                return self.by_id[rid]
+        return None
+
+    def _hedge_scan(self) -> None:
+        """Re-dispatch requests stuck past the hedge latency onto a real
+        backup replica at CRITICAL priority. Twins race; ``_collect``
+        keeps the first completion and drops the loser."""
+        if self.hedge is None or self.hedge.budget_available < 1.0:
+            return          # tokens only refill on enqueue, not mid-scan
+        for rep in self.replicas:
+            now = rep.now()
+            for p in Priority:
+                for qreq in rep.bank.queues[p].entries():
+                    if not self.hedge.should_hedge(
+                            now - qreq.hedge_wait_base_t,
+                            qreq.n_hedges):
+                        continue
+                    backup = self._backup_for(qreq.tenant, rep,
+                                              qreq.n_hedges)
+                    if backup is None:      # every replica has a copy
+                        continue
+                    # In continuous time the hedge fires the moment the
+                    # wait (since the last dispatch) crosses the hedge
+                    # latency.
+                    fire_t = qreq.hedge_wait_base_t \
+                        + self.hedge.hedge_after_s
+                    backup.advance_to(fire_t)
+                    if qreq.dispatch_twin(
+                            backup.bank.queues[Priority.CRITICAL].push,
+                            fire_t):
+                        self.hedge.record_hedge()
+                        self.stats.n_hedges += 1
+
+    # -- drain ---------------------------------------------------------------
+    def drain(self, max_rounds: Optional[int] = None) -> List[Response]:
+        """Round-robin drain: steal + hedge scans, then one micro-batch
+        per replica, until every bank is empty (or ``max_rounds``).
+        Returns the NEW responses produced (deduplicated)."""
+        produced: List[Response] = []
+        rounds = 0
+        while max_rounds is None or rounds < max_rounds:
+            self._steal_rebalance()
+            self._hedge_scan()
+            any_batch = False
+            for rep in self.replicas:
+                before = rep.scheduler.stats.n_batches
+                rep.engine.drain(max_batches=1)
+                any_batch |= rep.scheduler.stats.n_batches > before
+            produced.extend(self._collect())
+            rounds += 1
+            self.stats.n_drain_rounds += 1
+            if self.autoscaler is not None and \
+                    self.stats.n_drain_rounds \
+                    % max(self.cluster_cfg.autoscale_every, 1) == 0:
+                self.last_snapshot = self.autoscaler.update(
+                    self.replicas, self.tenants_seen)
+            if not any_batch:
+                break
+        return produced
+
+    def _collect(self) -> List[Response]:
+        """Pull new responses off every replica, keeping the FIRST
+        completion per request id (hedge losers are dropped here — the
+        fleet-wide dedup).
+
+        When both twins complete within the same collection window,
+        "first" is decided by completion time — twins share an arrival,
+        so lower latency IS earlier completion — not by replica scan
+        order (the hedge exists precisely because the primary is slow,
+        and scan order would keep the loser)."""
+        window: List[Response] = []
+        for rep in self.replicas:
+            comp = rep.engine.completed
+            while rep.n_collected < len(comp):
+                window.append(comp[rep.n_collected])
+                rep.n_collected += 1
+        by_rid: Dict[int, Response] = {}
+        order: List[int] = []
+        for resp in window:
+            rid = resp.request_id
+            if rid in self._responded:      # twin answered last window
+                self.stats.n_twin_drops += 1
+                continue
+            if rid in by_rid:               # both twins in this window
+                self.stats.n_twin_drops += 1
+                if resp.latency_s < by_rid[rid].latency_s:
+                    by_rid[rid] = resp
+                continue
+            by_rid[rid] = resp
+            order.append(rid)
+        fresh = [by_rid[rid] for rid in order]
+        for resp in fresh:
+            self._responded.add(resp.request_id)
+            self.completed.append(resp)
+        return fresh
+
+    # -- observability -------------------------------------------------------
+    def slo_stats(self) -> Dict[str, float]:
+        return slo_stats_of(self.completed)
+
+    def scheduler_stats(self) -> Dict:
+        """Fleet aggregate in the single-engine stats shape (drivers and
+        reports consume both interchangeably), plus cluster extras."""
+        agg: Dict = {"n_submitted": 0, "n_admitted": 0, "n_rejected": 0,
+                     "rejected_by_reason": {}, "n_batches": 0,
+                     "n_batched_items": 0, "n_hedges": 0}
+        per_replica: Dict[str, Dict] = {}
+        for rep in self.replicas:
+            s = rep.scheduler.stats.as_dict()
+            per_replica[rep.replica_id] = s
+            for k in ("n_submitted", "n_admitted", "n_rejected",
+                      "n_batches", "n_batched_items", "n_hedges"):
+                agg[k] += s[k]
+            for reason, c in s["rejected_by_reason"].items():
+                agg["rejected_by_reason"][reason] = \
+                    agg["rejected_by_reason"].get(reason, 0) + c
+        agg["n_hedges"] += self.stats.n_hedges
+        agg["mean_batch_fill"] = (agg["n_batched_items"]
+                                  / max(agg["n_batches"], 1))
+        agg["cluster"] = self.stats.as_dict()
+        agg["per_replica"] = per_replica
+        if self.last_snapshot is not None:
+            agg["autoscale"] = self.last_snapshot.as_dict()
+        return agg

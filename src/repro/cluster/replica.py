@@ -1,0 +1,82 @@
+"""One serving replica: an independent engine the coordinator can hold.
+
+``ReplicaHandle`` wraps a full single-host serving stack — its own
+``ServingEngine`` and therefore its own ``Scheduler`` /
+``PriorityQueueBank`` / ``LoadShedder`` / ``LoadMonitor`` / Trust-DB
+cache / average-trust prior, plus an optional ``KVCachePool`` for LM
+decode — so replicas shed, cache, and calibrate *independently* (one
+hot replica extending its deadline never slows a cold sibling, and a
+cache poisoned on one host stays on that host).
+
+Simulated fleets give every replica its **own** ``SimClock``
+(independent hardware runs in parallel; a shared clock would serialize
+the fleet). The coordinator keeps the timelines coherent by
+fast-forwarding a replica's clock to each event's global timestamp
+(``advance_to``) — an idle replica's clock only lags because nothing
+has happened on it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.configs.base import TrustIRConfig
+from repro.core.load_monitor import LoadMonitor
+from repro.core.shedder import SimClock
+from repro.scheduling import (PriorityQueueBank, Scheduler,
+                              SchedulerConfig)
+from repro.serving.engine import ServingEngine
+
+
+class ReplicaHandle:
+    def __init__(self, replica_id: str, cfg: TrustIRConfig,
+                 evaluate_chunk: Callable, weight: float = 1.0,
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 sim_rate_items_per_s: Optional[float] = None,
+                 kv_pool=None, request_ids=None):
+        self.replica_id = replica_id
+        self.weight = float(weight)
+        self.clock = (SimClock(sim_rate_items_per_s)
+                      if sim_rate_items_per_s is not None else None)
+        self.engine = ServingEngine(cfg, evaluate_chunk,
+                                    sim_clock=self.clock,
+                                    sched_cfg=sched_cfg,
+                                    kv_pool=kv_pool,
+                                    request_ids=request_ids)
+        # Responses the coordinator has already collected from
+        # ``engine.completed`` (consumption cursor).
+        self.n_collected = 0
+
+    # -- forwarding accessors ------------------------------------------------
+    @property
+    def scheduler(self) -> Scheduler:
+        return self.engine.scheduler
+
+    @property
+    def bank(self) -> PriorityQueueBank:
+        return self.scheduler.bank
+
+    @property
+    def monitor(self) -> LoadMonitor:
+        return self.engine.monitor
+
+    @property
+    def queued_requests(self) -> int:
+        return len(self.bank)
+
+    @property
+    def queued_items(self) -> int:
+        return self.bank.n_items
+
+    # -- time -----------------------------------------------------------------
+    def now(self) -> float:
+        return self.engine._now()
+
+    def advance_to(self, t: float) -> None:
+        """Fast-forward a simulated clock to global time ``t`` (no-op on
+        wall clocks, and never rewinds)."""
+        if self.clock is not None:
+            self.clock.t = max(self.clock.t, t)
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return (f"ReplicaHandle({self.replica_id!r}, w={self.weight}, "
+                f"queued={self.queued_requests})")

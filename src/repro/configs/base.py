@@ -266,6 +266,12 @@ class TrustIRConfig:
     # Evaluator backbone (arch id from the registry)
     evaluator_arch: str = "smollm-135m"
     trust_scale: float = 5.0            # paper reports trust on a scale of 5
+    # Serving fleet (repro.cluster): number of independent replica
+    # engines (each with its own shedder/cache/prior state). 1 = the
+    # single-host degenerate case; weights bias the consistent-hash
+    # ring's virtual-node counts (empty = equal weights).
+    n_replicas: int = 1
+    replica_weights: Tuple[float, ...] = ()
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,10 @@ class LoadMonitor:
     ewma: float = 0.3
     _rate: Optional[float] = None        # items/s, EWMA
     n_observations: int = 0
+    # One pathological sample (tiny elapsed_s under clock jitter) must not
+    # spike the EWMA: per-observation rates are clamped to this multiple
+    # of the current estimate before blending.
+    rate_clamp_mult: float = 8.0
 
     @property
     def rate(self) -> float:
@@ -38,8 +42,13 @@ class LoadMonitor:
         if n_items <= 0 or elapsed_s <= 0:
             return
         r = n_items / elapsed_s
-        self._rate = r if self._rate is None else (
-            self.ewma * r + (1 - self.ewma) * self._rate)
+        if self._rate is None:
+            # First measurement seeds the estimate unclamped (the config
+            # seed is a placeholder, not a measurement to clamp against).
+            self._rate = r
+        else:
+            r = min(r, self.rate_clamp_mult * self._rate)
+            self._rate = self.ewma * r + (1 - self.ewma) * self._rate
         self.n_observations += 1
 
     def parameters(self) -> Tuple[int, int]:

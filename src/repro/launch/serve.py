@@ -1,13 +1,16 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Boots a ServingEngine with the chosen trust-evaluator backbone, calibrates
-Ucapacity/Uthreshold to the measured evaluator throughput (the Load
-Monitor's job, §4), and serves a synthetic request stream through the
-priority scheduler (``repro.scheduling``): requests arrive with a
-CRITICAL/HIGH/NORMAL/LOW mix, are admitted per-regime, queue EDF, and
-drain as budget-shaped micro-batches. ``--sync`` restores the original
-per-request synchronous path; ``--adaptive`` enables the §7 adaptive
-Very-Heavy controller.
+Boots an N-replica serving fleet (``repro.cluster``) with the chosen
+trust-evaluator backbone, calibrates Ucapacity/Uthreshold to the
+measured evaluator throughput (the Load Monitor's job, §4), and serves
+a synthetic request stream through the priority scheduler
+(``repro.scheduling``): requests arrive with a CRITICAL/HIGH/NORMAL/LOW
+mix, route to a replica by tenant (consistent hashing), are admitted
+per-regime, queue EDF, rebalance by work-stealing, and drain as
+budget-shaped micro-batches round-robin across replicas. ``--replicas
+1`` (the default) is the degenerate single-host path; ``--sync``
+restores the original per-request synchronous path; ``--adaptive``
+enables the §7 adaptive Very-Heavy controller.
 """
 from __future__ import annotations
 
@@ -27,12 +30,18 @@ def main() -> int:
     p.add_argument("--adaptive", action="store_true")
     p.add_argument("--sync", action="store_true",
                    help="per-request synchronous submit() path")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serving fleet size (1 = single host)")
+    p.add_argument("--hedge-after-ms", type=float, default=0.0,
+                   help="cluster hedge latency (0 disables; needs "
+                        "--replicas >= 2)")
     p.add_argument("--drain-every", type=int, default=4,
                    help="drain a micro-batch every N enqueues")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
     import jax.numpy as jnp
+    from repro.cluster import ClusterConfig, ClusterCoordinator
     from repro.configs.base import TrustIRConfig
     from repro.core.adaptive import AdaptiveWeightController
     from repro.scheduling import Priority
@@ -52,19 +61,32 @@ def main() -> int:
     rate = 64 / max(time.perf_counter() - t0, 1e-6)
     dl = args.deadline_ms / 1e3
     odl = args.overload_deadline_ms / 1e3
+    n_rep = max(args.replicas, 1)
     cfg = TrustIRConfig(u_capacity=max(int(rate * dl), 16),
                         u_threshold=max(int(rate * (odl - dl)), 8),
                         deadline_s=dl, overload_deadline_s=odl,
-                        chunk_size=64)
+                        chunk_size=64, n_replicas=n_rep)
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
           f"(overload {odl * 1e3:.0f}ms)"
           + (" [adaptive]" if args.adaptive else "")
-          + (" [sync]" if args.sync else " [scheduled]"))
+          + (" [sync]" if args.sync
+             else f" [scheduled x{n_rep} replica(s)]"))
 
-    eng = ServingEngine(cfg, evaluate)
-    if args.adaptive:
-        eng.shedder.adaptive = AdaptiveWeightController()
+    if args.sync:
+        eng = ServingEngine(cfg, evaluate)
+        if args.adaptive:
+            eng.shedder.adaptive = AdaptiveWeightController()
+    else:
+        # N-replica fleet; n_replicas=1 is the degenerate single host.
+        eng = ClusterCoordinator(
+            cfg, evaluate,
+            cluster_cfg=ClusterConfig(
+                hedge_after_s=args.hedge_after_ms / 1e3,
+                autoscale=n_rep > 1))
+        if args.adaptive:
+            for rep in eng.replicas:
+                rep.engine.shedder.adaptive = AdaptiveWeightController()
 
     r = np.random.default_rng(args.seed)
     sizes = np.clip(r.zipf(1.4, size=args.n_requests) * 64, 64, 4096)
@@ -72,13 +94,26 @@ def main() -> int:
     prio_choices = [Priority.CRITICAL, Priority.HIGH, Priority.NORMAL,
                     Priority.LOW]
     prios = r.choice(4, size=args.n_requests, p=[0.1, 0.2, 0.5, 0.2])
+    warm_shedders = ([eng.shedder] if args.sync
+                     else [rep.engine.shedder for rep in eng.replicas])
     for n in sorted(set(int(s) for s in sizes)):   # warm jit per size
-        eng.shedder.process(np.arange(10**6, 10**6 + n, dtype=np.uint32),
-                            np.zeros(n, np.int32), mk(n, fseed=999))
-    # ... and the padded micro-batch shape the submit/drain path uses
-    eng.enqueue(np.arange(1, 65, dtype=np.uint32),
-                np.zeros(64, np.int32), mk(64, fseed=998))
-    eng.drain()
+        for shedder in warm_shedders:    # every replica pays compile NOW
+            shedder.process(
+                np.arange(10**6, 10**6 + n, dtype=np.uint32),
+                np.zeros(n, np.int32), mk(n, fseed=999))
+    # ... and the padded micro-batch shape the submit/drain path uses —
+    # again per replica (the ring would route one warm tenant to ONE
+    # replica; the rest would pay the batch-shape compile mid-run)
+    if args.sync:
+        eng.enqueue(np.arange(1, 65, dtype=np.uint32),
+                    np.zeros(64, np.int32), mk(64, fseed=998))
+        eng.drain()
+    else:
+        for rep in eng.replicas:
+            rep.engine.enqueue(np.arange(1, 65, dtype=np.uint32),
+                               np.zeros(64, np.int32), mk(64, fseed=998))
+            rep.engine.drain()
+        eng.drain()                  # collect warm responses, then drop
     eng.completed.clear()
 
     for i, n in enumerate(int(s) for s in sizes):
@@ -96,10 +131,11 @@ def main() -> int:
                   f"prior {s.n_prior:>5} "
                   f"{'SLO ok' if resp.met_slo else 'SLO MISS'}")
         else:
+            # Tenants rotate so the ring spreads them across replicas.
             eng.enqueue(keys, buckets, mk(n, fseed=i), slo_s=odl * 2.5,
-                        priority=prio)
+                        priority=prio, tenant=f"tenant{i % (4 * n_rep)}")
             if (i + 1) % args.drain_every == 0:
-                eng.drain(max_batches=1)
+                eng.drain(1)                 # one batch (or round)
     if not args.sync:
         eng.drain()
         for resp in eng.completed:
@@ -116,6 +152,12 @@ def main() -> int:
               f"{st['mean_batch_fill']:.0f} items, "
               f"{st['n_rejected']} rejected {st['rejected_by_reason']}, "
               f"{st['n_hedges']} hedges")
+        if "cluster" in st:
+            c = st["cluster"]
+            print(f"cluster: {len(eng.replicas)} replicas, "
+                  f"{c['n_steals']} steals, {c['n_hedges']} "
+                  f"cross-replica hedges, {c['n_twin_drops']} twins "
+                  f"deduplicated")
     board = eng.slo_stats()
     print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "

@@ -22,10 +22,32 @@ Request lifecycle (who owns each hop):
                                             hedged re-dispatch via
                                             distribution.fault_tolerance
 
+With a multi-replica fleet (``repro.cluster``) the map gains a layer in
+FRONT of this one — ``route -> admit -> steal -> drain -> hedge``:
+
+    route    cluster.routing                consistent-hash ring picks
+       |                                    the tenant's replica shard
+    admit    (this subsystem, per replica)  the ladder above, against
+       |                                    THAT replica's regime
+    steal    cluster.coordinator            hot bank -> idle sibling,
+       |                                    back of the lowest class
+       |                                    (EDF heads never reorder)
+    drain    cluster.coordinator            round-robin micro-batches
+       |                                    across replicas; decode
+       |                                    requests only occupy batch
+       |                                    budget when a KVCachePool
+       |                                    slot is claimable
+    hedge    distribution.fault_tolerance   stuck requests race a twin
+                                            on a REAL backup replica;
+                                            first completion wins, the
+                                            loser is deduplicated
+                                            fleet-wide
+
 No *admitted* request is ever dropped: every item leaves with a trust
-value (paper §5 invariant, preserved across the batching layer), and
-every rejection is an observable ``Response`` with a reason — never
-silence.
+value (paper §5 invariant, preserved across the batching layer), every
+rejection is an observable ``Response`` with a reason — never silence —
+and fleet-wide each request id yields EXACTLY one ``Response`` even
+when its hedged twin also ran.
 """
 from repro.scheduling.batcher import (MicroBatch, MicroBatcher,
                                       to_fused_inputs)

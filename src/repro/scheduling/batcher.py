@@ -63,13 +63,27 @@ class MicroBatcher:
             raise ValueError("capacity_items must be positive")
         self.capacity_items = int(capacity_items)
 
-    def form(self, bank: PriorityQueueBank) -> Optional[MicroBatch]:
+    @staticmethod
+    def _needs_kv_slot(qreq: QueuedRequest) -> bool:
+        return bool(getattr(qreq.request, "needs_kv_slot", False))
+
+    def form(self, bank: PriorityQueueBank,
+             kv_free: Optional[int] = None) -> Optional[MicroBatch]:
         """Pop whole requests from ``bank`` until the budget is full (or
         the next head does not fit). Returns None when the bank is empty.
+
+        ``kv_free`` is the number of claimable ``KVCachePool`` slots: a
+        decode request (``request.needs_kv_slot``) consumes one from the
+        budget, and when none remain the head *stays queued* instead of
+        occupying batch capacity it cannot use (packing stops there —
+        never reorders past the head). ``None`` disables the check.
         """
         head = bank.peek_next()
         if head is None:
             return None
+        if kv_free is not None and kv_free <= 0 \
+                and self._needs_kv_slot(head):
+            return None    # queueable but not batchable: no slot to claim
 
         picked: List[QueuedRequest] = []
         cap = self.capacity_items
@@ -84,8 +98,14 @@ class MicroBatcher:
                 head = bank.peek_next()
                 if head is None or used + head.n_items > cap:
                     break
+                if kv_free is not None and kv_free <= 0 \
+                        and self._needs_kv_slot(head):
+                    break     # slotless decode head: stays queued
                 picked.append(bank.pop_next())
                 used += picked[-1].n_items
+                if kv_free is not None \
+                        and self._needs_kv_slot(picked[-1]):
+                    kv_free -= 1
 
         slices: List[Tuple[QueuedRequest, int, int]] = []
         start = 0

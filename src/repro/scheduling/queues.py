@@ -33,6 +33,32 @@ class QueuedRequest:
     deadline_t: float
     enqueue_t: float
     hedged: bool = False
+    n_hedges: int = 0         # times this request has been re-dispatched
+    last_hedge_t: Optional[float] = None    # when the last twin launched
+
+    @property
+    def hedge_wait_base_t(self) -> float:
+        """Re-hedges wait a full hedge interval since the LAST dispatch,
+        not since enqueue (else every scan past the threshold fires)."""
+        return (self.enqueue_t if self.last_hedge_t is None
+                else self.last_hedge_t)
+
+    def dispatch_twin(self, crit_push, fire_t: float) -> bool:
+        """Escalate a hedge copy of this request via ``crit_push`` (a
+        CRITICAL queue's ``push``); on success mark THIS entry hedged
+        and stamp the dispatch time. Shared by engine-internal and
+        cluster hedging so the twin bookkeeping cannot diverge."""
+        twin = QueuedRequest(
+            request=self.request, priority=self.priority,
+            tenant=self.tenant, deadline_t=self.deadline_t,
+            enqueue_t=self.enqueue_t, hedged=True,
+            n_hedges=self.n_hedges + 1, last_hedge_t=fire_t)
+        if not crit_push(twin):
+            return False
+        self.hedged = True
+        self.n_hedges += 1
+        self.last_hedge_t = fire_t
+        return True
 
     @property
     def n_items(self) -> int:
@@ -68,6 +94,26 @@ class EDFQueue:
 
     def peek(self) -> Optional[QueuedRequest]:
         return self._heap[0][2] if self._heap else None
+
+    def pop_back(self) -> Optional[QueuedRequest]:
+        """Remove the entry with the LATEST deadline (the EDF back).
+
+        The work-stealing primitive: taking from the back never touches
+        the head, so the victim's EDF drain order is unchanged for every
+        request that remains (with >= 2 entries the max-key entry is
+        never the min-key head).
+        """
+        if not self._heap:
+            return None
+        i = max(range(len(self._heap)),
+                key=lambda j: self._heap[j][:2])
+        _, _, qreq = self._heap[i]
+        last = self._heap.pop()
+        if i < len(self._heap):
+            self._heap[i] = last
+            heapq.heapify(self._heap)
+        self.n_items -= qreq.n_items
+        return qreq
 
     def fill_frac(self) -> float:
         return len(self._heap) / max(self.capacity, 1)
@@ -111,3 +157,25 @@ class PriorityQueueBank:
 
     def fill_frac(self, priority: Priority) -> float:
         return self.queues[priority].fill_frac()
+
+    def steal_back(self, min_leave: int = 1) -> Optional[QueuedRequest]:
+        """Pop from the back of the lowest-importance non-empty class.
+
+        Victim-side work stealing: least-important, latest-deadline work
+        leaves first, and a class is only robbed while more than
+        ``min_leave`` entries remain — with the default of 1 the head of
+        every class stays in place, so the victim's EDF drain order is
+        never reordered by a steal.
+
+        The CRITICAL queue is never robbed: it is next to drain here
+        anyway, and it may hold escalated hedge twins (entries whose
+        ``priority`` is their ORIGINAL class) — a thief re-pushing one
+        via ``push`` would silently demote it out of escalation.
+        """
+        for p in reversed(list(Priority)):
+            if p is Priority.CRITICAL:
+                continue
+            q = self.queues[p]
+            if len(q) > min_leave:
+                return q.pop_back()
+        return None

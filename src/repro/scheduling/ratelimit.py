@@ -62,7 +62,22 @@ class TenantRateLimiter:
         self._buckets: Dict[str, TokenBucket] = {}
 
     def configure(self, tenant: str, rate: float, burst: float) -> None:
-        self._buckets[tenant] = TokenBucket(rate=rate, burst=burst)
+        """Install or retune a tenant's quota.
+
+        Retuning adjusts the EXISTING bucket in place (tokens clamped
+        to the new burst) — replacing it would refill to a full burst
+        and forgive everything the tenant already consumed, letting a
+        periodically-reconfigured quota (the cluster autoscaler) never
+        actually bind.
+        """
+        b = self._buckets.get(tenant)
+        if b is None:
+            self._buckets[tenant] = TokenBucket(rate=rate, burst=burst)
+            return
+        b.rate = rate
+        if not math.isnan(b.tokens):
+            b.tokens = min(b.tokens, burst)
+        b.burst = burst
 
     def _bucket(self, tenant: str) -> TokenBucket:
         b = self._buckets.get(tenant)

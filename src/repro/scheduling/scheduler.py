@@ -51,6 +51,10 @@ class Request:
     features: Dict[str, np.ndarray]
     arrival_s: float
     slo_s: float
+    # LM decode requests must claim a KVCachePool slot to make progress;
+    # the batcher keeps them queued while no slot is claimable instead of
+    # spending batch budget they cannot use.
+    needs_kv_slot: bool = False
 
 
 @dataclass
@@ -117,9 +121,13 @@ class Scheduler:
 
     def __init__(self, cfg: TrustIRConfig, shedder: LoadShedder,
                  sched_cfg: Optional[SchedulerConfig] = None,
-                 now: Optional[Callable[[], float]] = None):
+                 now: Optional[Callable[[], float]] = None,
+                 kv_pool=None):
         self.cfg = cfg
         self.shedder = shedder
+        # KVCachePool (or bare SlotAllocator) consulted by drain so
+        # decode requests without a claimable slot stay queued.
+        self.kv_pool = kv_pool
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self._now = now or shedder._now
         self.policy = AdmissionPolicy(
@@ -177,6 +185,8 @@ class Scheduler:
             admitted = self.bank.push(qreq)
             assert admitted          # capacity checked above
             self.stats.n_admitted += 1
+            if self.hedge is not None:
+                self.hedge.note_request()   # earn hedge budget
             return None
         self.stats.n_rejected += 1
         self.stats.rejected_by_reason[reason] = \
@@ -207,35 +217,52 @@ class Scheduler:
     def _hedge_scan(self) -> None:
         """Re-dispatch long-waiting non-CRITICAL requests at CRITICAL
         priority (first completion wins; twin deduplicated in
-        ``_execute``)."""
+        ``_execute``). Bounded by the hedge budget: ``max_hedges``
+        re-issues per request, token-bucket capped as a fraction of
+        admitted traffic."""
+        if self.hedge.budget_available < 1.0:
+            return          # tokens only refill on submit, not mid-scan
         now = self._now()
         crit = self.bank.queues[Priority.CRITICAL]
         for p in (Priority.HIGH, Priority.NORMAL, Priority.LOW):
             for qreq in self.bank.queues[p].entries():
-                if self.hedge.should_hedge(now - qreq.enqueue_t,
-                                           qreq.hedged):
-                    # Pushed straight into the CRITICAL queue but keeps
-                    # its original priority for response accounting.
-                    twin = QueuedRequest(
-                        request=qreq.request, priority=qreq.priority,
-                        tenant=qreq.tenant, deadline_t=qreq.deadline_t,
-                        enqueue_t=qreq.enqueue_t, hedged=True)
-                    if crit.push(twin):
-                        qreq.hedged = True
-                        self.stats.n_hedges += 1
+                # The twin goes straight into the CRITICAL queue but
+                # keeps its original priority for response accounting.
+                if self.hedge.should_hedge(now - qreq.hedge_wait_base_t,
+                                           qreq.n_hedges) \
+                        and qreq.dispatch_twin(crit.push, now):
+                    self.hedge.record_hedge()
+                    self.stats.n_hedges += 1
 
     # -- drain --------------------------------------------------------------
+    def _kv_free_slots(self) -> Optional[int]:
+        """Claimable KV slots (None when no pool is attached). Accepts a
+        ``KVCachePool`` or a bare ``SlotAllocator``."""
+        if self.kv_pool is None:
+            return None
+        alloc = getattr(self.kv_pool, "alloc", self.kv_pool)
+        return len(alloc.free)
+
     def drain(self, max_batches: Optional[int] = None) -> List[Response]:
         """Form and execute micro-batches until the queues are empty (or
-        ``max_batches`` is reached)."""
+        ``max_batches`` is reached, or the head is a decode request with
+        no claimable KV slot — which stays queued)."""
         out: List[Response] = []
         n_done = 0
+        # KV budget threads across the whole drain: slots are claimed by
+        # the decode executor after responses land, so batches formed in
+        # one drain must share the snapshot taken here.
+        kv_budget = self._kv_free_slots()
         while max_batches is None or n_done < max_batches:
             if self.hedge is not None:
                 self._hedge_scan()
-            batch = self.batcher.form(self.bank)
+            batch = self.batcher.form(self.bank, kv_free=kv_budget)
             if batch is None:
                 break
+            if kv_budget is not None:
+                kv_budget -= sum(
+                    1 for q, _, _ in batch.slices
+                    if MicroBatcher._needs_kv_slot(q))
             out.extend(self._execute(batch))
             n_done += 1
         return out
@@ -275,6 +302,10 @@ class Scheduler:
                 shed=sub, priority=qreq.priority,
                 queue_delay_s=max(batch_start - qreq.enqueue_t, 0.0),
                 hedged=qreq.hedged))
-            if qreq.hedged:
-                self._answered.add(rid)     # skip the queued twin later
+            if qreq.hedged and self.hedge is not None:
+                # Skip the twin queued in THIS scheduler later. When the
+                # twin lives on another replica (cluster hedging, where
+                # self.hedge is None), the ClusterCoordinator owns the
+                # fleet-wide dedup instead.
+                self._answered.add(rid)
         return responses

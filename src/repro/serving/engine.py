@@ -38,13 +38,32 @@ from repro.core.shedder import LoadShedder, ShedResult, SimClock
 from repro.scheduling import (Priority, Request, Response, Scheduler,
                               SchedulerConfig)
 
-__all__ = ["Request", "Response", "ServingEngine"]
+__all__ = ["Request", "Response", "ServingEngine", "slo_stats_of"]
+
+
+def slo_stats_of(completed: List[Response]) -> Dict[str, float]:
+    """P50/P99 latency + SLO attainment over admitted responses (shared
+    by the single engine and the cluster coordinator)."""
+    admitted = [r for r in completed if r.admitted]
+    if not admitted:
+        return {"n": 0, "n_rejected": len(completed),
+                "p50_s": float("nan"), "p99_s": float("nan"),
+                "slo_met_frac": float("nan")}
+    lat = np.asarray([r.latency_s for r in admitted])
+    return {
+        "n": len(admitted),
+        "n_rejected": len(completed) - len(admitted),
+        "p50_s": float(np.percentile(lat, 50)),
+        "p99_s": float(np.percentile(lat, 99)),
+        "slo_met_frac": float(np.mean([r.met_slo for r in admitted])),
+    }
 
 
 class ServingEngine:
     def __init__(self, cfg: TrustIRConfig, evaluate_chunk: Callable,
                  sim_clock: Optional[SimClock] = None,
-                 sched_cfg: Optional[SchedulerConfig] = None):
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 kv_pool=None, request_ids=None):
         self.cfg = cfg
         self.monitor = LoadMonitor(cfg)
         shedder = LoadShedder(cfg, evaluate_chunk,
@@ -53,8 +72,11 @@ class ServingEngine:
         self.sim_clock = sim_clock
         self.scheduler = Scheduler(cfg, shedder,
                                    sched_cfg or SchedulerConfig(),
-                                   now=self._now)
-        self._ids = itertools.count()
+                                   now=self._now, kv_pool=kv_pool)
+        # ``request_ids`` lets a ClusterCoordinator share one id source
+        # across replica engines so request ids stay fleet-unique.
+        self._ids = request_ids if request_ids is not None \
+            else itertools.count()
         self.completed: List[Response] = []
 
     # The scheduler executes whatever shedder the engine carries, so the
@@ -77,12 +99,15 @@ class ServingEngine:
                 features: Dict[str, np.ndarray],
                 slo_s: Optional[float] = None,
                 priority: Priority = Priority.NORMAL,
-                tenant: str = "default") -> int:
+                tenant: str = "default",
+                needs_kv_slot: bool = False) -> int:
         """Admit a request into the scheduler; returns its request id.
 
         A rejected request completes immediately (its explicit response
         lands in ``self.completed``); an admitted one completes on a
-        subsequent ``drain``.
+        subsequent ``drain``. ``needs_kv_slot`` marks LM decode requests
+        that must claim a ``KVCachePool`` slot before they can be
+        batched.
         """
         rid = next(self._ids)
         # NOTE: an explicit slo_s=0.0 is honored (`or` would silently
@@ -90,7 +115,8 @@ class ServingEngine:
         req = Request(rid, item_keys, buckets, features,
                       arrival_s=self._now(),
                       slo_s=(self.cfg.overload_deadline_s
-                             if slo_s is None else slo_s))
+                             if slo_s is None else slo_s),
+                      needs_kv_slot=needs_kv_slot)
         rejection = self.scheduler.submit(req, priority=priority,
                                           tenant=tenant)
         if rejection is not None:
@@ -121,20 +147,7 @@ class ServingEngine:
 
     # -- observability ------------------------------------------------------
     def slo_stats(self) -> Dict[str, float]:
-        admitted = [r for r in self.completed if r.admitted]
-        if not admitted:
-            return {"n": 0, "n_rejected": len(self.completed),
-                    "p50_s": float("nan"), "p99_s": float("nan"),
-                    "slo_met_frac": float("nan")}
-        lat = np.asarray([r.latency_s for r in admitted])
-        return {
-            "n": len(admitted),
-            "n_rejected": len(self.completed) - len(admitted),
-            "p50_s": float(np.percentile(lat, 50)),
-            "p99_s": float(np.percentile(lat, 99)),
-            "slo_met_frac": float(np.mean([r.met_slo
-                                           for r in admitted])),
-        }
+        return slo_stats_of(self.completed)
 
     def scheduler_stats(self) -> Dict:
         return self.scheduler.stats.as_dict()

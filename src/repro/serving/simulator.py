@@ -15,6 +15,11 @@ Two workload drivers:
   ``ServingEngine`` (``repro.scheduling``): requests enqueue as they
   arrive and drain in micro-batches, reporting per-priority latency,
   admission outcomes, and regime mix.
+* :func:`run_cluster_workload` — the same arrival model against an
+  N-replica ``ClusterCoordinator`` (``repro.cluster``): tenants route
+  through the consistent-hash ring, replicas drain round-robin on
+  independent simulated clocks (parallel hardware), queues rebalance by
+  work-stealing, and stuck requests hedge onto real backup replicas.
 """
 from __future__ import annotations
 
@@ -209,3 +214,33 @@ def run_scheduled_workload(engine, searcher: SyntheticSearcher,
     engine.drain()
     return SchedSimReport(responses=list(engine.completed[n0:]),
                           scheduler_stats=engine.scheduler_stats())
+
+
+def run_cluster_workload(coordinator, searcher: SyntheticSearcher,
+                         wl: MultiTenantWorkload) -> SchedSimReport:
+    """Drive an N-replica ``ClusterCoordinator`` with the same
+    multi-tenant Poisson arrival stream as
+    :func:`run_scheduled_workload` (``n_replicas=1`` reproduces it).
+
+    Arrivals carry their global timestamp so each routed replica's
+    simulated clock fast-forwards onto the shared timeline; a drain
+    round (one micro-batch per replica, preceded by steal + hedge
+    scans) fires whenever the fleet backlog reaches one per-replica
+    batch budget, plus a final flush."""
+    n0 = len(coordinator.completed)
+    for t_arr, tenant, prio, n_res in make_arrivals(wl):
+        res = searcher.search(f"{tenant.name}_{t_arr:.6f}", n_res)
+        feats = dict(res.features)
+        feats["trust"] = res.exact_trust
+        coordinator.enqueue(res.url_ids, res.buckets, feats,
+                            slo_s=tenant.slo_s, priority=prio,
+                            tenant=tenant.name, t_arrival=t_arr)
+        # One round drains up to one batch per replica: let a full
+        # round's worth of backlog build (keeps batches full AND gives
+        # the steal scan material to rebalance with).
+        if coordinator.queued_items >= coordinator.max_batch_items \
+                * coordinator.n_replicas:
+            coordinator.drain(max_rounds=1)
+    coordinator.drain()
+    return SchedSimReport(responses=list(coordinator.completed[n0:]),
+                          scheduler_stats=coordinator.scheduler_stats())

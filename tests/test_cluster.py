@@ -1,0 +1,502 @@
+"""Cluster subsystem (repro.cluster): consistent-hash routing
+stability, work-stealing EDF invariants, fleet-wide no-drop under
+hedging, KV-slot-aware admission, bounded hedge budgets, the
+LoadMonitor jitter clamp, and adaptive watermarks."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.cluster import (ClusterConfig, ClusterCoordinator,
+                           ConsistentHashRing, WatermarkAutoscaler)
+from repro.configs.base import TrustIRConfig, reduced
+from repro.configs.trust_ir import smoke_config
+from repro.core import SimClock, TIER_INVALID
+from repro.core.load_monitor import LoadMonitor
+from repro.distribution.fault_tolerance import HedgedDispatch
+from repro.scheduling import (Priority, PriorityQueueBank, QueuedRequest,
+                              Request, SchedulerConfig)
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import SlotAllocator
+
+
+def _mkreq(rid, n, arrival=0.0, slo=10.0, seed=0, needs_kv_slot=False):
+    r = np.random.default_rng(seed + rid)
+    return Request(rid, np.arange(rid * 10_000 + 1,
+                                  rid * 10_000 + n + 1, dtype=np.uint32),
+                   r.integers(0, 8, n).astype(np.int32),
+                   {"x": np.linspace(0, 5, n, dtype=np.float32)},
+                   arrival_s=arrival, slo_s=slo,
+                   needs_kv_slot=needs_kv_slot)
+
+
+def _mkq(rid, n, priority=Priority.NORMAL, deadline=10.0,
+         enqueue=0.0, tenant="t", needs_kv_slot=False):
+    return QueuedRequest(request=_mkreq(rid, n,
+                                        needs_kv_slot=needs_kv_slot),
+                         priority=priority, tenant=tenant,
+                         deadline_t=deadline, enqueue_t=enqueue)
+
+
+def _req_arrays(rid, n, seed=0):
+    r = np.random.default_rng(seed + rid)
+    return (np.arange(rid * 10_000 + 1, rid * 10_000 + n + 1,
+                      dtype=np.uint32),
+            r.integers(0, 8, n).astype(np.int32),
+            {"x": np.linspace(0, 5, n, dtype=np.float32)})
+
+
+def _coordinator(n_replicas, cfg=None, rate_scale=1.0, **cluster_kw):
+    cfg = reduced(cfg or smoke_config(), n_replicas=n_replicas)
+    rate = rate_scale * cfg.u_capacity / cfg.deadline_s
+    return ClusterCoordinator(cfg, lambda ch: np.asarray(ch["x"]),
+                              cluster_cfg=ClusterConfig(**cluster_kw),
+                              sim_rate_items_per_s=rate)
+
+
+# ---------------------------------------------------------------------------
+# routing: deterministic, weighted, minimal-remap consistent hashing
+# ---------------------------------------------------------------------------
+
+def test_ring_routes_deterministically_and_spreads():
+    ring = ConsistentHashRing()
+    for i in range(4):
+        ring.add(f"r{i}")
+    tenants = [f"tenant{i}" for i in range(200)]
+    a = ring.assignments(tenants)
+    assert a == ring.assignments(tenants)          # deterministic
+    used = set(a.values())
+    assert len(used) >= 3                          # spread, not clumped
+    # fresh ring, same membership -> identical mapping (no hidden state)
+    ring2 = ConsistentHashRing()
+    for i in (2, 0, 3, 1):                         # join order differs
+        ring2.add(f"r{i}")
+    assert ring2.assignments(tenants) == a
+
+
+def test_ring_weights_bias_assignment():
+    ring = ConsistentHashRing()
+    ring.add("big", weight=4.0)
+    ring.add("small", weight=1.0)
+    tenants = [f"t{i}" for i in range(500)]
+    counts = {"big": 0, "small": 0}
+    for t in tenants:
+        counts[ring.route(t)] += 1
+    assert counts["big"] > counts["small"] * 2     # ~4x in expectation
+
+
+def test_ring_route_chain_distinct_and_backup():
+    ring = ConsistentHashRing()
+    for i in range(3):
+        ring.add(f"r{i}")
+    chain = ring.route_chain("tenant", 3)
+    assert len(chain) == 3 and len(set(chain)) == 3
+    assert ring.backup_for("tenant") == chain[1]
+    assert ring.backup_for("tenant") != ring.route("tenant")
+    solo = ConsistentHashRing()
+    solo.add("r0")
+    assert solo.backup_for("tenant") is None       # no twin to race
+
+
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ring_removal_remaps_only_removed_replicas_tenants(n_rep, seed):
+    """Consistent-hashing stability: removing one replica remaps ONLY
+    the tenants that were routed to it (ISSUE 2 property a)."""
+    rng = np.random.default_rng(seed)
+    ring = ConsistentHashRing()
+    for i in range(n_rep):
+        ring.add(f"r{i}", weight=float(rng.integers(1, 4)))
+    tenants = [f"tenant{i}" for i in range(150)]
+    before = ring.assignments(tenants)
+    victim = f"r{int(rng.integers(n_rep))}"
+    ring.remove(victim)
+    after = ring.assignments(tenants)
+    for t in tenants:
+        if before[t] != victim:
+            assert after[t] == before[t]           # untouched
+        else:
+            assert after[t] != victim              # remapped elsewhere
+
+
+# ---------------------------------------------------------------------------
+# work stealing: EDF heads survive, backs of the lowest class leave first
+# ---------------------------------------------------------------------------
+
+def test_steal_back_takes_lowest_class_latest_deadline():
+    bank = PriorityQueueBank(capacity_per_class=16)
+    bank.push(_mkq(0, 4, Priority.HIGH, deadline=1.0))
+    bank.push(_mkq(1, 4, Priority.HIGH, deadline=9.0))
+    bank.push(_mkq(2, 4, Priority.LOW, deadline=2.0))
+    bank.push(_mkq(3, 4, Priority.LOW, deadline=7.0))
+    stolen = bank.steal_back()
+    assert stolen.priority is Priority.LOW         # lowest class first
+    assert stolen.deadline_t == 7.0                # back, not head
+    # LOW now has one entry (its head) -> next steal robs HIGH's back
+    stolen2 = bank.steal_back()
+    assert stolen2.priority is Priority.HIGH
+    assert stolen2.deadline_t == 9.0
+    # nothing left stealable (every class at most one entry)
+    assert bank.steal_back() is None
+    assert len(bank) == 2
+
+
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.floats(min_value=0.0, max_value=100.0)),
+                min_size=2, max_size=24),
+       st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_steal_never_reorders_edf_heads_property(entries, n_steals):
+    """ISSUE 2 property (b): after any number of steals, every class
+    head is unchanged (unless legitimately drained to <= 1 entries was
+    never robbed) and the remaining entries still pop in EDF order."""
+    bank = PriorityQueueBank(capacity_per_class=64)
+    for i, (p, dl) in enumerate(entries):
+        bank.push(_mkq(i, 2, Priority(p), deadline=dl))
+    heads_before = {p: (q.peek().request.request_id
+                        if q.peek() is not None else None)
+                    for p, q in bank.queues.items()}
+    sizes_before = {p: len(q) for p, q in bank.queues.items()}
+    stolen = []
+    for _ in range(n_steals):
+        s = bank.steal_back()
+        if s is None:
+            break
+        stolen.append(s)
+    n_remaining = 0
+    for p, q in bank.queues.items():
+        if sizes_before[p] > 0:
+            assert len(q) >= 1                     # never robbed empty
+            assert q.peek().request.request_id == heads_before[p]
+        popped = []
+        while True:
+            item = q.pop()
+            if item is None:
+                break
+            popped.append(item.deadline_t)
+        n_remaining += len(popped)
+        assert popped == sorted(popped)            # EDF order intact
+    assert len(stolen) + n_remaining == len(entries)   # conservation
+
+
+def test_cluster_steal_moves_work_to_idle_replica():
+    coord = _coordinator(2, steal_threshold_items=1)
+    # Route probes: find tenants living on each replica.
+    t_a = next(t for t in (f"t{i}" for i in range(50))
+               if coord.ring.route(t) == "r0")
+    for i in range(6):
+        coord.enqueue(*_req_arrays(i, 20), tenant=t_a, slo_s=10.0)
+    assert coord.replicas[0].queued_requests == 6
+    assert coord.replicas[1].queued_requests == 0
+    coord._steal_rebalance()
+    assert coord.stats.n_steals > 0
+    assert coord.replicas[1].queued_requests == coord.stats.n_steals
+    # the victim's head (earliest deadline among same-priority) stayed
+    coord.drain()
+    assert len(coord.completed) == 6               # nothing lost
+
+
+# ---------------------------------------------------------------------------
+# fleet-wide no-drop: exactly one Response per request, hedging on
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(1, 120), st.integers(0, 2),
+                          st.integers(0, 5)),
+                min_size=1, max_size=14),
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_fleet_no_drop_property(reqs, seed, n_replicas):
+    """ISSUE 2 property (c): random multi-tenant streams through an
+    N-replica fleet with hedging enabled -> every submitted request
+    gets EXACTLY one Response fleet-wide (twins deduplicated), admitted
+    ones with finite trust for every item."""
+    coord = _coordinator(n_replicas, hedge_after_s=0.01,
+                         steal_threshold_items=1)
+    rng = np.random.default_rng(seed)
+    rids, t = [], 0.0
+    for i, (n, p, tn) in enumerate(reqs):
+        t += float(rng.exponential(0.005))         # bursty arrivals
+        rids.append(coord.enqueue(
+            *_req_arrays(i, n, seed=seed),
+            priority=Priority(p + 1),              # HIGH/NORMAL/LOW
+            tenant=f"t{tn}", slo_s=10.0, t_arrival=t))
+    coord.drain()
+    by_rid = {}
+    for r in coord.completed:
+        assert r.request_id not in by_rid          # exactly one response
+        by_rid[r.request_id] = r
+    assert sorted(by_rid) == sorted(rids)          # none missing
+    for i, (n, _, _) in enumerate(reqs):
+        r = by_rid[rids[i]]
+        assert r.trust.shape == (n,)
+        assert np.isfinite(r.trust).all()
+        if r.admitted:
+            assert (r.tier != TIER_INVALID).all()
+        else:
+            assert r.reason
+    # hedge losers are observable, never silently vanished
+    assert coord.stats.n_twin_drops <= coord.stats.n_hedges
+
+
+def test_single_replica_degenerates_to_plain_engine():
+    """n_replicas=1 must reproduce the PR-1 single-engine path bit for
+    bit (same trust, same tiers, same order)."""
+    cfg = smoke_config()
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=clock, sched_cfg=SchedulerConfig())
+    coord = _coordinator(1)
+    for i, n in enumerate((30, 80, 200, 15)):
+        eng.enqueue(*_req_arrays(i, n), slo_s=5.0)
+        coord.enqueue(*_req_arrays(i, n), slo_s=5.0)
+    eng.drain()
+    coord.drain()
+    assert len(eng.completed) == len(coord.completed)
+    for a, b in zip(eng.completed, coord.completed):
+        assert a.request_id == b.request_id
+        np.testing.assert_allclose(a.trust, b.trust)
+        np.testing.assert_array_equal(a.tier, b.tier)
+
+
+def test_cluster_hedge_races_real_backup_and_dedups():
+    coord = _coordinator(2, hedge_after_s=0.5, steal_threshold_items=10 ** 9)
+    t_a = next(t for t in (f"t{i}" for i in range(50))
+               if coord.ring.route(t) == "r0")
+    rid = coord.enqueue(*_req_arrays(0, 20), tenant=t_a, slo_s=10.0)
+    coord.replicas[0].clock.t += 1.0               # waited past hedge
+    coord.drain()
+    assert coord.stats.n_hedges == 1               # twin on the backup
+    assert coord.stats.n_twin_drops == 1           # loser deduplicated
+    assert [r.request_id for r in coord.completed] == [rid]
+    # the twin really ran on the OTHER replica
+    assert coord.replicas[1].scheduler.stats.n_batches > 0
+
+
+# ---------------------------------------------------------------------------
+# bounded hedge budget (HedgedDispatch)
+# ---------------------------------------------------------------------------
+
+def test_rehedge_escalates_to_a_fresh_replica():
+    """The k-th hedge of a request must target the k-th distinct ring
+    replica past the primary — never a replica already holding a copy —
+    and stop once the chain is exhausted."""
+    coord = _coordinator(3, hedge_after_s=0.5)
+    tenant = "tenant-x"
+    chain = coord.ring.route_chain(tenant, 3)
+    primary = coord.by_id[chain[0]]
+    first = coord._backup_for(tenant, primary, n_prior_hedges=0)
+    second = coord._backup_for(tenant, primary, n_prior_hedges=1)
+    assert first.replica_id == chain[1]
+    assert second.replica_id == chain[2]
+    # distinct: the re-hedge does NOT bounce back to the first backup
+    assert second.replica_id != first.replica_id
+    # all replicas hold copies -> no further target
+    assert coord._backup_for(tenant, primary, n_prior_hedges=2) is None
+    # a stolen copy waiting on its own would-be target skips itself
+    onward = coord._backup_for(tenant, first, n_prior_hedges=0)
+    assert onward.replica_id == chain[2]
+
+
+def test_hedged_dispatch_max_hedges_and_budget():
+    h = HedgedDispatch(hedge_after_s=0.2)
+    assert not h.should_hedge(0.1, False)          # too early
+    assert h.should_hedge(0.25, False)             # bool compat (0 prior)
+    assert not h.should_hedge(0.25, True)          # bool compat (1 prior)
+    h2 = HedgedDispatch(hedge_after_s=0.2, max_hedges=3)
+    assert h2.should_hedge(0.25, 2)                # re-hedge allowed
+    assert not h2.should_hedge(0.25, 3)            # bound respected
+
+
+def test_hedge_budget_caps_hedge_rate_near_frac():
+    h = HedgedDispatch(hedge_after_s=0.0, budget_frac=0.05,
+                       budget_burst=1.0)
+    issued = 0
+    for _ in range(200):
+        h.note_request()
+        if h.should_hedge(1.0, 0):
+            h.record_hedge()
+            issued += 1
+    # 200 requests * 5% + 1 burst token
+    assert issued <= 11
+    assert issued >= 10
+    assert h.n_hedges_issued == issued
+    assert not h.should_hedge(1.0, 0)              # budget spent
+    for _ in range(20):                            # traffic re-earns it
+        h.note_request()
+    assert h.should_hedge(1.0, 0)
+
+
+# ---------------------------------------------------------------------------
+# KV-slot-aware admission (decode requests without a claimable slot)
+# ---------------------------------------------------------------------------
+
+def test_decode_without_free_slot_stays_queued():
+    cfg = smoke_config()
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+    pool = SlotAllocator(n_slots=1)
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=clock, kv_pool=pool)
+    pool.claim(request_id=999)                     # no free slots left
+    rid = eng.enqueue(*_req_arrays(0, 8), needs_kv_slot=True)
+    out = eng.drain()
+    assert out == []                               # not batchable ...
+    assert len(eng.scheduler.bank) == 1            # ... stays queued
+    pool.release(0)                                # slot frees up
+    out = eng.drain()
+    assert [r.request_id for r in out] == [rid]    # now it completes
+
+
+def test_decode_head_does_not_burn_batch_budget():
+    """With zero free slots the decode head blocks its queue (no
+    reordering past the head), but other priority classes still drain —
+    the slotless request occupies NO batch capacity."""
+    cfg = smoke_config()
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+    pool = SlotAllocator(n_slots=0)
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=clock, kv_pool=pool)
+    eng.enqueue(*_req_arrays(0, 8), needs_kv_slot=True,
+                priority=Priority.NORMAL)
+    rid_hi = eng.enqueue(*_req_arrays(1, 8), priority=Priority.HIGH)
+    out = eng.drain()
+    assert [r.request_id for r in out] == [rid_hi]
+    assert len(eng.scheduler.bank) == 1            # decode still queued
+
+
+def test_slot_budget_threads_across_one_drain():
+    """Two decode requests, one free slot: exactly one is batched per
+    drain even though slots are not claimed until execution."""
+    cfg = smoke_config()
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+    pool = SlotAllocator(n_slots=1)
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=clock,
+                        sched_cfg=SchedulerConfig(max_batch_items=16),
+                        kv_pool=pool)
+    r0 = eng.enqueue(*_req_arrays(0, 8), needs_kv_slot=True)
+    eng.enqueue(*_req_arrays(1, 8), needs_kv_slot=True)
+    out = eng.drain()
+    assert [r.request_id for r in out] == [r0]
+    assert len(eng.scheduler.bank) == 1
+
+
+# ---------------------------------------------------------------------------
+# LoadMonitor jitter clamp
+# ---------------------------------------------------------------------------
+
+def test_load_monitor_clamps_jitter_spike():
+    cfg = smoke_config()
+    m = LoadMonitor(cfg)
+    m.observe(100, 1.0)                            # seed: 100 items/s
+    m.observe(100, 1e-9)                           # pathological sample
+    # blended against the clamped rate (8x estimate), not 1e11
+    assert m.rate <= 100 * (1 - m.ewma) + 800 * m.ewma + 1e-6
+    m2 = LoadMonitor(cfg)
+    m2.observe(100, 1.0)
+    before = m2.rate
+    for _ in range(50):                            # honest fast samples
+        m2.observe(400, 1.0)
+    assert m2.rate > before * 3                    # clamp only rate-limits
+
+
+# ---------------------------------------------------------------------------
+# adaptive watermarks + tenant quotas (autoscaler)
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_tightens_watermarks_under_pressure():
+    coord = _coordinator(2)
+    auto = WatermarkAutoscaler(ewma=1.0)           # no smoothing: direct
+    idle = auto.update(coord.replicas, tenants=["a"])
+    assert idle.pressure == 0.0
+    assert idle.low_watermark == pytest.approx(auto.base_low)
+    assert idle.normal_watermark == pytest.approx(auto.base_normal)
+    # flood one replica's queues, then update again
+    for i in range(12):
+        coord.enqueue(*_req_arrays(i, 60), tenant="a", slo_s=10.0)
+    hot = auto.update(coord.replicas, tenants=["a"])
+    assert hot.pressure > 0.5
+    assert hot.low_watermark < idle.low_watermark
+    assert hot.normal_watermark < idle.normal_watermark
+    assert hot.low_watermark >= auto.floor_low
+    # pushed onto every replica's admission policy
+    for rep in coord.replicas:
+        assert rep.scheduler.policy.low_watermark \
+            == pytest.approx(hot.low_watermark)
+    # tenant quotas derived from measured fleet rate, per replica
+    _, _, rate = auto.cluster_parameters(coord.replicas)
+    for rep in coord.replicas:
+        avail, burst = rep.scheduler.limiter.snapshot(now=0.0)["a"]
+        assert burst == pytest.approx(
+            auto.tenant_capacity_frac * rate
+            * (rep.monitor.rate / rate) * auto.tenant_burst_s)
+    # drain the backlog -> pressure relaxes toward base
+    coord.drain()
+    cool = auto.update(coord.replicas, tenants=["a"])
+    assert cool.low_watermark > hot.low_watermark
+
+
+def test_autoscaler_anchors_on_configured_watermarks():
+    """The operator's SchedulerConfig watermarks are the idle anchor —
+    the autoscaler must modulate them, not overwrite them with its own
+    defaults."""
+    cfg = reduced(smoke_config(), n_replicas=2)
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ch["x"]),
+        sched_cfg=SchedulerConfig(low_watermark=0.2,
+                                  normal_watermark=0.6),
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    auto = WatermarkAutoscaler(ewma=1.0)
+    idle = auto.update(coord.replicas)
+    assert idle.low_watermark == pytest.approx(0.2)
+    assert idle.normal_watermark == pytest.approx(0.6)
+    for rep in coord.replicas:      # pushed values == configured anchor
+        assert rep.scheduler.policy.low_watermark == pytest.approx(0.2)
+    for i in range(12):             # under pressure: tighter, never up
+        coord.enqueue(*_req_arrays(i, 60), tenant="a", slo_s=10.0)
+    hot = auto.update(coord.replicas)
+    assert hot.low_watermark < 0.2
+    assert hot.normal_watermark < 0.6
+
+
+def test_steal_back_never_robs_critical_queue():
+    """Escalated hedge twins live in the CRITICAL queue under their
+    ORIGINAL priority; stealing one would demote it on re-push, so the
+    CRITICAL queue is never a steal victim."""
+    bank = PriorityQueueBank(capacity_per_class=16)
+    # two twins escalated into CRITICAL, original priority LOW
+    for i in range(2):
+        bank.queues[Priority.CRITICAL].push(
+            _mkq(i, 4, Priority.LOW, deadline=float(i)))
+    assert bank.steal_back() is None
+    assert len(bank.queues[Priority.CRITICAL]) == 2
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: the cluster workload driver
+# ---------------------------------------------------------------------------
+
+def test_run_cluster_workload_end_to_end():
+    from repro.core.pipeline import SyntheticSearcher
+    from repro.serving.simulator import (MultiTenantWorkload, TenantSpec,
+                                         run_cluster_workload)
+
+    cfg = reduced(smoke_config(), n_replicas=3)
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ch["trust"]),
+        cluster_cfg=ClusterConfig(hedge_after_s=0.2, autoscale=True),
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    wl = MultiTenantWorkload(tenants=[
+        TenantSpec(f"tenant{i}", qps=10.0, max_results=400, slo_s=5.0)
+        for i in range(6)], n_queries=48, seed=3)
+    rep = run_cluster_workload(
+        coord, SyntheticSearcher(corpus_size=5000, seed=1), wl)
+    s = rep.summary()
+    assert s["n_responses"] == s["n_admitted"] + s["n_rejected"]
+    assert s["n_responses"] >= 48 * 0.9            # every arrival answered
+    rids = [r.request_id for r in rep.responses]
+    assert len(rids) == len(set(rids))             # fleet-wide dedup
+    assert rep.scheduler_stats["cluster"]["n_steals"] >= 0
+    assert "autoscale" in rep.scheduler_stats
+    for r in rep.responses:
+        assert np.isfinite(r.trust).all()
+        if r.admitted:
+            assert (r.tier != TIER_INVALID).all()
