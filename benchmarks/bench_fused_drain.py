@@ -1,0 +1,210 @@
+"""Fused device-resident drain vs the host chunk-loop drain.
+
+Acceptance benchmark for ``core.fused_shedder`` (the serving hot path):
+the same request stream is drained through
+
+  * ``drain_mode="host"`` — ``LoadShedder.process``: one Trust-DB probe
+    dispatch, then a host-side chunk loop that re-gathers features and
+    round-trips to the device once per chunk, per micro-batch;
+  * ``drain_mode="fused"`` — ``FusedLoadShedder``: ONE jitted step per
+    micro-batch (Pallas ``shed_partition`` probe+tier with compacted
+    eval indices, static-shape gather, batched evaluator forward,
+    scatter, cache/prior fold-back), async-dispatched so batch N+1 forms
+    while batch N computes.
+
+Both paths use the SAME evaluator, chunk/batch budget and shedder
+config; Ucapacity exceeds the batch bound so every item is fully
+evaluated on both paths (equal work — throughput isolates drain
+overhead). Targets: fused >= 2x host items/s, p99 no worse.
+
+A separate simulated-clock phase checks decision parity across all
+three regimes on a cold cache: tiers must match the host oracle
+EXACTLY (the fused budget derives from the same ``shed_plan`` math; the
+bench loads keep the drop-queue budget chunk-aligned so the host
+executor's chunk-granular clock lands on the identical grant), trust
+matches to float tolerance (batched vs chunked matmul reassociation),
+and the no-item-dropped property holds on both paths.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+D_FEAT = 16
+
+
+def _make_evaluator(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (D_FEAT,))) / np.sqrt(D_FEAT)
+
+    @jax.jit
+    def ev(chunk):
+        return jax.nn.sigmoid(chunk["x"] @ jnp.asarray(w)) * 5.0
+
+    def evaluate_np(chunk: Dict) -> np.ndarray:
+        return np.asarray(ev({"x": jnp.asarray(chunk["x"])}))
+    return ev, evaluate_np
+
+
+def _requests(n_requests: int, items_per_req: int, seed: int = 0,
+              key_offset: int = 0) -> List[Tuple]:
+    r = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        base = key_offset + i * 100_000 + 1
+        keys = np.arange(base, base + items_per_req, dtype=np.uint32)
+        buckets = r.integers(0, 64, items_per_req).astype(np.int32)
+        feats = {"x": r.normal(size=(items_per_req, D_FEAT)
+                               ).astype(np.float32)}
+        reqs.append((keys, buckets, feats))
+    return reqs
+
+
+def _run_stream(eng, reqs) -> float:
+    t0 = time.perf_counter()
+    for keys, buckets, feats in reqs:
+        eng.enqueue(keys, buckets, feats)
+    eng.drain()
+    return time.perf_counter() - t0
+
+
+def _throughput_phase(n_requests: int, items_per_req: int,
+                      batch_items: int, out: Dict) -> None:
+    from repro.configs.base import TrustIRConfig
+    from repro.scheduling import SchedulerConfig
+    from repro.serving.engine import ServingEngine
+
+    # Ucapacity above the batch bound: every item is fully evaluated on
+    # both paths (equal work at equal micro-batch budget).
+    cfg = TrustIRConfig(u_capacity=4096, u_threshold=2048,
+                        deadline_s=0.5, overload_deadline_s=1.0,
+                        chunk_size=64, cache_slots=8192)
+    ev, evaluate_np = _make_evaluator()
+    n_items = n_requests * items_per_req
+    sched_cfg = SchedulerConfig(max_batch_items=batch_items)
+
+    for mode in ("host", "fused"):
+        eng = ServingEngine(cfg, evaluate_np, sched_cfg=sched_cfg,
+                            drain_mode=mode, evaluate_batch=ev)
+        _run_stream(eng, _requests(8, items_per_req,
+                                   key_offset=50_000_000))  # warm/compile
+        eng.completed.clear()
+        wall = _run_stream(eng, _requests(n_requests, items_per_req))
+        s = eng.slo_stats()
+        st = eng.scheduler_stats()
+        out[mode] = {"wall_s": wall, "items_per_s": n_items / wall,
+                     "p50_s": s["p50_s"], "p99_s": s["p99_s"],
+                     "n_batches": st["n_batches"],
+                     "mean_batch_fill": st["mean_batch_fill"]}
+
+    out["speedup"] = (out["fused"]["items_per_s"]
+                      / out["host"]["items_per_s"])
+    out["speedup_ok"] = bool(out["speedup"] >= 2.0)
+    out["p99_ok"] = bool(out["fused"]["p99_s"]
+                         <= out["host"]["p99_s"] * 1.05)
+
+
+def _parity_phase(out: Dict) -> None:
+    """Cold-cache decision parity across Normal / Heavy / Very Heavy.
+
+    Loads are chosen so the drop-queue eval budget is a multiple of the
+    chunk size (and therefore the host executor's chunk-granular
+    deadline grants the exact ``shed_plan`` budget). The Load Monitor
+    derives (Ucap, Uthr) from its seeded rate — 256 items/s gives
+    (128, 128) — and at chunk=16 the drop-queue budgets for loads
+    96/192/410/512 are 0/128/176/192, all chunk-aligned.
+    """
+    from repro.configs.base import TrustIRConfig
+    from repro.core import SimClock, TIER_INVALID
+    from repro.scheduling import SchedulerConfig
+    from repro.serving.engine import ServingEngine
+
+    cfg = TrustIRConfig(u_capacity=128, u_threshold=128,
+                        deadline_s=0.5, overload_deadline_s=1.0,
+                        very_heavy_weight=0.5, chunk_size=16,
+                        cache_slots=4096)
+    ev, evaluate_np = _make_evaluator()
+    loads = [96, 192, 410, 512]          # Normal/Heavy/VH/VH
+
+    responses = {}
+    for mode in ("host", "fused"):
+        clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+        eng = ServingEngine(cfg, evaluate_np, sim_clock=clock,
+                            sched_cfg=SchedulerConfig(
+                                max_batch_items=512),
+                            drain_mode=mode, evaluate_batch=ev)
+        for i, n in enumerate(loads):
+            keys, buckets, feats = _requests(1, n, seed=7,
+                                             key_offset=i * 10**6)[0]
+            eng.enqueue(keys, buckets, feats)
+            eng.drain()
+        responses[mode] = {r.request_id: r for r in eng.completed}
+
+    parity_ok, no_drop_ok, regimes = True, True, []
+    for rid, rh in responses["host"].items():
+        rf = responses["fused"][rid]
+        regimes.append(rh.shed.regime.name)
+        parity_ok &= bool(np.array_equal(rh.tier, rf.tier))
+        parity_ok &= bool(np.allclose(rh.trust, rf.trust, atol=1e-5))
+        no_drop_ok &= bool(np.all(rh.tier != TIER_INVALID))
+        no_drop_ok &= bool(np.all(rf.tier != TIER_INVALID))
+    out["parity"] = {"loads": loads, "regimes": regimes,
+                     "tiers_match": bool(parity_ok),
+                     "no_drop_both_paths": bool(no_drop_ok)}
+    out["parity_ok"] = bool(parity_ok)
+    out["no_drop_ok"] = bool(no_drop_ok)
+
+
+def main(n_requests: int = 192, items_per_req: int = 64,
+         batch_items: int = 2048, quick: bool = False) -> Dict:
+    if quick:
+        n_requests = min(n_requests, 64)
+    if n_requests <= 0 or items_per_req <= 0 or batch_items <= 0:
+        raise SystemExit("bench_fused_drain: --n-requests, "
+                         "--items-per-req and --batch-items must be "
+                         "positive")
+    out: Dict = {"n_requests": n_requests,
+                 "items_per_req": items_per_req,
+                 "batch_items": batch_items}
+    _throughput_phase(n_requests, items_per_req, batch_items, out)
+    _parity_phase(out)
+
+    print(f"workload: {n_requests} requests x {items_per_req} items "
+          f"(batch bound {batch_items})")
+    for mode in ("host", "fused"):
+        r = out[mode]
+        print(f"  {mode:>5}: {r['items_per_s']:10.0f} items/s   "
+              f"p50 {r['p50_s'] * 1e3:7.2f} ms   "
+              f"p99 {r['p99_s'] * 1e3:7.2f} ms   "
+              f"({r['n_batches']} batches)")
+    print(f"  fused/host = {out['speedup']:.2f}x "
+          f"({'PASS' if out['speedup_ok'] else 'FAIL'}: target >= 2x), "
+          f"p99 {'ok' if out['p99_ok'] else 'WORSE'}")
+    print(f"  parity ({'/'.join(out['parity']['regimes'])}): tiers "
+          f"{'EXACT' if out['parity_ok'] else 'MISMATCH'}, no-drop "
+          f"{'holds' if out['no_drop_ok'] else 'VIOLATED'} on both "
+          f"paths")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-requests", type=int, default=192)
+    ap.add_argument("--items-per-req", type=int, default=64)
+    ap.add_argument("--batch-items", type=int, default=2048)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = main(args.n_requests, args.items_per_req, args.batch_items,
+                quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

@@ -1,9 +1,12 @@
 """Benchmark orchestrator: one bench per paper figure + the roofline
 harness. Prints ``name,us_per_call,derived`` CSV rows per the repo
-convention, followed by the human-readable sections.
+convention, followed by the human-readable sections. ``--quick``
+shrinks the parameterizable workloads (scheduler / cluster / fused
+drain) so a CI run finishes in minutes.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
@@ -16,11 +19,12 @@ def _timed(name, fn):
     return name, dt_us, out
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     from benchmarks import (bench_adaptive, bench_cluster,
-                            bench_heavy_load, bench_response_time,
-                            bench_roofline, bench_scheduler,
-                            bench_throughput, bench_very_heavy_load)
+                            bench_fused_drain, bench_heavy_load,
+                            bench_response_time, bench_roofline,
+                            bench_scheduler, bench_throughput,
+                            bench_very_heavy_load)
 
     csv_rows = []
 
@@ -59,7 +63,10 @@ def main() -> None:
     print("Beyond-paper: priority scheduler vs synchronous submit "
           "(repro.scheduling)")
     print("=" * 72)
-    name, us, rows = _timed("scheduler", bench_scheduler.main)
+    name, us, rows = _timed(
+        "scheduler",
+        (lambda: bench_scheduler.main(n_requests=48)) if quick
+        else bench_scheduler.main)
     csv_rows.append((name, us,
                      f"{rows['speedup']:.2f}x req throughput vs sync"))
     with open("BENCH_scheduler.json", "w") as f:
@@ -71,13 +78,30 @@ def main() -> None:
     print("Beyond-paper: serving fleet 1 vs 2 vs 4 replicas "
           "(repro.cluster)")
     print("=" * 72)
-    name, us, rows = _timed("cluster", bench_cluster.main)
+    name, us, rows = _timed(
+        "cluster",
+        (lambda: bench_cluster.main(n_queries=240)) if quick
+        else bench_cluster.main)
     csv_rows.append((name, us,
                      f"{rows['speedup_4v1']:.2f}x items/s 4 vs 1 "
                      f"replicas"))
     with open("BENCH_cluster.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_cluster.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: fused device-resident drain vs host chunk "
+          "loop (core.fused_shedder)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "fused_drain", lambda: bench_fused_drain.main(quick=quick))
+    csv_rows.append((name, us,
+                     f"{rows['speedup']:.2f}x items/s fused vs host "
+                     f"drain"))
+    with open("BENCH_fused_drain.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_fused_drain.json")
 
     print()
     print("=" * 72)
@@ -106,4 +130,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced workloads so CI finishes in minutes")
+    args = ap.parse_args()
+    main(quick=args.quick)

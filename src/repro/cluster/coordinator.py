@@ -87,7 +87,9 @@ class ClusterCoordinator:
                  sched_cfg: Optional[SchedulerConfig] = None,
                  sim_rate_items_per_s: Optional[float] = None,
                  autoscaler: Optional[WatermarkAutoscaler] = None,
-                 kv_pools: Optional[List] = None):
+                 kv_pools: Optional[List] = None,
+                 drain_mode: Optional[str] = None,
+                 evaluate_batch: Optional[Callable] = None):
         self.cfg = cfg
         self.cluster_cfg = cluster_cfg or ClusterConfig()
         n = max(1, int(cfg.n_replicas))
@@ -121,7 +123,9 @@ class ClusterCoordinator:
                 sched_cfg=base_sched,
                 sim_rate_items_per_s=sim_rate_items_per_s,
                 kv_pool=(kv_pools[i] if kv_pools else None),
-                request_ids=self._ids))
+                request_ids=self._ids,
+                drain_mode=drain_mode,
+                evaluate_batch=evaluate_batch))
             self.ring.add(rid, w)
         self.by_id: Dict[str, ReplicaHandle] = {
             r.replica_id: r for r in self.replicas}

@@ -32,16 +32,23 @@ class ReplicaHandle:
                  evaluate_chunk: Callable, weight: float = 1.0,
                  sched_cfg: Optional[SchedulerConfig] = None,
                  sim_rate_items_per_s: Optional[float] = None,
-                 kv_pool=None, request_ids=None):
+                 kv_pool=None, request_ids=None,
+                 drain_mode: Optional[str] = None,
+                 evaluate_batch: Optional[Callable] = None):
         self.replica_id = replica_id
         self.weight = float(weight)
         self.clock = (SimClock(sim_rate_items_per_s)
                       if sim_rate_items_per_s is not None else None)
+        # drain_mode/evaluate_batch pass straight through: a fused
+        # replica runs ONE jitted device step per micro-batch
+        # (``core.fused_shedder``) instead of the host chunk loop.
         self.engine = ServingEngine(cfg, evaluate_chunk,
                                     sim_clock=self.clock,
                                     sched_cfg=sched_cfg,
                                     kv_pool=kv_pool,
-                                    request_ids=request_ids)
+                                    request_ids=request_ids,
+                                    drain_mode=drain_mode,
+                                    evaluate_batch=evaluate_batch)
         # Responses the coordinator has already collected from
         # ``engine.completed`` (consumption cursor).
         self.n_collected = 0

@@ -266,6 +266,17 @@ class TrustIRConfig:
     # Evaluator backbone (arch id from the registry)
     evaluator_arch: str = "smollm-135m"
     trust_scale: float = 5.0            # paper reports trust on a scale of 5
+    # Micro-batch drain executor:
+    #   "host"  — LoadShedder.process: host-side chunk loop with a real
+    #             (or simulated) wall-clock deadline; the paper-figure
+    #             baseline (response-time benchmarks measure this path).
+    #   "fused" — FusedLoadShedder: ONE jitted device step per
+    #             micro-batch (Pallas shed_partition probe+tier with
+    #             compacted eval indices, static-shape gather, batched
+    #             evaluator forward, scatter, Trust-DB/prior fold-back);
+    #             budget_dq derives from the same shed_plan math, so
+    #             tiers match the host oracle. The serving hot path.
+    drain_mode: str = "host"
     # Serving fleet (repro.cluster): number of independent replica
     # engines (each with its own shedder/cache/prior state). 1 = the
     # single-host degenerate case; weights bias the consistent-hash

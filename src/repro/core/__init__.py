@@ -6,8 +6,10 @@ from repro.core.deadline import (effective_deadline, effective_deadline_jnp,
 from repro.core.load_monitor import LoadMonitor
 from repro.core.shedder import (LoadShedder, ShedResult, SimClock,
                                 TIER_CACHED, TIER_EVAL, TIER_INVALID,
-                                TIER_PRIOR, combine_trust, fused_shed_eval,
+                                TIER_PRIOR, combine_trust,
+                                eval_indices_from_rank, fused_shed_eval,
                                 gather_eval_indices, shed_plan)
+from repro.core.fused_shedder import FusedLoadShedder, PendingShed
 from repro.core.adaptive import AdaptiveWeightController
 from repro.core.baselines import ProcessAll, RLSEDA
 from repro.core.pipeline import (PipelineOutput, SearchResults,
@@ -19,7 +21,9 @@ __all__ = [
     "effective_deadline", "effective_deadline_jnp", "extension_factor",
     "LoadMonitor", "LoadShedder", "ShedResult", "SimClock",
     "TIER_CACHED", "TIER_EVAL", "TIER_INVALID", "TIER_PRIOR",
-    "combine_trust", "fused_shed_eval", "gather_eval_indices", "shed_plan",
+    "combine_trust", "eval_indices_from_rank", "fused_shed_eval",
+    "gather_eval_indices", "shed_plan",
+    "FusedLoadShedder", "PendingShed",
     "AdaptiveWeightController", "ProcessAll", "RLSEDA",
     "PipelineOutput", "SearchResults", "SyntheticSearcher",
     "TrustIRPipeline", "trust_fidelity",

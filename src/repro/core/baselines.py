@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
+import jax
 import numpy as np
 
 from repro.configs.base import TrustIRConfig
@@ -29,6 +30,7 @@ class ProcessAll(LoadShedder):
         n_total = len(item_keys)
         n = n_total if n_valid is None else int(n_valid)
         ucap, uthr = self.monitor.parameters()
+        features = jax.tree.map(np.asarray, features)  # _eval precondition
         trust = np.zeros((n_total,), np.float32)
         tier = np.full((n_total,), TIER_INVALID, np.int32)
         trust[:n] = self._eval(features, np.arange(n))
@@ -56,6 +58,7 @@ class RLSEDA(LoadShedder):
         ucap, uthr = self.monitor.parameters()
         budget = min(n, ucap + uthr)
         keep = np.sort(self._rng.permutation(n)[:budget])
+        features = jax.tree.map(np.asarray, features)  # _eval precondition
         trust = np.zeros((n_total,), np.float32)
         tier = np.full((n_total,), TIER_INVALID, np.int32)  # shed == dropped
         if len(keep):

@@ -1,0 +1,234 @@
+"""Device-resident fused drain: one jitted step per micro-batch.
+
+``LoadShedder.process`` is the paper-figure executor — a host-side
+chunk loop with a real (or simulated) clock, one device round-trip per
+chunk. The serving hot path doesn't need a wall-clock deadline check
+*inside* the batch (the budget is decided up front by the same
+``shed_plan`` math), so ``FusedLoadShedder`` collapses the whole
+shedding decision into ONE device dispatch per micro-batch:
+
+    shed_partition (Pallas: VMEM-resident Trust-DB probe + tier scan,
+                    SMEM write-cursor emits compacted eval ranks)
+      -> eval_indices_from_rank   O(N) scatter, no argsort
+      -> static-shape gather      features picked once, on device
+      -> evaluator forward        one batched call, no chunk loop
+      -> scatter + combine        trust per tier
+      -> TC.insert / AT.update    cache + prior fold-back, donated
+                                  buffers update in place on TPU/GPU
+
+Features transfer to device once per *batch* (the host path converts
+the pytree then re-gathers per chunk). The step is dispatched
+asynchronously: ``process_async`` returns a :class:`PendingShed` whose
+arrays stay on device until ``.result()``, so the scheduler can form
+micro-batch N+1 while batch N computes (JAX async dispatch). With a
+``SimClock`` the step resolves eagerly instead — simulated timelines
+are sequential by construction and exist for deterministic parity with
+the host path, not throughput.
+
+Tier parity: ``budget_total = floor(rate * deadline_eff)`` is computed
+from the same Load-Monitor parameters and deadline controller as
+``shed_plan`` / ``LoadShedder.process``, and the kernel nets out
+normal-queue evaluations in-flight (``budget_is_total=True``), so the
+fused tiers match the ``shed_plan`` oracle bit-for-bit. The host
+executor grants drop-queue evaluations at *chunk* granularity against a
+running clock; with chunk-aligned budgets (benchmarks, tests) the two
+paths agree exactly.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrustIRConfig
+from repro.core import average_trust as AT
+from repro.core import trust_cache as TC
+from repro.core.deadline import effective_deadline
+from repro.core.load_monitor import LoadMonitor
+from repro.core.regimes import classify
+from repro.core.shedder import (LoadShedder, ShedResult, SimClock,
+                                TIER_CACHED, TIER_EVAL, TIER_PRIOR,
+                                combine_trust, eval_indices_from_rank)
+
+
+class PendingShed:
+    """Handle to an in-flight fused shedding step.
+
+    ``trust``/``tier`` stay device-resident (possibly still computing —
+    JAX async dispatch) until :meth:`result` materializes them, charges
+    the clock/monitor, and builds the :class:`ShedResult`.
+    """
+
+    def __init__(self, shedder: "FusedLoadShedder", trust, tier,
+                 n_evald, *, t_start: float, wall_start: float,
+                 n: int, regime, deadline_eff: float,
+                 skip_observe: bool = False):
+        self._shedder = shedder
+        self._trust = trust
+        self._tier = tier
+        self._n_evald = n_evald
+        self._t_start = t_start
+        self._wall_start = wall_start
+        self._n = n
+        self._regime = regime
+        self._deadline_eff = deadline_eff
+        self._skip_observe = skip_observe
+        self._result: Optional[ShedResult] = None
+
+    def result(self) -> ShedResult:
+        if self._result is None:
+            self._result = self._shedder._finish(self)
+        return self._result
+
+
+class FusedLoadShedder(LoadShedder):
+    """Drop-in ``LoadShedder`` whose ``process`` runs the fused device
+    step. ``evaluate_batch`` must be jax-traceable: features pytree
+    (leading dim ``max_evals``) -> (max_evals,) scores. The host
+    executor's ``evaluate_chunk`` protocol is satisfied by the same
+    callable whenever it is traceable (every ``serving.evaluators``
+    backend is), so baseline drivers can still call the inherited
+    chunked path explicitly if they need a wall-clock deadline.
+    """
+
+    supports_async = True
+
+    def __init__(self, cfg: TrustIRConfig, evaluate_batch: Callable,
+                 monitor: Optional[LoadMonitor] = None,
+                 cache_state: Optional[Dict] = None,
+                 prior_state: Optional[Dict] = None,
+                 sim_clock: Optional[SimClock] = None,
+                 adaptive=None,
+                 max_evals: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 donate: Optional[bool] = None):
+        super().__init__(cfg, evaluate_batch, monitor=monitor,
+                         cache_state=cache_state,
+                         prior_state=prior_state,
+                         sim_clock=sim_clock, adaptive=adaptive)
+        self.evaluate_batch = evaluate_batch
+        self.max_evals = max_evals
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        # Buffer donation is a no-op (with a warning) on CPU; only ask
+        # for in-place cache/prior updates where XLA implements it.
+        if donate is None:
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self._step = jax.jit(
+            self._step_impl, static_argnames=("max_evals",),
+            donate_argnums=(0, 1) if donate else ())
+
+    # -- the fused device step ----------------------------------------------
+    def _step_impl(self, cache, prior, keys, buckets, valid, features,
+                   u_capacity, u_threshold, budget_total, *,
+                   max_evals: int):
+        from repro.kernels.shed_partition import shed_partition
+        n = keys.shape[0]
+        block_n = 1024 if n % 1024 == 0 else n
+        tier, cval, rank = shed_partition(
+            keys, valid, cache["keys"], cache["values"],
+            u_capacity, u_threshold, budget_total,
+            budget_is_total=True, block_n=block_n,
+            interpret=self.interpret)
+        # Safety on a too-small max_evals: overflow evals fall back to
+        # the prior tier (no-drop) instead of silently scoring 0. The
+        # default max_evals = batch capacity can never overflow.
+        tier = jnp.where((rank >= max_evals) & (tier == TIER_EVAL),
+                         TIER_PRIOR, tier)
+        idx, eval_valid = eval_indices_from_rank(rank, max_evals)
+        gidx = jnp.minimum(idx, n - 1)              # clamp pad slots
+        sub = jax.tree.map(lambda a: a[gidx], features)
+        scores = self.evaluate_batch(sub)           # (max_evals,)
+        scattered = jnp.zeros((n,), jnp.float32).at[idx].set(
+            jnp.where(eval_valid, scores.astype(jnp.float32), 0.0),
+            mode="drop")
+        prior_vals = AT.query(prior, buckets)
+        trust = combine_trust(tier, scattered, cval, prior_vals)
+        evald = tier == TIER_EVAL
+        new_cache = TC.insert(cache, keys, trust, evald)
+        new_prior = AT.update(prior, buckets, trust, evald,
+                              ewma=self.cfg.prior_ewma)
+        return (trust, tier, jnp.sum(evald.astype(jnp.int32)),
+                new_cache, new_prior)
+
+    # -- dispatch / finish ----------------------------------------------------
+    def process_async(self, item_keys: np.ndarray, buckets: np.ndarray,
+                      features, n_valid: Optional[int] = None
+                      ) -> PendingShed:
+        """Dispatch one fused step; returns a handle whose ``.result()``
+        materializes the :class:`ShedResult`. With a ``SimClock`` the
+        handle resolves eagerly (deterministic sequential timeline)."""
+        t_start = self._now()
+        wall_start = time.monotonic()
+        n_total = len(item_keys)
+        n = n_total if n_valid is None else int(n_valid)
+        ucap, uthr = self.monitor.parameters()
+        regime = classify(n, ucap, uthr)
+        deadline_eff = effective_deadline(
+            n, ucap, uthr, deadline_s=self.cfg.deadline_s,
+            overload_deadline_s=self.cfg.overload_deadline_s,
+            weight=self._vh_weight())
+        # Same budget math as shed_plan: rate * effective deadline.
+        budget_total = int(np.floor(
+            ucap / self.cfg.deadline_s * deadline_eff))
+        max_evals = self.max_evals or n_total
+
+        # ONE host->device transfer per batch (the host path re-gathers
+        # from the feature pytree once per chunk).
+        keys_j = jnp.asarray(item_keys, jnp.uint32)
+        buckets_j = jnp.asarray(buckets, jnp.int32)
+        valid_j = jnp.arange(n_total) < n
+        feats_j = jax.tree.map(jnp.asarray, features)
+
+        cache_size = getattr(self._step, "_cache_size", lambda: -1)()
+        trust, tier, n_evald, self.cache, self.prior = self._step(
+            self.cache, self.prior, keys_j, buckets_j, valid_j,
+            feats_j, ucap, uthr, budget_total, max_evals=max_evals)
+        # A call that traced+compiled would poison the throughput EWMA
+        # (Ucapacity would collapse for the next few batches); skip its
+        # monitor observation.
+        compiled_now = getattr(self._step, "_cache_size",
+                               lambda: -1)() != cache_size
+        pending = PendingShed(self, trust, tier, n_evald,
+                              t_start=t_start, wall_start=wall_start,
+                              n=n, regime=regime,
+                              deadline_eff=deadline_eff,
+                              skip_observe=compiled_now)
+        if self.sim_clock is not None:
+            pending.result()
+        return pending
+
+    def _finish(self, p: PendingShed) -> ShedResult:
+        trust = np.asarray(p._trust)                # sync point
+        tier = np.asarray(p._tier)
+        n_evald = int(p._n_evald)
+        if self.sim_clock is not None:
+            self.sim_clock.charge_probe()
+            self.sim_clock.charge_eval(n_evald)
+        elif n_evald and not p._skip_observe:
+            # Dispatch-to-materialize window: under the pipelined drain
+            # it also covers the next batch's host-side formation, so
+            # the rate reads slightly LOW — conservative for admission
+            # (Ucapacity never overstates sustained fused throughput).
+            self.monitor.observe(n_evald,
+                                 time.monotonic() - p._wall_start)
+        rt = self._now() - p._t_start
+        result = ShedResult(
+            trust=trust, tier=tier, regime=p._regime,
+            response_time_s=rt, deadline_eff_s=p._deadline_eff,
+            n_evaluated=n_evald,
+            n_cached=int((tier == TIER_CACHED).sum()),
+            n_prior=int((tier == TIER_PRIOR).sum()),
+            uload=p._n)
+        if self.adaptive is not None:
+            self.adaptive.observe(result)
+        return result
+
+    # -- synchronous API (drop-in for LoadShedder.process) --------------------
+    def process(self, item_keys: np.ndarray, buckets: np.ndarray,
+                features, n_valid: Optional[int] = None) -> ShedResult:
+        return self.process_async(item_keys, buckets, features,
+                                  n_valid=n_valid).result()

@@ -114,7 +114,10 @@ def gather_eval_indices(tier: jnp.ndarray, max_evals: int) -> Tuple[
     """Static-size gather of EVAL-tier item indices (arrival order).
 
     Returns (idx (max_evals,) int32, valid (max_evals,) bool). This is the
-    pure-jnp oracle of the ``shed_partition`` Pallas kernel.
+    pure-jnp oracle of the ``shed_partition`` Pallas kernel. O(N log N)
+    (argsort) — the fused serving drain uses the kernel's compacted rank
+    output with :func:`eval_indices_from_rank` (one O(N) scatter)
+    instead.
     """
     n = tier.shape[0]
     is_eval = tier == TIER_EVAL
@@ -123,6 +126,24 @@ def gather_eval_indices(tier: jnp.ndarray, max_evals: int) -> Tuple[
     idx = order[:max_evals]
     valid = is_eval[idx]
     return idx.astype(jnp.int32), valid
+
+
+def eval_indices_from_rank(eval_rank: jnp.ndarray, max_evals: int
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(N) gather-index compaction from the ``shed_partition`` kernel's
+    ``eval_rank`` output (arrival-ordered rank of each EVAL item, -1
+    otherwise): one scatter replaces ``gather_eval_indices``'s argsort.
+
+    Returns (idx (max_evals,) int32, valid (max_evals,) bool). Invalid
+    slots hold ``n`` (out of range — gathers clamp, scatters with
+    ``mode="drop"`` discard them).
+    """
+    n = eval_rank.shape[0]
+    in_budget = (eval_rank >= 0) & (eval_rank < max_evals)
+    slot = jnp.where(in_budget, eval_rank, max_evals)
+    idx = jnp.full((max_evals,), n, jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return idx, idx < n
 
 
 def combine_trust(tier: jnp.ndarray, eval_scores_scattered: jnp.ndarray,
@@ -244,7 +265,12 @@ class LoadShedder:
         return self.sim_clock.now() if self.sim_clock else time.monotonic()
 
     def _eval(self, features, idx: np.ndarray) -> np.ndarray:
-        """Evaluate items ``idx`` in padded chunks; returns scores."""
+        """Evaluate items ``idx`` in padded chunks; returns scores.
+
+        ``features`` leaves must already be numpy (``process`` converts
+        the pytree ONCE per batch — re-converting inside the chunk loop
+        paid O(chunks x N) copies).
+        """
         cs = self.cfg.chunk_size
         n = len(idx)
         out = np.zeros((n,), np.float32)
@@ -253,7 +279,7 @@ class LoadShedder:
             pad = cs - len(chunk_idx)
             padded = np.concatenate([chunk_idx,
                                      np.zeros((pad,), chunk_idx.dtype)])
-            sub = jax.tree.map(lambda a: np.asarray(a)[padded], features)
+            sub = jax.tree.map(lambda a: a[padded], features)
             t0 = self._now()
             scores = np.asarray(self.evaluate_chunk(sub))
             if self.sim_clock:
@@ -294,6 +320,9 @@ class LoadShedder:
             self.sim_clock.charge_probe()
         cached_vals = np.asarray(cached_vals)
         hit = np.asarray(hit)
+        # Materialize the feature pytree once per batch; _eval's chunk
+        # loop then only pays O(chunk) fancy-indexing per chunk.
+        features = jax.tree.map(np.asarray, features)
 
         trust = np.zeros((n_total,), np.float32)
         tier = np.full((n_total,), TIER_INVALID, np.int32)

@@ -69,9 +69,17 @@ def dot_interaction_ref(feats):
 
 
 def shed_partition_ref(keys, valid, cache_keys, cache_values,
-                       u_capacity, u_threshold, budget_dq
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Oracle = trust_cache.lookup + shed_plan with explicit budget."""
+                       u_capacity, u_threshold, budget_dq,
+                       budget_is_total: bool = False
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle = trust_cache.lookup + shed_plan with explicit budget.
+
+    Returns (tier, cached_vals, eval_rank) like the Pallas kernel:
+    ``eval_rank`` compacts EVAL-tier items in arrival order (-1
+    elsewhere). ``budget_is_total`` switches ``budget_dq`` from the
+    drop-queue share to the total eval budget (the kernel then nets out
+    normal-queue evaluations itself, as ``shed_plan`` does).
+    """
     from repro.core import trust_cache as TC
     from repro.core.shedder import (TIER_CACHED, TIER_EVAL, TIER_INVALID,
                                     TIER_PRIOR)
@@ -88,6 +96,13 @@ def shed_partition_ref(keys, valid, cache_keys, cache_values,
     dq = valid & ~in_normal & ~hit
     d32 = dq.astype(jnp.int32)
     rank = jnp.cumsum(d32) - d32
+    if budget_is_total:
+        n_normal_evals = jnp.sum((in_normal & ~hit).astype(jnp.int32))
+        budget_dq = jnp.maximum(budget_dq - n_normal_evals, 0)
     tier = jnp.where(dq & (rank < budget_dq), TIER_EVAL, tier)
     tier = jnp.where(valid, tier, TIER_INVALID)
-    return tier.astype(jnp.int32), jnp.where(hit, vals, 0.0)
+    is_eval = tier == TIER_EVAL
+    e32 = is_eval.astype(jnp.int32)
+    erank = jnp.where(is_eval, jnp.cumsum(e32) - e32, -1)
+    return (tier.astype(jnp.int32), jnp.where(hit, vals, 0.0),
+            erank.astype(jnp.int32))

@@ -8,13 +8,33 @@ deadline budget, (4) everything else falls to the average-trust prior.
 Kernel structure: grid over candidate blocks (arrival order). The cache
 (keys/values, set-associative) is VMEM-resident across all grid steps —
 at the production config (65536 x 4 x 8 B = 2 MB) it fits comfortably.
-Running counters (valid-so-far, drop-queue-evals-so-far) live in SMEM
-scratch and carry across the sequential grid, making the tier assignment
-an exact scan without host round-trips.
+Running counters (valid-so-far, drop-queue-evals-so-far, normal-queue
+evals, EVAL-tier items) live in SMEM scratch and carry across the
+sequential grid, making the tier assignment an exact scan without host
+round-trips.
 
-Outputs per item: tier code, cached value. Matches
-``repro.core.shedder.shed_plan`` + ``trust_cache.lookup`` (the oracle in
-``ref.py``).
+Outputs per item: tier code, cached value, and — new for the fused
+serving drain — a **compacted eval rank**: the arrival-ordered position
+of every EVAL-tier item among all EVAL-tier items (-1 otherwise),
+carried by an SMEM write-cursor. Downstream the rank converts to a
+static-size gather index list with ONE O(N) scatter
+(``core.shedder.eval_indices_from_rank``) instead of the O(N log N)
+argsort in ``gather_eval_indices``.
+
+Budget modes:
+  * ``budget_is_total=False`` (legacy) — ``budget`` is the drop-queue
+    evaluation budget already net of normal-queue evaluations.
+  * ``budget_is_total=True`` — ``budget`` is ``floor(rate *
+    deadline_eff)``, the TOTAL evaluation budget of ``shed_plan``; the
+    kernel derives the drop-queue share in-flight from its running
+    normal-queue eval counter (every normal-queue item precedes every
+    drop-queue item in arrival order, so the running count is already
+    final when the first drop-queue candidate is scanned). This is what
+    lets the fused drain match ``shed_plan`` bit-for-bit without a
+    separate host-side cache probe.
+
+Matches ``repro.core.shedder.shed_plan`` + ``trust_cache.lookup`` (the
+oracle in ``ref.py``).
 """
 from __future__ import annotations
 
@@ -37,19 +57,22 @@ def _hash32(x):
     return x ^ (x >> 16)
 
 
-def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget_dq]
+def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
                  keys_ref, valid_ref, ck_ref, cv_ref,
-                 tier_ref, cval_ref,
-                 cnt_scr, *, block_n: int, n_slots: int, n_ways: int):
+                 tier_ref, cval_ref, rank_ref,
+                 cnt_scr, *, block_n: int, n_slots: int, n_ways: int,
+                 budget_is_total: bool):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         cnt_scr[0] = 0        # valid items so far
         cnt_scr[1] = 0        # drop-queue eval candidates so far
+        cnt_scr[2] = 0        # normal-queue evals so far
+        cnt_scr[3] = 0        # EVAL-tier items so far (compaction cursor)
 
     ucap = params_ref[0]
-    budget_dq = params_ref[2]
+    budget = params_ref[2]
 
     keys = keys_ref[...]                                  # (bn,) uint32
     valid = valid_ref[...] != 0
@@ -75,30 +98,58 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget_dq]
     tier = jnp.where(hit, TIER_CACHED, TIER_PRIOR)
     tier = jnp.where(in_normal & ~hit, TIER_EVAL, tier)
 
+    # Normal-queue eval count: inclusive scan. All normal-queue items
+    # precede all drop-queue items in arrival order, so at any drop-queue
+    # candidate the inclusive count is already the batch total.
+    ne32 = (in_normal & ~hit).astype(jnp.int32)
+    base_ne = cnt_scr[2]
+    ne_incl = base_ne + jnp.cumsum(ne32)
+
     dq_cand = valid & ~in_normal & ~hit
     d32 = dq_cand.astype(jnp.int32)
     base_dq = cnt_scr[1]
     dq_rank = base_dq + jnp.cumsum(d32) - d32
-    tier = jnp.where(dq_cand & (dq_rank < budget_dq), TIER_EVAL, tier)
+    if budget_is_total:
+        # shed_plan: budget_dq = max(budget_total - n_normal_evals, 0);
+        # dq_rank >= 0 makes the max() implicit.
+        dq_budget = budget - ne_incl
+    else:
+        dq_budget = jnp.broadcast_to(budget, (block_n,))
+    tier = jnp.where(dq_cand & (dq_rank < dq_budget), TIER_EVAL, tier)
     tier = jnp.where(valid, tier, TIER_INVALID)
+
+    # --- compacted eval rank (SMEM write-cursor across the grid) ---
+    is_eval = tier == TIER_EVAL
+    e32 = is_eval.astype(jnp.int32)
+    base_e = cnt_scr[3]
+    erank = base_e + jnp.cumsum(e32) - e32
 
     cnt_scr[0] = base_valid + jnp.sum(v32)
     cnt_scr[1] = base_dq + jnp.sum(d32)
+    cnt_scr[2] = base_ne + jnp.sum(ne32)
+    cnt_scr[3] = base_e + jnp.sum(e32)
 
     tier_ref[...] = tier.astype(jnp.int32)
     cval_ref[...] = jnp.where(hit, val, 0.0)
+    rank_ref[...] = jnp.where(is_eval, erank, -1).astype(jnp.int32)
 
 
 def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
                    cache_keys: jnp.ndarray, cache_values: jnp.ndarray,
                    u_capacity, u_threshold, budget_dq, *,
+                   budget_is_total: bool = False,
                    block_n: int = 1024, interpret: bool = False
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """keys: (N,) uint32; valid: (N,) bool; cache_*: (slots, ways).
 
-    Returns (tier (N,) int32, cached_vals (N,) f32). ``budget_dq`` is the
+    Returns (tier (N,) int32, cached_vals (N,) f32, eval_rank (N,)
+    int32). ``eval_rank`` is the arrival-ordered compacted position of
+    each EVAL-tier item (-1 for every other tier). ``budget_dq`` is the
     drop-queue evaluation budget already derived from the effective
-    deadline (``core.shedder.shed_plan`` computes it identically).
+    deadline (``core.shedder.shed_plan`` computes it identically) — or,
+    with ``budget_is_total=True``, the TOTAL eval budget
+    ``floor(rate * deadline_eff)`` from which the kernel derives the
+    drop-queue share itself.
     """
     n = keys.shape[0]
     block_n = min(block_n, n)
@@ -107,8 +158,9 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
     params = jnp.asarray([u_capacity, u_threshold, budget_dq], jnp.int32)
 
     kernel = functools.partial(_shed_kernel, block_n=block_n,
-                               n_slots=n_slots, n_ways=n_ways)
-    tier, cval = pl.pallas_call(
+                               n_slots=n_slots, n_ways=n_ways,
+                               budget_is_total=budget_is_total)
+    tier, cval, rank = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -122,14 +174,16 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
             out_specs=[
                 pl.BlockSpec((block_n,), lambda i, *_: (i,)),
                 pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
             ],
-            scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+            scratch_shapes=[pltpu.SMEM((4,), jnp.int32)],
         ),
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.int32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
         ],
         interpret=interpret,
     )(params, keys.astype(jnp.uint32), valid.astype(jnp.int32),
       cache_keys, cache_values)
-    return tier, cval
+    return tier, cval, rank

@@ -30,6 +30,11 @@ def main() -> int:
     p.add_argument("--adaptive", action="store_true")
     p.add_argument("--sync", action="store_true",
                    help="per-request synchronous submit() path")
+    p.add_argument("--drain-mode", choices=("host", "fused"),
+                   default="host",
+                   help="micro-batch executor: host chunk loop "
+                        "(wall-clock deadline) or the fused "
+                        "one-device-step-per-batch drain")
     p.add_argument("--replicas", type=int, default=1,
                    help="serving fleet size (1 = single host)")
     p.add_argument("--hedge-after-ms", type=float, default=0.0,
@@ -71,10 +76,15 @@ def main() -> int:
           f"(overload {odl * 1e3:.0f}ms)"
           + (" [adaptive]" if args.adaptive else "")
           + (" [sync]" if args.sync
-             else f" [scheduled x{n_rep} replica(s)]"))
+             else f" [scheduled x{n_rep} replica(s)]")
+          + f" [drain={args.drain_mode}]")
+
+    def evaluate_batch(chunk):            # jax-traceable (fused drain)
+        return ev(chunk)
 
     if args.sync:
-        eng = ServingEngine(cfg, evaluate)
+        eng = ServingEngine(cfg, evaluate, drain_mode=args.drain_mode,
+                            evaluate_batch=evaluate_batch)
         if args.adaptive:
             eng.shedder.adaptive = AdaptiveWeightController()
     else:
@@ -83,7 +93,9 @@ def main() -> int:
             cfg, evaluate,
             cluster_cfg=ClusterConfig(
                 hedge_after_s=args.hedge_after_ms / 1e3,
-                autoscale=n_rep > 1))
+                autoscale=n_rep > 1),
+            drain_mode=args.drain_mode,
+            evaluate_batch=evaluate_batch)
         if args.adaptive:
             for rep in eng.replicas:
                 rep.engine.shedder.adaptive = AdaptiveWeightController()

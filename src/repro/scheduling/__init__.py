@@ -16,8 +16,21 @@ Request lifecycle (who owns each hop):
        |                                    sets into one padded,
        |                                    budget-shaped micro-batch
     shed     core.shedder                   ONE three-regime shedding
-       |                                    decision per micro-batch
+       |     (drain_mode="host")            decision per micro-batch
        |                                    (EVAL / CACHED / PRIOR tiers)
+       |                                    via the host chunk loop with
+       |                                    a wall-clock deadline, OR
+       |     core.fused_shedder             shed[fused]
+       |     (drain_mode="fused")           (``TrustIRConfig.drain_mode``)
+       |                                    ONE jitted device step per
+       |                                    batch: Pallas shed_partition
+       |                                    probe+tier with compacted
+       |                                    eval indices, static-shape
+       |                                    gather, batched evaluator,
+       |                                    scatter, cache/prior
+       |                                    fold-back — async-dispatched
+       |                                    so batch N+1 forms while
+       |                                    batch N computes
     respond  scheduling.scheduler.drain     split per-request Responses;
                                             hedged re-dispatch via
                                             distribution.fault_tolerance

@@ -246,13 +246,26 @@ class Scheduler:
     def drain(self, max_batches: Optional[int] = None) -> List[Response]:
         """Form and execute micro-batches until the queues are empty (or
         ``max_batches`` is reached, or the head is a decode request with
-        no claimable KV slot — which stays queued)."""
+        no claimable KV slot — which stays queued).
+
+        With an async-capable shedder (``FusedLoadShedder``,
+        ``drain_mode="fused"``) the loop pipelines one batch deep: batch
+        N's fused device step is dispatched, then batch N+1 is *formed*
+        (host work — pops, packing, padding) while N computes, and only
+        then is N materialized. JAX async dispatch overlaps the two
+        instead of blocking on ``np.asarray`` mid-loop. On a simulated
+        clock the loop stays sequential: the async step resolves eagerly
+        there, and finalizing batch N after dispatching N+1 would stamp
+        N's responses with a clock already charged for N+1."""
         out: List[Response] = []
         n_done = 0
         # KV budget threads across the whole drain: slots are claimed by
         # the decode executor after responses land, so batches formed in
         # one drain must share the snapshot taken here.
         kv_budget = self._kv_free_slots()
+        pipelined = getattr(self.shedder, "supports_async", False) \
+            and getattr(self.shedder, "sim_clock", None) is None
+        pending: Optional[tuple] = None      # (batch, PendingShed)
         while max_batches is None or n_done < max_batches:
             if self.hedge is not None:
                 self._hedge_scan()
@@ -263,17 +276,35 @@ class Scheduler:
                 kv_budget -= sum(
                     1 for q, _, _ in batch.slices
                     if MicroBatcher._needs_kv_slot(q))
-            out.extend(self._execute(batch))
+            if pipelined:
+                handle = self.shedder.process_async(
+                    batch.item_keys, batch.buckets, batch.features,
+                    n_valid=batch.n_valid)
+                if pending is not None:
+                    out.extend(self._finalize(*pending))
+                pending = (batch, handle)
+            else:
+                out.extend(self._execute(batch))
             n_done += 1
+        if pending is not None:
+            out.extend(self._finalize(*pending))
         return out
 
     def _execute(self, batch: MicroBatch) -> List[Response]:
         # Full padded arrays + n_valid: shapes stay static across drains
         # so device ops reuse cached executables instead of recompiling
         # per batch fill level.
-        nv = batch.n_valid
         shed = self.shedder.process(batch.item_keys, batch.buckets,
-                                    batch.features, n_valid=nv)
+                                    batch.features,
+                                    n_valid=batch.n_valid)
+        return self._split_responses(batch, shed)
+
+    def _finalize(self, batch: MicroBatch, handle) -> List[Response]:
+        return self._split_responses(batch, handle.result())
+
+    def _split_responses(self, batch: MicroBatch,
+                         shed: ShedResult) -> List[Response]:
+        nv = batch.n_valid
         end = self._now()
         batch_start = end - shed.response_time_s
         self.stats.n_batches += 1

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import TrustIRConfig
+from repro.core.fused_shedder import FusedLoadShedder
 from repro.core.load_monitor import LoadMonitor
 from repro.core.shedder import LoadShedder, ShedResult, SimClock
 from repro.scheduling import (Priority, Request, Response, Scheduler,
@@ -63,12 +64,36 @@ class ServingEngine:
     def __init__(self, cfg: TrustIRConfig, evaluate_chunk: Callable,
                  sim_clock: Optional[SimClock] = None,
                  sched_cfg: Optional[SchedulerConfig] = None,
-                 kv_pool=None, request_ids=None):
+                 kv_pool=None, request_ids=None,
+                 drain_mode: Optional[str] = None,
+                 evaluate_batch: Optional[Callable] = None,
+                 fused_max_evals: Optional[int] = None):
+        """``drain_mode`` (default ``cfg.drain_mode``) selects the
+        micro-batch executor: ``"host"`` is the chunked wall-clock-
+        deadline path (paper figures), ``"fused"`` runs one jitted
+        device step per batch (``core.fused_shedder``). The fused path
+        needs a jax-traceable evaluator — ``evaluate_batch`` when the
+        ``evaluate_chunk`` protocol callable is host-side numpy (every
+        ``serving.evaluators`` backend is already traceable, so passing
+        it for both is the common case). ``fused_max_evals`` caps the
+        fused evaluator batch width (default: the full padded batch —
+        always tier-exact; a smaller cap saves evaluator FLOPs on
+        warm-cache traffic but demotes overflow evals to the prior)."""
         self.cfg = cfg
         self.monitor = LoadMonitor(cfg)
-        shedder = LoadShedder(cfg, evaluate_chunk,
-                              monitor=self.monitor,
-                              sim_clock=sim_clock)
+        mode = drain_mode or getattr(cfg, "drain_mode", "host")
+        if mode not in ("host", "fused"):
+            raise ValueError(f"unknown drain_mode {mode!r}")
+        self.drain_mode = mode
+        if mode == "fused":
+            shedder = FusedLoadShedder(
+                cfg, evaluate_batch or evaluate_chunk,
+                monitor=self.monitor, sim_clock=sim_clock,
+                max_evals=fused_max_evals)
+        else:
+            shedder = LoadShedder(cfg, evaluate_chunk,
+                                  monitor=self.monitor,
+                                  sim_clock=sim_clock)
         self.sim_clock = sim_clock
         self.scheduler = Scheduler(cfg, shedder,
                                    sched_cfg or SchedulerConfig(),

@@ -1,0 +1,242 @@
+"""Device-resident fused drain (core.fused_shedder) vs the host
+chunk-loop executor: decision parity across regimes, the no-drop
+invariant, async dispatch, state fold-back, and the engine/scheduler
+wiring behind ``drain_mode="fused"``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import TrustIRConfig
+from repro.core import (FusedLoadShedder, LoadShedder, Regime, SimClock,
+                        TIER_EVAL, TIER_INVALID, TIER_PRIOR)
+from repro.core import trust_cache as TC
+from repro.scheduling import SchedulerConfig
+from repro.serving.engine import ServingEngine
+
+D = 8
+W = np.linspace(-1.0, 1.0, D).astype(np.float32)
+
+
+@jax.jit
+def _ev(chunk):
+    return jax.nn.sigmoid(chunk["x"] @ jnp.asarray(W)) * 5.0
+
+
+def _ev_np(chunk):
+    return np.asarray(_ev({"x": jnp.asarray(chunk["x"])}))
+
+
+def _cfg(**kw):
+    base = dict(u_capacity=128, u_threshold=128, deadline_s=0.5,
+                overload_deadline_s=1.0, very_heavy_weight=0.5,
+                chunk_size=16, cache_slots=1024, cache_ways=2)
+    base.update(kw)
+    return TrustIRConfig(**base)
+
+
+def _batch(n, cap, off, seed=0):
+    r = np.random.default_rng(seed + off)
+    keys = np.zeros(cap, np.uint32)
+    keys[:n] = np.arange(off, off + n)
+    buckets = np.zeros(cap, np.int32)
+    buckets[:n] = r.integers(0, 4, n)
+    feats = {"x": np.zeros((cap, D), np.float32)}
+    feats["x"][:n] = r.normal(size=(n, D)).astype(np.float32)
+    return keys, buckets, feats
+
+
+def _pair(cfg, rate=None):
+    rate = rate or cfg.u_capacity / cfg.deadline_s
+    host = LoadShedder(cfg, _ev_np, sim_clock=SimClock(rate))
+    fused = FusedLoadShedder(cfg, _ev, sim_clock=SimClock(rate))
+    return host, fused
+
+
+# ---------------------------------------------------------------------------
+# parity vs the host executor (the oracle)
+# ---------------------------------------------------------------------------
+
+# Loads whose drop-queue budget is chunk-aligned (see
+# benchmarks/bench_fused_drain.py): the host executor grants drop-queue
+# evals at chunk granularity, so alignment makes the grant exactly the
+# shed_plan budget the fused path uses.
+PARITY_LOADS = [(96, Regime.NORMAL), (192, Regime.HEAVY),
+                (410, Regime.VERY_HEAVY), (512, Regime.VERY_HEAVY)]
+
+
+@pytest.mark.parametrize("n,regime", PARITY_LOADS)
+def test_fused_matches_host_per_regime(n, regime):
+    host, fused = _pair(_cfg())
+    keys, buckets, feats = _batch(n, 512, 1)
+    rh = host.process(keys, buckets, feats, n_valid=n)
+    rf = fused.process(keys, buckets, feats, n_valid=n)
+    assert rh.regime == rf.regime == regime
+    assert np.array_equal(rh.tier, rf.tier)
+    np.testing.assert_allclose(rf.trust, rh.trust, atol=1e-5)
+    assert (rh.tier[:n] != TIER_INVALID).all()
+    assert (rf.tier[:n] != TIER_INVALID).all()
+    assert (rf.tier[n:] == TIER_INVALID).all()
+    assert rf.n_evaluated == rh.n_evaluated
+    assert rf.n_cached == rh.n_cached and rf.n_prior == rh.n_prior
+
+
+def test_fused_matches_host_across_a_stream_with_cache_reuse():
+    """Sequential batches share cache/prior state: the second pass over
+    the same keys must hit the Trust DB identically on both paths."""
+    host, fused = _pair(_cfg())
+    for off in (1, 10_000, 1):              # third batch repeats keys
+        keys, buckets, feats = _batch(192, 512, off)
+        rh = host.process(keys, buckets, feats, n_valid=192)
+        rf = fused.process(keys, buckets, feats, n_valid=192)
+        assert np.array_equal(rh.tier, rf.tier)
+        np.testing.assert_allclose(rf.trust, rh.trust, atol=1e-5)
+    # Warm third pass: overwhelmingly Trust-DB hits (a handful of the
+    # repeated keys may have been evicted by batch 2 sharing cache
+    # sets), and identically so on both paths (asserted above).
+    assert rf.n_cached > 128
+    assert rf.n_evaluated == rh.n_evaluated < 64
+
+
+def test_fused_folds_evaluations_back_into_cache_and_prior():
+    cfg = _cfg()
+    fused = FusedLoadShedder(cfg, _ev,
+                             sim_clock=SimClock(cfg.u_capacity
+                                                / cfg.deadline_s))
+    keys, buckets, feats = _batch(96, 128, 50)
+    prior_before = np.asarray(fused.prior["mean"]).copy()
+    res = fused.process(keys, buckets, feats, n_valid=96)
+    assert res.n_evaluated == 96
+    _, hit = TC.lookup(fused.cache, jnp.asarray(keys, jnp.uint32))
+    # all evaluated keys land in the Trust DB, minus the few that lose
+    # a set-associative way to a same-batch sibling
+    assert int(hit[:96].sum()) >= 85
+    assert not np.allclose(np.asarray(fused.prior["mean"]),
+                           prior_before)
+
+
+def test_process_async_handle_defers_then_matches_sync():
+    cfg = _cfg()
+    sync = FusedLoadShedder(cfg, _ev)       # wall clock: async deferred
+    asyn = FusedLoadShedder(cfg, _ev)
+    keys, buckets, feats = _batch(192, 256, 7)
+    expect = sync.process(keys, buckets, feats, n_valid=192)
+    handle = asyn.process_async(keys, buckets, feats, n_valid=192)
+    assert handle._result is None           # not materialized yet
+    got = handle.result()
+    assert got is handle.result()           # cached
+    assert np.array_equal(expect.tier, got.tier)
+    np.testing.assert_allclose(expect.trust, got.trust, atol=1e-6)
+
+
+def test_max_evals_overflow_demotes_to_prior_never_drops():
+    """A too-small eval batch can't silently zero-score items: overflow
+    EVAL items fall back to the prior tier."""
+    cfg = _cfg()
+    fused = FusedLoadShedder(cfg, _ev, max_evals=32,
+                             sim_clock=SimClock(cfg.u_capacity
+                                                / cfg.deadline_s))
+    keys, buckets, feats = _batch(96, 128, 900)
+    prior_at_decision = float(np.asarray(fused.prior["mean"])[0])
+    res = fused.process(keys, buckets, feats, n_valid=96)
+    assert res.n_evaluated == 32
+    assert res.n_prior == 64                # demoted, answered, not lost
+    assert (res.tier[:96] != TIER_INVALID).all()
+    assert np.all(res.trust[res.tier == TIER_PRIOR]
+                  == prior_at_decision)
+
+
+# ---------------------------------------------------------------------------
+# engine / scheduler wiring
+# ---------------------------------------------------------------------------
+
+def _engine(mode, cfg=None, **sched_kw):
+    cfg = cfg or _cfg()
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s)
+    return ServingEngine(cfg, _ev_np, sim_clock=clock,
+                         sched_cfg=SchedulerConfig(**sched_kw),
+                         drain_mode=mode, evaluate_batch=_ev)
+
+
+def test_engine_drain_modes_agree_per_request():
+    # Batch budget 256 keeps every packed batch at Normal/Heavy load,
+    # where the Heavy eval budget (rate * overload_deadline - n_normal)
+    # always covers the whole drop queue — so host-vs-fused parity is
+    # exact at ANY batch fill (no chunk-boundary sensitivity).
+    results = {}
+    for mode in ("host", "fused"):
+        eng = _engine(mode, max_batch_items=256)
+        r = np.random.default_rng(3)
+        for i in range(8):
+            n = int(r.integers(8, 96))
+            keys, buckets, feats = _batch(n, n, 1 + i * 10_000)
+            eng.enqueue(keys, buckets, feats)
+        eng.drain()
+        results[mode] = {resp.request_id: resp
+                         for resp in eng.completed}
+    assert results["host"].keys() == results["fused"].keys()
+    for rid, rh in results["host"].items():
+        rf = results["fused"][rid]
+        assert np.array_equal(rh.tier, rf.tier)
+        np.testing.assert_allclose(rf.trust, rh.trust, atol=1e-5)
+
+
+def test_engine_rejects_unknown_drain_mode():
+    with pytest.raises(ValueError):
+        ServingEngine(_cfg(), _ev_np, drain_mode="warp")
+
+
+def test_config_selects_drain_mode():
+    cfg = _cfg(drain_mode="fused")
+    eng = ServingEngine(cfg, _ev_np, evaluate_batch=_ev)
+    assert isinstance(eng.shedder, FusedLoadShedder)
+    assert eng.drain_mode == "fused"
+
+
+@given(st.lists(st.integers(4, 64), min_size=1, max_size=10),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_no_admitted_request_dropped_fused(sizes, seed):
+    """The paper's no-drop invariant survives the fused drain: every
+    admitted request gets exactly one response, every valid item a
+    non-INVALID tier."""
+    eng = _engine("fused", max_batch_items=256)
+    rids = []
+    for i, n in enumerate(sizes):
+        keys, buckets, feats = _batch(n, n, 1 + i * 10_000, seed=seed)
+        rids.append(eng.enqueue(keys, buckets, feats))
+    eng.drain()
+    by_rid = {}
+    for resp in eng.completed:
+        assert resp.request_id not in by_rid     # exactly one response
+        by_rid[resp.request_id] = resp
+    assert set(by_rid) == set(rids)
+    for resp in by_rid.values():
+        if resp.admitted:
+            assert (resp.tier != TIER_INVALID).all()
+            assert (resp.trust >= 0).all()
+
+
+def test_cluster_coordinator_fused_replicas():
+    from repro.cluster import ClusterCoordinator
+    cfg = _cfg(n_replicas=2)
+    coord = ClusterCoordinator(cfg, _ev_np,
+                               sim_rate_items_per_s=cfg.u_capacity
+                               / cfg.deadline_s,
+                               drain_mode="fused", evaluate_batch=_ev)
+    for rep in coord.replicas:
+        assert isinstance(rep.engine.shedder, FusedLoadShedder)
+    r = np.random.default_rng(5)
+    rids = []
+    for i in range(6):
+        n = int(r.integers(8, 64))
+        keys, buckets, feats = _batch(n, n, 1 + i * 10_000)
+        rids.append(coord.enqueue(keys, buckets, feats,
+                                  tenant=f"t{i % 4}"))
+    coord.drain()
+    answered = {resp.request_id for resp in coord.completed}
+    assert answered == set(rids)
+    for resp in coord.completed:
+        if resp.admitted:
+            assert (resp.tier != TIER_INVALID).all()

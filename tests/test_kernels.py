@@ -104,11 +104,105 @@ def test_shed_partition_matches_oracle(n_valid, ucap, uthr, budget,
         sel = keys[::cache_stride + 1]
         cache = TC.insert(cache, sel, jnp.full(sel.shape, 2.5),
                           jnp.ones(sel.shape, bool))
-    tier, cval = ops.shed_partition(
+    tier, cval, rank = ops.shed_partition(
         keys, valid, cache["keys"], cache["values"],
         u_capacity=ucap, u_threshold=uthr, budget_dq=budget,
         block_n=256, interpret=True)
-    tier_r, cval_r = ref.shed_partition_ref(
+    tier_r, cval_r, rank_r = ref.shed_partition_ref(
         keys, valid, cache["keys"], cache["values"], ucap, uthr, budget)
     assert bool(jnp.all(tier == tier_r))
+    assert bool(jnp.all(rank == rank_r))
     np.testing.assert_allclose(np.asarray(cval), np.asarray(cval_r))
+
+
+# -- shed_partition: fused-drain extensions (budget_total mode, compacted
+#    eval ranks) vs the shed_plan + gather_eval_indices oracle ------------
+
+def _probe_cache(keys, mode: str, n_slots=256, n_ways=4):
+    """Cold / fully-warm / strided cache states."""
+    cache = TC.init(n_slots, n_ways)
+    if mode == "all_miss":
+        return cache
+    sel = keys if mode == "all_hit" else keys[::3]
+    return TC.insert(cache, sel,
+                     jnp.linspace(0.5, 4.5, sel.shape[0]),
+                     jnp.ones(sel.shape, bool))
+
+
+@pytest.mark.parametrize("cache_mode", ["all_miss", "all_hit", "strided"])
+@pytest.mark.parametrize("n_valid,ucap,uthr", [
+    (200, 256, 128),       # Normal: uload <= Ucapacity
+    (300, 256, 128),       # Heavy: Ucap < uload <= Ucap + Uthr
+    (512, 256, 128),       # Very Heavy: uload > Ucap + Uthr
+    (512, 256, 0),         # Very Heavy with zero threshold
+    (0, 256, 128),         # empty batch: all padding
+    (437, 256, 128),       # padding tail not block-aligned
+])
+def test_shed_partition_budget_total_matches_shed_plan(
+        n_valid, ucap, uthr, cache_mode):
+    """budget_is_total mode must reproduce shed_plan tiers bit-for-bit
+    (the kernel nets normal-queue evals out of the total in-flight) and
+    the compacted ranks must match gather_eval_indices' arrival order."""
+    from repro.core.shedder import (eval_indices_from_rank,
+                                    gather_eval_indices, shed_plan)
+    N = 512
+    keys = jnp.arange(1, N + 1, dtype=jnp.uint32)
+    valid = jnp.arange(N) < n_valid
+    cache = _probe_cache(keys, cache_mode)
+    plan_kw = dict(deadline_s=0.5, overload_deadline_s=1.0,
+                   very_heavy_weight=0.5)
+    _, hit = TC.lookup(cache, keys)
+    plan = shed_plan(valid, hit, ucap, uthr, **plan_kw)
+    rate = jnp.float32(ucap) / jnp.float32(plan_kw["deadline_s"])
+    budget_total = int(jnp.floor(rate * plan["deadline_eff"]))
+
+    tier, cval, rank = ops.shed_partition(
+        keys, valid, cache["keys"], cache["values"],
+        u_capacity=ucap, u_threshold=uthr, budget_dq=budget_total,
+        budget_is_total=True, block_n=128, interpret=True)
+    assert bool(jnp.all(tier == plan["tier"]))
+    # kernel and pure-jnp oracle agree in budget_total mode too
+    tier_r, cval_r, rank_r = ref.shed_partition_ref(
+        keys, valid, cache["keys"], cache["values"], ucap, uthr,
+        budget_total, budget_is_total=True)
+    assert bool(jnp.all(tier == tier_r))
+    assert bool(jnp.all(rank == rank_r))
+    np.testing.assert_allclose(np.asarray(cval), np.asarray(cval_r))
+    # cached values surface only on CACHED tiers, and padding is INVALID
+    from repro.core.shedder import TIER_CACHED, TIER_INVALID
+    assert bool(jnp.all((np.asarray(cval) != 0)
+                        <= (tier == TIER_CACHED)))
+    assert bool(jnp.all(tier[n_valid:] == TIER_INVALID))
+
+    # compacted ranks: 0..k-1 in arrival order over EVAL items, -1 rest
+    max_evals = N
+    idx_o, valid_o = gather_eval_indices(plan["tier"], max_evals)
+    idx_k, valid_k = eval_indices_from_rank(rank, max_evals)
+    assert bool(jnp.all(valid_o == valid_k))
+    assert bool(jnp.all(jnp.where(valid_o, idx_o, -1)
+                        == jnp.where(valid_k, idx_k, -1)))
+
+
+@given(st.integers(0, 256), st.integers(1, 300), st.integers(0, 128),
+       st.integers(1, 256))
+@settings(max_examples=25, deadline=None)
+def test_eval_indices_from_rank_matches_gather(n_valid, ucap, budget,
+                                               max_evals):
+    """The O(N) scatter compaction equals the argsort-based gather for
+    every budget/max_evals combination (including max_evals smaller
+    than the number of EVAL items)."""
+    from repro.core.shedder import (eval_indices_from_rank,
+                                    gather_eval_indices)
+    N = 256
+    keys = jnp.arange(1, N + 1, dtype=jnp.uint32)
+    valid = jnp.arange(N) < n_valid
+    cache = _probe_cache(keys, "strided")
+    tier, _, rank = ops.shed_partition(
+        keys, valid, cache["keys"], cache["values"],
+        u_capacity=ucap, u_threshold=64, budget_dq=budget,
+        block_n=64, interpret=True)
+    idx_o, valid_o = gather_eval_indices(tier, max_evals)
+    idx_k, valid_k = eval_indices_from_rank(rank, max_evals)
+    assert bool(jnp.all(valid_o == valid_k))
+    assert bool(jnp.all(jnp.where(valid_o, idx_o, -1)
+                        == jnp.where(valid_k, idx_k, -1)))
