@@ -1,0 +1,231 @@
+"""Elastic membership + Trust-DB gossip acceptance (repro.cluster).
+
+Two scenarios, both on simulated per-replica clocks:
+
+**Churn** — the bench_cluster Very-Heavy multi-tenant Poisson workload
+is driven through (a) a static 4-replica fleet and (b) an elastic fleet
+that starts at 4 replicas and survives a deterministic
+join -> graceful-leave -> crash schedule mid-stream (fencing,
+drain-and-handoff in EDF order, admission-journal crash recovery).
+Targets (ISSUE 4 acceptance):
+
+  * ZERO dropped requests across the churn — every submitted request
+    gets exactly one Response fleet-wide, through the leave AND the
+    crash;
+  * elastic p99 response time no worse than the static 4-replica
+    baseline (the join adds a 5th replica through the heaviest phase,
+    which pays for the capacity dips around the leave/crash).
+
+**Gossip** — a correlated hot-URL flood (small corpus, every tenant
+drawing overlapping result sets, tenants spread across 4 replicas) runs
+with gossip off and on. Target: gossip cuts fleet-wide duplicate
+evaluations (the same URL freshly evaluated on more than one replica)
+by >= 2x, inside the bounded per-round broadcast budget.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+
+def _tenants(n_tenants: int, qps_each: float, slo_s: float,
+             max_results: int = 1500) -> List:
+    from repro.scheduling import Priority
+    from repro.serving.simulator import TenantSpec
+    mix = {Priority.CRITICAL: 0.05, Priority.HIGH: 0.25,
+           Priority.NORMAL: 0.5, Priority.LOW: 0.2}
+    return [TenantSpec(f"tenant{i}", qps=qps_each, priority_mix=mix,
+                       zipf_a=1.5, min_results=50,
+                       max_results=max_results, slo_s=slo_s)
+            for i in range(n_tenants)]
+
+
+def _cfg(n_replicas: int):
+    from repro.configs.base import TrustIRConfig
+    return TrustIRConfig(u_capacity=256, u_threshold=128,
+                         deadline_s=0.05, overload_deadline_s=0.1,
+                         chunk_size=32, cache_slots=4096,
+                         n_replicas=n_replicas)
+
+
+def _summarize(rep, coord, n_queries: int) -> Dict:
+    admitted = [r for r in rep.responses if r.admitted]
+    rids = [r.request_id for r in rep.responses]
+    lat = np.asarray([r.latency_s for r in admitted])
+    st = rep.scheduler_stats
+    return {
+        "n_responses": len(rep.responses),
+        "n_admitted": len(admitted),
+        "n_rejected": len(rep.responses) - len(admitted),
+        "p50_s": float(np.percentile(lat, 50)) if len(lat) else None,
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else None,
+        "slo_met_frac": (float(np.mean([r.met_slo for r in admitted]))
+                         if admitted else None),
+        "makespan_s": coord.makespan_s(),
+        "n_replicas_final": coord.n_replicas,
+        "cluster": st["cluster"],
+        # no-drop across churn: one response per submitted request
+        # (n_submitted aggregates departed replicas too)
+        "no_drop_ok": bool(len(rids) == len(set(rids))
+                           and len(rids) == st["n_submitted"]
+                           and len(rids) == st["cluster"]["n_enqueued"]),
+    }
+
+
+def run_churn(n_queries: int, seed: int = 0) -> Dict:
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.core.pipeline import SyntheticSearcher
+    from repro.serving.simulator import (ChurnEvent, MultiTenantWorkload,
+                                         make_arrivals,
+                                         run_churn_workload)
+
+    slo_s = 2.0
+    wl = MultiTenantWorkload(tenants=_tenants(8, 25.0, slo_s),
+                             n_queries=n_queries, seed=seed)
+
+    def fleet(schedule):
+        cfg = _cfg(4)
+        # The static baseline gets the adaptive watermarks but FIXED
+        # membership (max_replicas=0); the elastic fleet additionally
+        # lets the autoscaler's membership vote join/drain replicas in
+        # [4, 6] — which is what absorbs the leave and self-heals the
+        # crash instead of serving the whole tail under-provisioned.
+        elastic = schedule is not None
+        coord = ClusterCoordinator(
+            cfg, lambda ch: np.asarray(ch["trust"]),
+            cluster_cfg=ClusterConfig(hedge_after_s=0.5, max_hedges=1,
+                                      hedge_budget_frac=0.05,
+                                      autoscale=True, autoscale_every=2,
+                                      min_replicas=4 if elastic else 0,
+                                      max_replicas=6 if elastic else 0),
+            sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+        searcher = SyntheticSearcher(corpus_size=500_000, seed=seed)
+        # Both fleets run the SAME time-cadenced churn driver (static
+        # gets an empty schedule) so the comparison is pure membership.
+        return coord, run_churn_workload(coord, searcher, wl,
+                                         schedule or [])
+
+    static_coord, static_rep = fleet(None)
+
+    # Deterministic schedule pinned to the arrival span: join a 5th
+    # replica early (it carries the heaviest middle), drain one out
+    # gracefully past the peak, crash one near the tail.
+    t_end = make_arrivals(wl)[-1][0]
+    schedule = [ChurnEvent(t=0.20 * t_end, action="join"),
+                ChurnEvent(t=0.60 * t_end, action="leave"),
+                ChurnEvent(t=0.85 * t_end, action="crash")]
+    elastic_coord, elastic_rep = fleet(schedule)
+
+    out = {
+        "n_queries": n_queries,
+        "schedule": [(round(e.t, 3), e.action) for e in schedule],
+        "churn_log": [list(row) for row in elastic_rep.churn_log],
+        "static_4": _summarize(static_rep, static_coord, n_queries),
+        "elastic": _summarize(elastic_rep, elastic_coord, n_queries),
+    }
+    s, e = out["static_4"], out["elastic"]
+    out["no_drop_ok"] = bool(s["no_drop_ok"] and e["no_drop_ok"])
+    out["p99_ok"] = bool(e["p99_s"] is not None and s["p99_s"] is not None
+                         and e["p99_s"] <= s["p99_s"])
+    return out
+
+
+def run_gossip_flood(n_queries: int, seed: int = 0) -> Dict:
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.core.pipeline import SyntheticSearcher
+    from repro.serving.simulator import (MultiTenantWorkload,
+                                         run_cluster_workload)
+
+    # Correlated flood: a SMALL hot corpus, so tenants living on
+    # different replicas keep drawing the same URLs.
+    wl = MultiTenantWorkload(
+        tenants=_tenants(8, 25.0, slo_s=2.0, max_results=600),
+        n_queries=n_queries, seed=seed)
+
+    def flood(gossip: bool) -> Dict:
+        cfg = _cfg(4)
+        coord = ClusterCoordinator(
+            cfg, lambda ch: np.asarray(ch["trust"]),
+            cluster_cfg=ClusterConfig(gossip=gossip,
+                                      gossip_budget_items=1024),
+            sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+        rep = run_cluster_workload(
+            coord, SyntheticSearcher(corpus_size=4000, seed=seed), wl)
+        c = rep.scheduler_stats["cluster"]
+        row = {"n_eval_items": c["n_eval_items"],
+               "n_duplicate_evals": c["n_duplicate_evals"],
+               "n_responses": len(rep.responses)}
+        if gossip:
+            row["gossip"] = rep.scheduler_stats["gossip"]
+        return row
+
+    without = flood(False)
+    with_g = flood(True)
+    ratio = without["n_duplicate_evals"] \
+        / max(with_g["n_duplicate_evals"], 1)
+    return {
+        "n_queries": n_queries,
+        "without_gossip": without,
+        "with_gossip": with_g,
+        "dup_eval_cut": ratio,
+        "gossip_ok": bool(ratio >= 2.0
+                          and without["n_duplicate_evals"] > 0),
+    }
+
+
+def main(n_queries: int = 480, seed: int = 0) -> Dict:
+    if n_queries <= 0:
+        raise SystemExit("bench_elastic: --n-queries must be positive")
+    churn = run_churn(n_queries, seed)
+    gossip = run_gossip_flood(max(n_queries // 2, 60), seed)
+    out = {"churn": churn, "gossip": gossip,
+           "no_drop_ok": churn["no_drop_ok"],
+           "p99_ok": churn["p99_ok"],
+           "gossip_ok": gossip["gossip_ok"]}
+
+    def _ms(v):
+        return f"{v * 1e3:7.1f}ms" if v is not None else f"{'-':>9}"
+
+    s, e = churn["static_4"], churn["elastic"]
+    print(f"churn workload: {churn['n_queries']} queries, 8 tenants, "
+          f"Very-Heavy mix; schedule {churn['schedule']}")
+    print(f"{'fleet':>10} {'p50':>9} {'p99':>9} {'resp':>6} {'rej':>5} "
+          f"{'handoff':>8} {'recovered':>10} {'no-drop':>8}")
+    for name, f in (("static-4", s), ("elastic", e)):
+        c = f["cluster"]
+        print(f"{name:>10} {_ms(f['p50_s'])} {_ms(f['p99_s'])} "
+              f"{f['n_responses']:>6} {f['n_rejected']:>5} "
+              f"{c['n_handoffs']:>8} {c['n_crash_recovered']:>10} "
+              f"{'yes' if f['no_drop_ok'] else 'NO':>8}")
+    print(f"  churn no-drop {'PASS' if out['no_drop_ok'] else 'FAIL'}; "
+          f"p99 {'PASS' if out['p99_ok'] else 'FAIL'} (elastic "
+          f"{_ms(e['p99_s']).strip()} vs static {_ms(s['p99_s']).strip()})")
+    g = gossip
+    print(f"gossip flood: {g['n_queries']} queries over a 4k hot corpus"
+          f" -> duplicate evals {g['without_gossip']['n_duplicate_evals']}"
+          f" (off) vs {g['with_gossip']['n_duplicate_evals']} (on): "
+          f"{g['dup_eval_cut']:.1f}x cut "
+          f"({'PASS' if g['gossip_ok'] else 'FAIL'}: target >= 2x); "
+          f"{g['with_gossip']['gossip']['n_broadcast']} deltas "
+          f"broadcast, {g['with_gossip']['gossip']['n_dropped_budget']} "
+          f"shed by budget")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-queries", type=int, default=480)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced workload for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = main(240 if args.quick and args.n_queries == 480
+                else args.n_queries, args.seed)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

@@ -21,10 +21,10 @@ def _timed(name, fn):
 
 def main(quick: bool = False) -> None:
     from benchmarks import (bench_adaptive, bench_cluster,
-                            bench_fused_drain, bench_heavy_load,
-                            bench_response_time, bench_roofline,
-                            bench_scheduler, bench_throughput,
-                            bench_very_heavy_load)
+                            bench_elastic, bench_fused_drain,
+                            bench_heavy_load, bench_response_time,
+                            bench_roofline, bench_scheduler,
+                            bench_throughput, bench_very_heavy_load)
 
     csv_rows = []
 
@@ -88,6 +88,23 @@ def main(quick: bool = False) -> None:
     with open("BENCH_cluster.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_cluster.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: elastic membership churn + Trust-DB gossip "
+          "(repro.cluster)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "elastic",
+        (lambda: bench_elastic.main(n_queries=240)) if quick
+        else bench_elastic.main)
+    csv_rows.append((name, us,
+                     f"churn no-drop={rows['no_drop_ok']} "
+                     f"p99_ok={rows['p99_ok']} gossip "
+                     f"{rows['gossip']['dup_eval_cut']:.1f}x dup cut"))
+    with open("BENCH_elastic.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_elastic.json")
 
     print()
     print("=" * 72)

@@ -2,26 +2,43 @@
 
 Fleet request lifecycle (who owns each hop):
 
-    route    cluster.routing                consistent-hash ring maps
-       |                                    tenant -> replica shard
-       |                                    (weighted vnodes, minimal
-       |                                    remap on join/leave)
-    admit    replica's own Scheduler        PR-1 ladder vs THAT
-       |                                    replica's regime; explicit
-       |                                    prior-answered rejections
-    steal    cluster.coordinator            hot bank -> idle sibling,
-       |                                    from the BACK of the lowest
-       |                                    non-empty class (EDF heads
-       |                                    never reorder)
-    drain    cluster.coordinator            one micro-batch per replica
-       |                                    per round (round-robin)
-    hedge    distribution.fault_tolerance   stuck requests race a twin
-       |                                    on a REAL backup replica;
-       |                                    first completion wins,
-       |                                    loser deduplicated
-    adapt    cluster.autoscale_watermarks   fleet LoadMonitor EWMA ->
-                                            adaptive AdmissionPolicy
-                                            watermarks + tenant quotas
+    route      cluster.routing                consistent-hash ring maps
+       |                                      tenant -> replica shard
+       |                                      (weighted vnodes, minimal
+       |                                      remap on join/leave,
+       |                                      fencing for drains)
+    admit      replica's own Scheduler        PR-1 ladder vs THAT
+       |                                      replica's regime; explicit
+       |                                      prior-answered rejections
+    steal      cluster.coordinator            hot bank -> idle sibling,
+       |                                      from the BACK of the lowest
+       |                                      non-empty class (EDF heads
+       |                                      never reorder)
+    drain      cluster.coordinator            one micro-batch per replica
+       |                                      per round (round-robin)
+    hedge      distribution.fault_tolerance   stuck requests race a twin
+       |                                      on a REAL backup replica;
+       |                                      first completion wins,
+       |                                      loser deduplicated
+    gossip     cluster.gossip                 fresh Trust-DB cache fills
+       |                                      broadcast to siblings on a
+       |                                      bounded per-round budget
+       |                                      (hot URLs evaluated once
+       |                                      fleet-wide)
+    adapt      cluster.autoscale_watermarks   fleet LoadMonitor EWMA ->
+       |                                      adaptive AdmissionPolicy
+       |                                      watermarks + tenant quotas
+    join/leave cluster.coordinator            runtime membership: joins
+                                              rebalance minimally; a
+                                              leave fences + drains its
+                                              backlog to the ring's new
+                                              owners (EDF order, hedge
+                                              twins deduped); a crash
+                                              replays the admission
+                                              journal; the autoscaler's
+                                              membership vote drives
+                                              both between min/max
+                                              replica bounds
 
 Every replica is a full independent serving stack (own shedder, cache,
 prior, monitor — ``cluster.replica``); ``n_replicas=1`` degenerates to
@@ -31,6 +48,8 @@ from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
 from repro.cluster.coordinator import (ClusterConfig, ClusterCoordinator,
                                        ClusterStats)
+from repro.cluster.gossip import (GossipStats, TrustDelta,
+                                  TrustGossipBus)
 from repro.cluster.replica import ReplicaHandle
 from repro.cluster.routing import ConsistentHashRing, stable_hash
 
@@ -39,4 +58,5 @@ __all__ = [
     "ReplicaHandle",
     "ClusterConfig", "ClusterCoordinator", "ClusterStats",
     "WatermarkAutoscaler", "ClusterLoadSnapshot",
+    "TrustGossipBus", "TrustDelta", "GossipStats",
 ]

@@ -26,6 +26,22 @@ Control law (proportional, clamped):
   throughput — a tenant may consume at most that fraction of the
   *measured* fleet, not of a stale config guess.
 
+Elastic membership (capacity planning for vertical search: provision
+replica count to offered load, not only quotas): on top of the
+watermark/quota push, :meth:`membership_decision` turns the same
+smoothed fleet pressure into a scale-up / scale-down vote the
+``ClusterCoordinator`` executes as a runtime join or graceful leave.
+The policy compares the fleet EWMA backlog against the summed
+per-replica Ucapacity watermarks, with two kinds of hysteresis so
+membership never flaps:
+
+* a wide dead band — scale up only above ``scale_up_pressure``, scale
+  down only when the SURVIVING fleet (one replica fewer) would still
+  sit below ``scale_down_pressure``;
+* a cooldown — after any membership change, no further change for
+  ``scale_cooldown_ticks`` updates (joins need a tick to absorb load
+  before the backlog statistics mean anything).
+
 The static single-host behaviour is the degenerate case: one replica,
 ``update`` never called.
 """
@@ -65,13 +81,20 @@ class ClusterLoadSnapshot:
 class WatermarkAutoscaler:
     def __init__(self, base_low: float = 0.5, base_normal: float = 0.9,
                  floor_low: float = 0.1, floor_normal: float = 0.5,
-                 ewma: float = 0.5,
+                 ewma: float = 0.5, ewma_up: float = 1.0,
                  tenant_capacity_frac: float = 0.5,
-                 tenant_burst_s: float = 2.0):
+                 tenant_burst_s: float = 2.0,
+                 scale_up_pressure: float = 0.75,
+                 scale_down_pressure: float = 0.15,
+                 scale_cooldown_ticks: int = 2):
         if not (0.0 <= floor_low <= base_low <= 1.0):
             raise ValueError("need 0 <= floor_low <= base_low <= 1")
         if not (0.0 <= floor_normal <= base_normal <= 1.0):
             raise ValueError("need 0 <= floor_normal <= base_normal <= 1")
+        if not (0.0 <= scale_down_pressure < scale_up_pressure <= 1.0):
+            raise ValueError(
+                "need 0 <= scale_down_pressure < scale_up_pressure <= 1 "
+                "(the dead band IS the anti-flap hysteresis)")
         # Fallback idle anchors, used only when a replica's configured
         # policy cannot be read; normally each replica's own
         # AdmissionPolicy at first sight is the anchor.
@@ -79,17 +102,63 @@ class WatermarkAutoscaler:
         self.base_normal = base_normal
         self.floor_low = floor_low
         self.floor_normal = floor_normal
+        # Asymmetric smoothing: pressure RISES at ewma_up (default:
+        # instantly — a saturated fleet must not look idle for the
+        # first few ticks and trigger a cold-start scale-down) and
+        # decays at ewma (slow — scale-down is the conservative
+        # direction).
         self.ewma = ewma
+        self.ewma_up = ewma_up
         # <=0 disables quota pushing (watermarks only).
         self.tenant_capacity_frac = tenant_capacity_frac
         self.tenant_burst_s = tenant_burst_s
+        self.scale_up_pressure = scale_up_pressure
+        self.scale_down_pressure = scale_down_pressure
+        self.scale_cooldown_ticks = int(scale_cooldown_ticks)
         self._pressure = 0.0
         self._anchors: Dict[str, Tuple[float, float]] = {}
         self.n_updates = 0
+        self._last_scale_tick = -(10 ** 9)
 
     @property
     def pressure(self) -> float:
         return self._pressure
+
+    def forget(self, replica_id: str) -> None:
+        """Drop a departed replica's watermark anchor (a future replica
+        reusing the id re-anchors on ITS configured policy)."""
+        self._anchors.pop(replica_id, None)
+
+    # -- elastic membership policy -------------------------------------------
+    def membership_decision(self, n_replicas: int, min_replicas: int,
+                            max_replicas: int) -> int:
+        """Vote on fleet size from the last update's smoothed pressure:
+        ``+1`` (join a replica), ``-1`` (gracefully drain one out), or
+        ``0``. Call after :meth:`update` each autoscale tick.
+
+        Hysteresis: the up/down thresholds form a dead band, scale-down
+        additionally requires the surviving ``n-1`` fleet to stay below
+        the down threshold (removing capacity must not immediately push
+        pressure toward the up threshold), and any decision starts a
+        ``scale_cooldown_ticks``-update cooldown — so consecutive ticks
+        can never alternate join/leave on a noisy boundary.
+        """
+        if max_replicas <= 0:               # membership fixed
+            return 0
+        min_replicas = max(min_replicas, 1)
+        if self.n_updates - self._last_scale_tick \
+                < self.scale_cooldown_ticks:
+            return 0
+        p = self._pressure
+        if p >= self.scale_up_pressure and n_replicas < max_replicas:
+            self._last_scale_tick = self.n_updates
+            return 1
+        survivors = max(n_replicas - 1, 1)
+        if n_replicas > min_replicas and \
+                p * n_replicas / survivors <= self.scale_down_pressure:
+            self._last_scale_tick = self.n_updates
+            return -1
+        return 0
 
     def cluster_parameters(self, replicas: Sequence[ReplicaHandle]
                            ) -> Tuple[int, int, float]:
@@ -110,9 +179,9 @@ class WatermarkAutoscaler:
         tenant quotas (every replica x tenant) derived from it."""
         ucap, uthr, rate = self.cluster_parameters(replicas)
         queued = sum(rep.queued_items for rep in replicas)
-        raw = queued / max(ucap + uthr, 1)
-        self._pressure = (self.ewma * min(raw, 1.0)
-                          + (1 - self.ewma) * self._pressure)
+        raw = min(queued / max(ucap + uthr, 1), 1.0)
+        alpha = self.ewma_up if raw > self._pressure else self.ewma
+        self._pressure = alpha * raw + (1 - alpha) * self._pressure
         p = min(max(self._pressure, 0.0), 1.0)
 
         tenant_rates: Dict[str, float] = {}

@@ -31,6 +31,39 @@ per-replica ``LoadMonitor`` EWMA rates into fleet (Ucapacity,
 Uthreshold) and pushes adaptive admission watermarks + tenant quotas
 back onto every replica.
 
+**Elastic membership** (runtime join/leave/crash):
+
+* ``add_replica`` joins a fresh (or caller-built) replica at the
+  fleet's current simulated time; the ring rebalances minimally, so
+  only the tenants the new replica claims move.
+* ``remove_replica(rid, drain=True)`` is the graceful leave: the
+  replica is *fenced* from routing first, then its queued backlog
+  hands off to the ring's new owners in drain order (strict priority,
+  EDF within class — no surviving EDF head reorders), with hedge twins
+  deduplicated across the handoff (a copy whose twin is already queued
+  on a surviving replica is dropped, not double-served).
+* ``remove_replica(rid, drain=False)`` is a crash: the replica's
+  engine state (queues, cache, prior) is lost wholesale. The
+  coordinator recovers from its **admission journal** — every admitted
+  request is journaled until its response lands — by re-dispatching
+  each unanswered request that has no live copy on a surviving replica
+  to the ring's new owner. The fleet-wide no-drop invariant survives
+  both paths.
+* With ``ClusterConfig.max_replicas > 0`` the autoscaler's
+  ``membership_decision`` (fleet pressure vs per-replica capacity
+  watermarks, hysteresis + cooldown) drives joins and graceful leaves
+  from inside the drain loop instead of only pushing quotas.
+
+**Trust-DB gossip** (``ClusterConfig.gossip``): replicas tap their
+shedder's fresh evaluations (cache fills); once per drain round the
+coordinator harvests the ``(url_key, trust)`` deltas, publishes them to
+a bounded-budget ``TrustGossipBus``, and broadcasts the freshest to
+every sibling's Trust-DB — so a hot URL flooding every tenant is
+evaluated once fleet-wide instead of once per replica. The coordinator
+also counts fleet-wide duplicate evaluations (the same key freshly
+evaluated on more than one replica) whether or not gossip is on, which
+is the benchmark's measured quantity.
+
 ``TrustIRConfig.n_replicas = 1`` is the degenerate case: one replica,
 no stealing, hedging disabled (no backup exists) — behaviour identical
 to a bare ``ServingEngine``.
@@ -46,11 +79,14 @@ import numpy as np
 
 from repro.configs.base import TrustIRConfig
 from repro.distribution.fault_tolerance import HedgedDispatch
-from repro.scheduling import Priority, Response, SchedulerConfig
+from repro.scheduling import (Priority, QueuedRequest, Request, Response,
+                              SchedulerConfig)
+from repro.scheduling.priorities import REASON_QUEUE_FULL
 from repro.serving.engine import slo_stats_of
 
 from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
+from repro.cluster.gossip import TrustGossipBus
 from repro.cluster.replica import ReplicaHandle
 from repro.cluster.routing import ConsistentHashRing
 
@@ -67,6 +103,15 @@ class ClusterConfig:
     autoscale: bool = False             # adaptive watermarks + quotas
     autoscale_every: int = 4            # drain rounds between updates
     vnodes_per_weight: int = 64
+    # Elastic membership: with max_replicas > 0 (and autoscale on) the
+    # autoscaler's membership_decision drives runtime joins/graceful
+    # leaves between min_replicas and max_replicas; 0 = fixed fleet.
+    min_replicas: int = 0
+    max_replicas: int = 0
+    # Cross-replica Trust-DB gossip (cache-fill delta broadcast on a
+    # bounded per-round budget).
+    gossip: bool = False
+    gossip_budget_items: int = 256
 
 
 @dataclass
@@ -76,9 +121,34 @@ class ClusterStats:
     n_hedges: int = 0                   # cross-replica re-dispatches
     n_twin_drops: int = 0               # hedge losers deduplicated
     n_drain_rounds: int = 0
+    # elastic membership
+    n_joins: int = 0
+    n_leaves: int = 0                   # graceful (drain-and-handoff)
+    n_crashes: int = 0
+    n_handoffs: int = 0                 # requests migrated on leave
+    n_handoff_twin_drops: int = 0       # hedge twins deduped at handoff
+    n_crash_recovered: int = 0          # journal-replayed after a crash
+    # fleet-wide evaluation accounting (gossip's measured quantity)
+    n_eval_items: int = 0               # fresh evaluations, fleet-wide
+    n_duplicate_evals: int = 0          # same key evaluated again
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+@dataclass
+class _JournalEntry:
+    """Admission journal record: everything needed to re-dispatch an
+    admitted request after its replica crashes (the WAL a multi-host
+    control plane would keep)."""
+    item_keys: np.ndarray
+    buckets: np.ndarray
+    features: Dict[str, np.ndarray]
+    arrival_s: float
+    slo_s: float
+    priority: Priority
+    tenant: str
+    needs_kv_slot: bool
 
 
 class ClusterCoordinator:
@@ -91,7 +161,17 @@ class ClusterCoordinator:
                  drain_mode: Optional[str] = None,
                  evaluate_batch: Optional[Callable] = None):
         self.cfg = cfg
-        self.cluster_cfg = cluster_cfg or ClusterConfig()
+        if cluster_cfg is None:
+            # Bare coordinators inherit the system config's elastic
+            # membership bounds and gossip switch; an explicit
+            # ClusterConfig is authoritative. Elastic bounds imply the
+            # autoscaler (membership_decision is its vote).
+            cluster_cfg = ClusterConfig(
+                min_replicas=getattr(cfg, "min_replicas", 0),
+                max_replicas=getattr(cfg, "max_replicas", 0),
+                autoscale=getattr(cfg, "max_replicas", 0) > 0,
+                gossip=getattr(cfg, "gossip", False))
+        self.cluster_cfg = cluster_cfg
         n = max(1, int(cfg.n_replicas))
         weights = (tuple(cfg.replica_weights) if cfg.replica_weights
                    else (1.0,) * n)
@@ -101,19 +181,34 @@ class ClusterCoordinator:
                 f"n_replicas={n}")
 
         cc = self.cluster_cfg
+        if cc.max_replicas > 0 and \
+                max(cc.min_replicas, 1) > cc.max_replicas:
+            raise ValueError("min_replicas exceeds max_replicas")
         hedging = cc.hedge_after_s > 0 and n > 1
         self.hedge = (HedgedDispatch(cc.hedge_after_s,
                                      max_hedges=cc.max_hedges,
                                      budget_frac=cc.hedge_budget_frac)
                       if hedging else None)
         base_sched = sched_cfg or SchedulerConfig()
-        if hedging:
+        if cc.hedge_after_s > 0 and (n > 1 or cc.max_replicas > 0):
             # The cluster owns hedging (twins race REAL replicas);
             # engine-internal same-queue hedging would double-dispatch.
+            # Zeroed even at n == 1 when the fleet is ELASTIC: a backup
+            # can join at runtime, and the engines' config cannot
+            # change then. A permanently single-replica fleet keeps its
+            # engine-internal hedging.
             base_sched = dataclasses.replace(base_sched,
                                              hedge_after_s=0.0)
 
         self._ids = itertools.count()   # fleet-unique request ids
+        # Factory state for replicas joined at runtime (add_replica).
+        self._base_sched = base_sched
+        self._evaluate_chunk = evaluate_chunk
+        self._sim_rate = sim_rate_items_per_s
+        self._drain_mode = drain_mode
+        self._evaluate_batch = evaluate_batch
+        self._replica_seq = itertools.count(n)
+
         self.ring = ConsistentHashRing(cc.vnodes_per_weight)
         self.replicas: List[ReplicaHandle] = []
         for i, w in enumerate(weights):
@@ -132,11 +227,28 @@ class ClusterCoordinator:
 
         self.autoscaler = autoscaler or (WatermarkAutoscaler()
                                          if cc.autoscale else None)
+        self.gossip = (TrustGossipBus(cc.gossip_budget_items)
+                       if cc.gossip else None)
         self.last_snapshot: Optional[ClusterLoadSnapshot] = None
         self.tenants_seen: set = set()
+        # Latest arrival timestamp observed: the fleet's notion of
+        # "now" for membership events (a busy replica's clock runs
+        # AHEAD of now while it chews backlog, so makespan is not it).
+        self._now_hint = 0.0
         self.stats = ClusterStats()
         self.completed: List[Response] = []
         self._responded: set = set()    # fleet-wide answered rids
+        # Admission journal: rid -> replayable record, cleared when the
+        # response lands (crash recovery reads it; see remove_replica).
+        self._journal: Dict[int, _JournalEntry] = {}
+        # Final scheduler stats of departed replicas: fleet-lifetime
+        # counters (submissions, batches, rejections) must survive
+        # membership churn — the control plane scrapes them
+        # continuously, so a leave/crash does not erase history.
+        self._departed_sched: Dict[str, Dict] = {}
+        # key -> fleet-wide fresh-evaluation count (duplicate-eval
+        # accounting: the quantity gossip exists to reduce).
+        self._eval_counts: Dict[int, int] = {}
 
     # -- fleet views ---------------------------------------------------------
     @property
@@ -177,18 +289,250 @@ class ClusterCoordinator:
             rep.advance_to(t_arrival)
         self.tenants_seen.add(tenant)
         n_before = len(rep.engine.completed)
+        arrival = rep.now()             # what the engine will stamp
+        self._now_hint = max(self._now_hint,
+                             t_arrival if t_arrival is not None
+                             else arrival)
         rid = rep.engine.enqueue(item_keys, buckets, features,
                                  slo_s=slo_s, priority=priority,
                                  tenant=tenant,
                                  needs_kv_slot=needs_kv_slot)
         self.stats.n_enqueued += 1
+        admitted = len(rep.engine.completed) == n_before
+        if admitted:
+            # Journal every admitted request until its response lands:
+            # crash recovery replays unanswered entries onto the ring's
+            # surviving owners (the no-drop invariant must not depend
+            # on a single replica's memory).
+            self._journal[rid] = _JournalEntry(
+                item_keys=item_keys, buckets=buckets, features=features,
+                arrival_s=arrival,
+                slo_s=(self.cfg.overload_deadline_s if slo_s is None
+                       else slo_s),
+                priority=priority, tenant=tenant,
+                needs_kv_slot=needs_kv_slot)
         # A rejection completes immediately; only ADMITTED traffic
         # earns hedge budget (rejected floods must not raise the cap).
-        if self.hedge is not None \
-                and len(rep.engine.completed) == n_before:
+        if self.hedge is not None and admitted:
             self.hedge.note_request()
         self._collect()                 # surface immediate rejections
         return rid
+
+    # -- elastic membership --------------------------------------------------
+    def _next_replica_id(self) -> str:
+        while True:
+            rid = f"r{next(self._replica_seq)}"
+            # Departed ids are not recycled either — their final stats
+            # live on in the fleet aggregate under that name.
+            if rid not in self.by_id and rid not in self._departed_sched:
+                return rid
+
+    def add_replica(self, handle: Optional[ReplicaHandle] = None, *,
+                    weight: float = 1.0,
+                    replica_id: Optional[str] = None,
+                    now_t: Optional[float] = None) -> ReplicaHandle:
+        """Join a replica at runtime. With no ``handle`` a fresh one is
+        built from the coordinator's own factory state (same config,
+        evaluator, scheduler policy, and simulated rate as the seed
+        fleet — and the SHARED request-id source, so fleet-unique ids
+        survive the join). A caller-built handle must share that id
+        source itself.
+
+        The ring rebalances minimally (only the tenants the new replica
+        claims move), and on simulated fleets the newcomer's clock
+        fast-forwards to ``now_t`` (default: the latest arrival
+        timestamp the fleet has seen) — a replica joining now cannot
+        complete work in the past, but it also does not inherit a busy
+        sibling's backlog-inflated clock."""
+        if handle is None:
+            rid = replica_id or self._next_replica_id()
+            handle = ReplicaHandle(
+                rid, self.cfg, self._evaluate_chunk, weight=weight,
+                sched_cfg=self._base_sched,
+                sim_rate_items_per_s=self._sim_rate,
+                request_ids=self._ids,
+                drain_mode=self._drain_mode,
+                evaluate_batch=self._evaluate_batch)
+        if handle.replica_id in self.by_id:
+            raise ValueError(
+                f"replica {handle.replica_id!r} already in the fleet")
+        if handle.replica_id in self._departed_sched:
+            raise ValueError(
+                f"replica id {handle.replica_id!r} belonged to a "
+                f"departed replica whose stats live on under that name")
+        handle.advance_to(self._now_hint if now_t is None else now_t)
+        self.ring.add(handle.replica_id, handle.weight)
+        self.replicas.append(handle)
+        self.by_id[handle.replica_id] = handle
+        self.stats.n_joins += 1
+        cc = self.cluster_cfg
+        if self.hedge is None and cc.hedge_after_s > 0 \
+                and self.n_replicas > 1:
+            # A backup exists now: cluster hedging switches on.
+            self.hedge = HedgedDispatch(cc.hedge_after_s,
+                                        max_hedges=cc.max_hedges,
+                                        budget_frac=cc.hedge_budget_frac)
+        return handle
+
+    def remove_replica(self, replica_id: str, drain: bool = True) -> int:
+        """Leave (``drain=True``) or crash (``drain=False``) a replica
+        at runtime; returns the number of queued requests migrated.
+
+        Graceful leave: the replica is fenced from routing, then its
+        backlog hands off to the ring's new owners in drain order
+        (strict priority, EDF within class). A handed-off copy whose
+        hedge twin is already queued on a surviving replica is dropped
+        — deduplicated at the handoff instead of racing twice.
+
+        Crash: the engine state is lost wholesale; the admission
+        journal replays every unanswered request with no live copy on a
+        surviving replica onto the ring's new owner. Responses the dead
+        replica already produced were already delivered (collected
+        first), so they count — but its queues, Trust-DB, and prior are
+        gone."""
+        if replica_id not in self.by_id:
+            raise KeyError(replica_id)
+        if self.n_replicas == 1:
+            raise ValueError("cannot remove the last replica")
+        rep = self.by_id[replica_id]
+        # Responses the replica already produced left the building
+        # before the leave/crash — collect them while the cursor lives.
+        # Its un-harvested cache-fill deltas likewise: they happened,
+        # so they count (and gossip) before the member disappears.
+        self._collect()
+        self._harvest_cache_deltas()
+        self.ring.fence(replica_id)     # no fresh routes from here on
+        migrated = 0
+        if drain:
+            migrated = self._handoff_queue(rep)
+            self.stats.n_leaves += 1
+        # Drop the member BEFORE journal replay so recovery routes and
+        # twin-scans only see survivors.
+        self._departed_sched[replica_id] = rep.scheduler.stats.as_dict()
+        self.ring.remove(replica_id)
+        self.replicas.remove(rep)
+        del self.by_id[replica_id]
+        if not drain:
+            migrated = self._crash_recover()
+            self.stats.n_crashes += 1
+        if self.autoscaler is not None:
+            self.autoscaler.forget(replica_id)
+        return migrated
+
+    def _queued_rids(self, exclude: Optional[ReplicaHandle] = None
+                     ) -> set:
+        """Request ids with a live queued copy anywhere in the fleet
+        (optionally excluding one replica) — the hedge-twin scan."""
+        return {q.request.request_id
+                for rep in self.replicas if rep is not exclude
+                for p in Priority
+                for q in rep.bank.queues[p].entries()}
+
+    def _handoff_queue(self, leaving: ReplicaHandle) -> int:
+        """Drain-and-handoff: pop the leaving replica's queue in drain
+        order and push each request to the ring's new owner for its
+        tenant. EDF keys (absolute deadlines) travel with the requests,
+        so every surviving queue stays EDF-ordered and no surviving
+        head is displaced by anything later-deadlined."""
+        twins = self._queued_rids(exclude=leaving)
+        migrated = 0
+        for qreq in leaving.export_queue():
+            rid = qreq.request.request_id
+            if rid in twins:
+                # A hedge twin of this request is already queued on a
+                # surviving replica — the race is decided by the leave:
+                # keep the survivor, drop this copy.
+                self.stats.n_handoff_twin_drops += 1
+                self.stats.n_twin_drops += 1
+                continue
+            owner = self.by_id[self.ring.route(qreq.tenant)]
+            # Same timeline rule as stealing: the request has been
+            # queued since enqueue_t — the new owner's clock only lags
+            # because nothing happened on it.
+            owner.advance_to(qreq.enqueue_t)
+            if owner.import_queued(qreq):
+                migrated += 1
+                self.stats.n_handoffs += 1
+            else:                       # receiver full: explicit reject
+                self._reject_overflow(owner, qreq)
+        return migrated
+
+    def _reject_overflow(self, owner: ReplicaHandle,
+                         qreq: QueuedRequest) -> None:
+        """Backpressure during a handoff: the receiving queue is full,
+        so the request completes as an explicit prior-answered
+        rejection (never a silent drop) on the receiving replica."""
+        sched = owner.scheduler
+        resp = sched._reject(qreq.request, qreq.priority,
+                             sched.offered_regime(qreq.n_items),
+                             REASON_QUEUE_FULL)
+        sched.stats.n_rejected += 1
+        sched.stats.rejected_by_reason[REASON_QUEUE_FULL] = \
+            sched.stats.rejected_by_reason.get(REASON_QUEUE_FULL, 0) + 1
+        owner.engine.completed.append(resp)
+
+    def _crash_recover(self) -> int:
+        """Journal replay after a crash: re-dispatch every admitted,
+        unanswered request that has no live copy on a surviving replica
+        (a queued hedge twin counts as the live copy) to the ring's new
+        owner for its tenant. Re-entry happens at the fleet's current
+        time — the latest arrival timestamp, not a busy sibling's
+        backlog-inflated clock — with the ORIGINAL arrival and
+        deadline, so recovered requests keep their EDF position and
+        their latency accounting stays honest."""
+        still_queued = self._queued_rids()
+        now_t = self._now_hint
+        recovered = 0
+        for rid, e in sorted(self._journal.items()):
+            if rid in self._responded or rid in still_queued:
+                continue
+            req = Request(rid, e.item_keys, e.buckets, e.features,
+                          arrival_s=e.arrival_s, slo_s=e.slo_s,
+                          needs_kv_slot=e.needs_kv_slot)
+            qreq = QueuedRequest(request=req, priority=e.priority,
+                                 tenant=e.tenant,
+                                 deadline_t=e.arrival_s + e.slo_s,
+                                 enqueue_t=now_t)
+            owner = self.by_id[self.ring.route(e.tenant)]
+            owner.advance_to(now_t)
+            if owner.import_queued(qreq):
+                recovered += 1
+                self.stats.n_crash_recovered += 1
+            else:
+                self._reject_overflow(owner, qreq)
+        return recovered
+
+    def _autoscale_membership(self) -> None:
+        """Let the autoscaler's fleet-pressure vote change membership
+        (bounded by [min_replicas, max_replicas], hysteresis inside the
+        policy). Scale-down drains the lightest-loaded replica out."""
+        cc = self.cluster_cfg
+        if self.autoscaler is None or cc.max_replicas <= 0:
+            return
+        vote = self.autoscaler.membership_decision(
+            self.n_replicas, cc.min_replicas, cc.max_replicas)
+        if vote > 0:
+            self.add_replica()
+        elif vote < 0:
+            victim = min(self.replicas,
+                         key=lambda r: (r.queued_items, r.replica_id))
+            self.remove_replica(victim.replica_id, drain=True)
+
+    # -- Trust-DB gossip -----------------------------------------------------
+    def _harvest_cache_deltas(self) -> None:
+        """Collect every replica's fresh-evaluation taps: account
+        fleet-wide duplicate evaluations, and (with gossip on) publish
+        the deltas for this round's bounded broadcast."""
+        for rep in self.replicas:
+            for keys, vals in rep.take_cache_deltas():
+                self.stats.n_eval_items += len(keys)
+                for k in keys.tolist():
+                    c = self._eval_counts.get(k, 0)
+                    if c:
+                        self.stats.n_duplicate_evals += 1
+                    self._eval_counts[k] = c + 1
+                if self.gossip is not None:
+                    self.gossip.publish(rep.replica_id, keys, vals)
 
     # -- steal ---------------------------------------------------------------
     def _steal_rebalance(self) -> None:
@@ -284,10 +628,16 @@ class ClusterCoordinator:
             self._steal_rebalance()
             self._hedge_scan()
             any_batch = False
-            for rep in self.replicas:
+            for rep in list(self.replicas):
                 before = rep.scheduler.stats.n_batches
                 rep.engine.drain(max_batches=1)
                 any_batch |= rep.scheduler.stats.n_batches > before
+            # Gossip: harvest this round's cache fills (duplicate-eval
+            # accounting either way), then broadcast the freshest
+            # deltas to siblings under the per-round budget.
+            self._harvest_cache_deltas()
+            if self.gossip is not None:
+                self.gossip.flush(self.replicas)
             produced.extend(self._collect())
             rounds += 1
             self.stats.n_drain_rounds += 1
@@ -296,6 +646,7 @@ class ClusterCoordinator:
                     % max(self.cluster_cfg.autoscale_every, 1) == 0:
                 self.last_snapshot = self.autoscaler.update(
                     self.replicas, self.tenants_seen)
+                self._autoscale_membership()
             if not any_batch:
                 break
         return produced
@@ -334,6 +685,7 @@ class ClusterCoordinator:
         for resp in fresh:
             self._responded.add(resp.request_id)
             self.completed.append(resp)
+            self._journal.pop(resp.request_id, None)    # answered
         return fresh
 
     # -- observability -------------------------------------------------------
@@ -347,9 +699,13 @@ class ClusterCoordinator:
                      "rejected_by_reason": {}, "n_batches": 0,
                      "n_batched_items": 0, "n_hedges": 0}
         per_replica: Dict[str, Dict] = {}
-        for rep in self.replicas:
-            s = rep.scheduler.stats.as_dict()
-            per_replica[rep.replica_id] = s
+        live = {rep.replica_id: rep.scheduler.stats.as_dict()
+                for rep in self.replicas}
+        # Departed replicas' final counters stay in the fleet aggregate
+        # (membership churn must not erase submission history).
+        for rid, s in list(self._departed_sched.items()) \
+                + list(live.items()):
+            per_replica[rid] = s
             for k in ("n_submitted", "n_admitted", "n_rejected",
                       "n_batches", "n_batched_items", "n_hedges"):
                 agg[k] += s[k]
@@ -363,4 +719,6 @@ class ClusterCoordinator:
         agg["per_replica"] = per_replica
         if self.last_snapshot is not None:
             agg["autoscale"] = self.last_snapshot.as_dict()
+        if self.gossip is not None:
+            agg["gossip"] = self.gossip.stats.as_dict()
         return agg

@@ -1,0 +1,146 @@
+"""Cross-replica Trust-DB gossip: cache-fill deltas on a bounded budget.
+
+Every replica evaluates, caches, and calibrates independently
+(``cluster.replica``) — which means a correlated flood (the same hot
+URLs arriving at many tenants at once) pays one full trust evaluation
+PER replica for every hot URL. This module closes the ROADMAP open item
+with the cheapest coordination that helps: when a replica's shedder
+*freshly evaluates* a URL (a Trust-DB cache fill — the only moment new
+information exists), it publishes the ``(url_key, trust)`` delta to a
+coordinator-owned bus; once per drain round the bus broadcasts the
+freshest deltas to every *other* replica's Trust-DB, so the next
+replica to see that URL answers from cache (``TIER_CACHED``) instead of
+re-evaluating.
+
+Design constraints, in load-shedding spirit:
+
+* **bounded budget** — at most ``budget_items_per_round`` ``(key,
+  value)`` pairs are broadcast per drain round; overflow deltas are
+  DROPPED (and counted), never queued unboundedly. Gossip is an
+  optimization, not a correctness dependency: a dropped delta only
+  costs a duplicate evaluation later.
+* **generation-stamped** — each publish carries a monotonically
+  increasing generation; a delta that is no longer the newest value for
+  its key (a slower replica's stale re-evaluation, an out-of-order
+  arrival) is dropped at broadcast time instead of overwriting fresher
+  trust.
+* **no echo** — deltas are never delivered back to their origin
+  replica, and deliveries insert straight into sibling Trust-DB caches
+  (``TC.insert``) without re-triggering the shed tap, so gossip cannot
+  loop.
+
+The bus is a coordinator-local object standing in for the lightweight
+UDP/membership-protocol fanout a multi-host deployment would use; the
+budget and staleness rules are the part that transfers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class GossipStats:
+    n_published: int = 0        # pairs offered by replicas (cache fills)
+    n_broadcast: int = 0        # pairs actually broadcast (budget-bound)
+    n_applied: int = 0          # pair-deliveries into sibling caches
+    n_dropped_budget: int = 0   # overflow pairs shed by the round budget
+    n_dropped_stale: int = 0    # superseded-generation pairs dropped
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class TrustDelta:
+    """One published cache-fill batch from ``origin``."""
+    origin: str
+    keys: np.ndarray            # (n,) uint32 url keys
+    values: np.ndarray          # (n,) float32 trust
+    gen: int                    # generation stamp (monotone per bus)
+
+
+class TrustGossipBus:
+    """Coordinator-owned delta bus: publish on cache fill, broadcast
+    once per drain round under a bounded per-round budget."""
+
+    def __init__(self, budget_items_per_round: int = 256):
+        if budget_items_per_round <= 0:
+            raise ValueError("gossip budget must be positive")
+        self.budget_items_per_round = int(budget_items_per_round)
+        self._pending: Deque[TrustDelta] = deque()
+        self._gen = itertools.count(1)
+        # key -> newest generation seen; older deltas for the key are
+        # stale and must not overwrite fresher trust on delivery.
+        self._latest_gen: Dict[int, int] = {}
+        self.stats = GossipStats()
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(d.keys) for d in self._pending)
+
+    def publish(self, origin: str, keys: np.ndarray, values: np.ndarray,
+                gen: Optional[int] = None) -> int:
+        """Enqueue a cache-fill delta batch from ``origin``. ``gen``
+        defaults to a fresh (newest) generation; an explicit lower
+        generation models a delayed/out-of-order publish and will be
+        dropped as stale at broadcast time."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.float32)
+        if len(keys) == 0:
+            return 0
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        g = next(self._gen) if gen is None else int(gen)
+        for k in keys.tolist():
+            if g >= self._latest_gen.get(int(k), -1):
+                self._latest_gen[int(k)] = g
+        self._pending.append(TrustDelta(origin, keys, values, g))
+        self.stats.n_published += len(keys)
+        return len(keys)
+
+    def flush(self, replicas: Sequence) -> int:
+        """Broadcast up to ``budget_items_per_round`` of the freshest
+        pending pairs to every replica except each pair's origin;
+        overflow pending pairs are dropped (bounded memory, bounded
+        per-round work). Returns the number of pairs broadcast."""
+        budget = self.budget_items_per_round
+        n_broadcast = 0
+        per_target: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+        # Newest publishes spend the budget first: under a sustained
+        # flood the keys most likely to recur next round are the ones
+        # siblings must hear about; the oldest overflow is shed.
+        while self._pending:
+            delta = self._pending.pop()
+            fresh = np.asarray(
+                [self._latest_gen.get(int(k), -1) <= delta.gen
+                 for k in delta.keys.tolist()])
+            self.stats.n_dropped_stale += int((~fresh).sum())
+            keys, vals = delta.keys[fresh], delta.values[fresh]
+            if len(keys) == 0:
+                continue
+            if n_broadcast >= budget:
+                self.stats.n_dropped_budget += len(keys)
+                continue
+            take = min(len(keys), budget - n_broadcast)
+            self.stats.n_dropped_budget += len(keys) - take
+            keys, vals = keys[:take], vals[:take]
+            n_broadcast += take
+            for rep in replicas:
+                if rep.replica_id != delta.origin:
+                    per_target.setdefault(rep.replica_id, []).append(
+                        (keys, vals))
+        if per_target:
+            by_id = {rep.replica_id: rep for rep in replicas}
+            for rid, batches in per_target.items():
+                keys = np.concatenate([k for k, _ in batches])
+                vals = np.concatenate([v for _, v in batches])
+                by_id[rid].apply_trust_deltas(keys, vals)
+                self.stats.n_applied += len(keys)
+        self.stats.n_broadcast += n_broadcast
+        return n_broadcast

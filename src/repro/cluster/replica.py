@@ -14,15 +14,32 @@ the fleet). The coordinator keeps the timelines coherent by
 fast-forwarding a replica's clock to each event's global timestamp
 (``advance_to``) — an idle replica's clock only lags because nothing
 has happened on it.
+
+Elastic membership needs two more facilities per replica:
+
+* **queue snapshot export** (``export_queue``) — pops every queued
+  request in drain order (strict priority, EDF within class) so a
+  leaving replica's backlog hands off to the ring's new owners without
+  reordering any EDF head; ``import_queued`` is the receiving side.
+* **cache delta tap** — the shedder's ``on_shed`` hook records the
+  ``(url_key, trust)`` pairs of every FRESH evaluation (a Trust-DB
+  cache fill); ``take_cache_deltas`` drains them for the coordinator's
+  gossip bus and ``apply_trust_deltas`` folds a sibling's broadcast
+  into this replica's Trust-DB (cache-only — the prior stays local, so
+  a poisoned sibling can at worst pre-warm cache entries that evict).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import TrustIRConfig
+from repro.core import trust_cache as TC
 from repro.core.load_monitor import LoadMonitor
-from repro.core.shedder import SimClock
-from repro.scheduling import (PriorityQueueBank, Scheduler,
+from repro.core.shedder import ShedResult, SimClock, TIER_EVAL
+from repro.scheduling import (PriorityQueueBank, QueuedRequest, Scheduler,
                               SchedulerConfig)
 from repro.serving.engine import ServingEngine
 
@@ -52,6 +69,9 @@ class ReplicaHandle:
         # Responses the coordinator has already collected from
         # ``engine.completed`` (consumption cursor).
         self.n_collected = 0
+        # Fresh-evaluation (key, trust) batches awaiting gossip pickup.
+        self._cache_deltas: List[Tuple[np.ndarray, np.ndarray]] = []
+        self.engine.shedder.on_shed = self._tap_shed
 
     # -- forwarding accessors ------------------------------------------------
     @property
@@ -73,6 +93,54 @@ class ReplicaHandle:
     @property
     def queued_items(self) -> int:
         return self.bank.n_items
+
+    # -- queue snapshot (drain-and-handoff) ----------------------------------
+    def export_queue(self) -> List[QueuedRequest]:
+        """Pop EVERY queued request in drain order (strict priority,
+        EDF within each class) — the leaving replica's backlog snapshot.
+        The bank is empty afterwards."""
+        out: List[QueuedRequest] = []
+        while True:
+            qreq = self.bank.pop_next()
+            if qreq is None:
+                return out
+            out.append(qreq)
+
+    def import_queued(self, qreq: QueuedRequest) -> bool:
+        """Receive a handed-off request into this replica's bank (same
+        priority class, original deadline — the EDF key travels with
+        the request)."""
+        return self.bank.push(qreq)
+
+    # -- Trust-DB gossip taps ------------------------------------------------
+    def _tap_shed(self, item_keys: np.ndarray, result: ShedResult
+                  ) -> None:
+        """``on_shed`` hook: record the cache fills (freshly EVALuated
+        keys and their trust) this shed produced."""
+        evald = result.tier == TIER_EVAL
+        if evald.any():
+            self._cache_deltas.append(
+                (np.asarray(item_keys)[evald].astype(np.uint32),
+                 result.trust[evald].astype(np.float32)))
+
+    def take_cache_deltas(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Drain the pending cache-fill deltas (coordinator-side gossip
+        harvest; also resets the tap buffer)."""
+        out, self._cache_deltas = self._cache_deltas, []
+        return out
+
+    def apply_trust_deltas(self, keys: np.ndarray,
+                           values: np.ndarray) -> None:
+        """Fold a sibling's gossiped (key, trust) pairs into this
+        replica's Trust-DB cache. Inserts only — the average-trust
+        prior stays strictly local."""
+        if len(keys) == 0:
+            return
+        sh = self.engine.shedder
+        sh.cache = TC.insert(sh.cache,
+                             jnp.asarray(keys, jnp.uint32),
+                             jnp.asarray(values, jnp.float32),
+                             jnp.ones((len(keys),), bool))
 
     # -- time -----------------------------------------------------------------
     def now(self) -> float:

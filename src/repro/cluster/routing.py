@@ -21,6 +21,19 @@ Properties the cluster relies on (property-tested in
 
 ``route_chain`` returns the first ``k`` *distinct* replicas clockwise —
 the primary plus the backups hedged dispatch races against.
+
+Elastic membership (runtime join/leave) adds two facilities:
+
+* **fencing** — ``fence(replica_id)`` excludes a replica from every
+  route/chain WITHOUT deleting its points: new traffic flows to the
+  next point clockwise (exactly where a removal would send it) while
+  the fenced replica drains, and ``unfence`` restores the original
+  mapping bit for bit. A leaving replica is fenced first so the
+  drain-and-handoff never races fresh arrivals.
+* **remap diff** — ``remap_diff(tenants, remove=..., add=...)`` plans a
+  membership change: the exact ``{tenant: (old_owner, new_owner)}`` set
+  a join/leave would disturb, computed without mutating live state
+  (points are deterministic, so apply-then-restore is exact).
 """
 from __future__ import annotations
 
@@ -41,6 +54,7 @@ class ConsistentHashRing:
             raise ValueError("vnodes_per_weight must be positive")
         self.vnodes_per_weight = int(vnodes_per_weight)
         self.weights: Dict[str, float] = {}
+        self.fenced: set = set()                    # ids excluded from routing
         self._points: List[Tuple[int, str]] = []    # sorted (hash, id)
         self._keys: List[int] = []                  # parallel hash keys
 
@@ -80,29 +94,50 @@ class ConsistentHashRing:
         if replica_id not in self.weights:
             raise KeyError(replica_id)
         del self.weights[replica_id]
+        self.fenced.discard(replica_id)
         self._points = [(h, r) for h, r in self._points
                         if r != replica_id]
         self._rebuild_keys()
 
+    # -- fencing (elastic membership) ---------------------------------------
+    def fence(self, replica_id: str) -> None:
+        """Exclude ``replica_id`` from routing without touching its
+        points: tenants flow to the next point clockwise — exactly the
+        owners a removal would pick — while the replica drains."""
+        if replica_id not in self.weights:
+            raise KeyError(replica_id)
+        self.fenced.add(replica_id)
+
+    def unfence(self, replica_id: str) -> None:
+        """Restore a fenced replica to routing (mapping returns to the
+        pre-fence assignment exactly — the points never moved)."""
+        self.fenced.discard(replica_id)
+
+    @property
+    def routable_ids(self) -> List[str]:
+        return sorted(r for r in self.weights if r not in self.fenced)
+
     def route(self, tenant: str) -> str:
-        """First replica point clockwise from the tenant's hash."""
+        """First unfenced replica point clockwise from the tenant's
+        hash."""
         chain = self.route_chain(tenant, 1)
         if not chain:
-            raise RuntimeError("ring has no replicas")
+            raise RuntimeError("ring has no routable replicas")
         return chain[0]
 
     def route_chain(self, tenant: str, k: int) -> List[str]:
-        """First ``k`` *distinct* replicas clockwise: ``[primary,
-        backup, ...]``. Shorter when fewer than ``k`` replicas exist."""
+        """First ``k`` *distinct* unfenced replicas clockwise:
+        ``[primary, backup, ...]``. Shorter when fewer than ``k``
+        routable replicas exist."""
         if not self._points:
             return []
-        k = min(k, len(self.weights))
+        k = min(k, len(self.weights) - len(self.fenced))
         start = bisect.bisect_right(self._keys, stable_hash(tenant))
         chain: List[str] = []
         n = len(self._points)
         for i in range(n):
             _, rid = self._points[(start + i) % n]
-            if rid not in chain:
+            if rid not in chain and rid not in self.fenced:
                 chain.append(rid)
                 if len(chain) == k:
                     break
@@ -118,3 +153,43 @@ class ConsistentHashRing:
         """tenant -> replica map for a batch of tenants (observability
         and rebalance planning)."""
         return {t: self.route(t) for t in tenants}
+
+    def remap_diff(self, tenants: Sequence[str], *,
+                   remove: Optional[str] = None,
+                   add: Optional[Tuple[str, float]] = None
+                   ) -> Dict[str, Tuple[str, str]]:
+        """Plan a membership change without committing it.
+
+        Returns ``{tenant: (old_owner, new_owner)}`` for exactly the
+        tenants whose owner WOULD change if ``remove`` (a replica id)
+        left and/or ``add`` (an ``(id, weight)`` pair) joined. Points
+        are deterministic (md5 of stable strings), so the hypothetical
+        membership is applied and rolled back exactly; fencing state is
+        preserved."""
+        if remove is None and add is None:
+            return {}
+        # Validate BEFORE mutating: a failed hypothetical apply must
+        # leave the live ring untouched.
+        if remove is not None and remove not in self.weights:
+            raise KeyError(remove)
+        if add is not None and add[0] in self.weights \
+                and add[0] != remove:
+            raise ValueError(f"replica {add[0]!r} already on ring")
+        before = self.assignments(tenants)
+        removed_weight = None
+        removed_fenced = False
+        if remove is not None:
+            removed_weight = self.weights[remove]
+            removed_fenced = remove in self.fenced
+            self.remove(remove)
+        if add is not None:
+            self.add(*add)
+        after = self.assignments(tenants)
+        if add is not None:
+            self.remove(add[0])
+        if remove is not None:
+            self.add(remove, removed_weight)
+            if removed_fenced:
+                self.fenced.add(remove)
+        return {t: (before[t], after[t]) for t in tenants
+                if after[t] != before[t]}

@@ -283,6 +283,16 @@ class TrustIRConfig:
     # ring's virtual-node counts (empty = equal weights).
     n_replicas: int = 1
     replica_weights: Tuple[float, ...] = ()
+    # Elastic membership bounds: with max_replicas > 0 the cluster
+    # autoscaler may join/gracefully-leave replicas at runtime between
+    # [max(min_replicas, 1), max_replicas]; 0 = membership fixed at
+    # n_replicas (the pre-elastic behaviour).
+    min_replicas: int = 0
+    max_replicas: int = 0
+    # Cross-replica Trust-DB gossip: broadcast fresh cache fills to
+    # sibling replicas (bounded per-round budget) so correlated hot-URL
+    # floods are evaluated once fleet-wide.
+    gossip: bool = False
 
 
 # ---------------------------------------------------------------------------

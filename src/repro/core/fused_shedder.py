@@ -65,11 +65,13 @@ class PendingShed:
     def __init__(self, shedder: "FusedLoadShedder", trust, tier,
                  n_evald, *, t_start: float, wall_start: float,
                  n: int, regime, deadline_eff: float,
-                 skip_observe: bool = False):
+                 skip_observe: bool = False,
+                 item_keys: Optional[np.ndarray] = None):
         self._shedder = shedder
         self._trust = trust
         self._tier = tier
         self._n_evald = n_evald
+        self._item_keys = item_keys
         self._t_start = t_start
         self._wall_start = wall_start
         self._n = n
@@ -196,7 +198,8 @@ class FusedLoadShedder(LoadShedder):
                               t_start=t_start, wall_start=wall_start,
                               n=n, regime=regime,
                               deadline_eff=deadline_eff,
-                              skip_observe=compiled_now)
+                              skip_observe=compiled_now,
+                              item_keys=np.asarray(item_keys))
         if self.sim_clock is not None:
             pending.result()
         return pending
@@ -225,6 +228,8 @@ class FusedLoadShedder(LoadShedder):
             uload=p._n)
         if self.adaptive is not None:
             self.adaptive.observe(result)
+        if self.on_shed is not None and p._item_keys is not None:
+            self.on_shed(p._item_keys, result)
         return result
 
     # -- synchronous API (drop-in for LoadShedder.process) --------------------

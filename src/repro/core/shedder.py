@@ -255,6 +255,11 @@ class LoadShedder:
         # loop on the Very-Heavy extension weight — the paper's §7
         # future work
         self.adaptive = adaptive
+        # Optional tap fired after every shed with (item_keys, result):
+        # the cluster layer uses it to harvest fresh-evaluation Trust-DB
+        # deltas for cross-replica gossip.
+        self.on_shed: Optional[Callable[[np.ndarray, "ShedResult"],
+                                        None]] = None
 
     def _vh_weight(self) -> float:
         return (self.adaptive.weight if self.adaptive is not None
@@ -388,4 +393,6 @@ class LoadShedder:
             uload=n)
         if self.adaptive is not None:
             self.adaptive.observe(result)
+        if self.on_shed is not None:
+            self.on_shed(np.asarray(item_keys), result)
         return result

@@ -37,6 +37,18 @@ def main() -> int:
                         "one-device-step-per-batch drain")
     p.add_argument("--replicas", type=int, default=1,
                    help="serving fleet size (1 = single host)")
+    p.add_argument("--min-replicas", type=int, default=0,
+                   help="elastic lower bound: the autoscaler may drain "
+                        "the fleet down to this many replicas (0 = "
+                        "membership fixed at --replicas)")
+    p.add_argument("--max-replicas", type=int, default=0,
+                   help="elastic upper bound: the autoscaler may join "
+                        "replicas at runtime up to this many (0 = "
+                        "membership fixed at --replicas)")
+    p.add_argument("--gossip", action="store_true",
+                   help="cross-replica Trust-DB gossip: broadcast "
+                        "fresh cache fills to sibling replicas so hot "
+                        "URLs are evaluated once fleet-wide")
     p.add_argument("--hedge-after-ms", type=float, default=0.0,
                    help="cluster hedge latency (0 disables; needs "
                         "--replicas >= 2)")
@@ -67,16 +79,23 @@ def main() -> int:
     dl = args.deadline_ms / 1e3
     odl = args.overload_deadline_ms / 1e3
     n_rep = max(args.replicas, 1)
+    elastic = args.max_replicas > 0
     cfg = TrustIRConfig(u_capacity=max(int(rate * dl), 16),
                         u_threshold=max(int(rate * (odl - dl)), 8),
                         deadline_s=dl, overload_deadline_s=odl,
-                        chunk_size=64, n_replicas=n_rep)
+                        chunk_size=64, n_replicas=n_rep,
+                        min_replicas=args.min_replicas,
+                        max_replicas=args.max_replicas,
+                        gossip=args.gossip)
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
           f"(overload {odl * 1e3:.0f}ms)"
           + (" [adaptive]" if args.adaptive else "")
           + (" [sync]" if args.sync
              else f" [scheduled x{n_rep} replica(s)]")
+          + (f" [elastic {max(args.min_replicas, 1)}"
+             f"..{args.max_replicas}]" if elastic else "")
+          + (" [gossip]" if args.gossip else "")
           + f" [drain={args.drain_mode}]")
 
     def evaluate_batch(chunk):            # jax-traceable (fused drain)
@@ -93,7 +112,10 @@ def main() -> int:
             cfg, evaluate,
             cluster_cfg=ClusterConfig(
                 hedge_after_s=args.hedge_after_ms / 1e3,
-                autoscale=n_rep > 1),
+                autoscale=n_rep > 1 or elastic,
+                min_replicas=args.min_replicas,
+                max_replicas=args.max_replicas,
+                gossip=args.gossip),
             drain_mode=args.drain_mode,
             evaluate_batch=evaluate_batch)
         if args.adaptive:
@@ -169,7 +191,15 @@ def main() -> int:
             print(f"cluster: {len(eng.replicas)} replicas, "
                   f"{c['n_steals']} steals, {c['n_hedges']} "
                   f"cross-replica hedges, {c['n_twin_drops']} twins "
-                  f"deduplicated")
+                  f"deduplicated, {c['n_joins']} joins / "
+                  f"{c['n_leaves']} leaves")
+            if "gossip" in st:
+                g = st["gossip"]
+                print(f"gossip: {g['n_broadcast']} deltas broadcast "
+                      f"({g['n_dropped_budget']} over budget, "
+                      f"{g['n_dropped_stale']} stale), "
+                      f"{c['n_duplicate_evals']} duplicate evals "
+                      f"fleet-wide")
     board = eng.slo_stats()
     print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "

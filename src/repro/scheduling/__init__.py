@@ -36,7 +36,8 @@ Request lifecycle (who owns each hop):
                                             distribution.fault_tolerance
 
 With a multi-replica fleet (``repro.cluster``) the map gains a layer in
-FRONT of this one — ``route -> admit -> steal -> drain -> hedge``:
+FRONT of this one — ``route -> admit -> steal -> drain -> hedge ->
+gossip -> join/leave``:
 
     route    cluster.routing                consistent-hash ring picks
        |                                    the tenant's replica shard
@@ -51,10 +52,21 @@ FRONT of this one — ``route -> admit -> steal -> drain -> hedge``:
        |                                    budget when a KVCachePool
        |                                    slot is claimable
     hedge    distribution.fault_tolerance   stuck requests race a twin
-                                            on a REAL backup replica;
-                                            first completion wins, the
-                                            loser is deduplicated
-                                            fleet-wide
+       |                                    on a REAL backup replica;
+       |                                    first completion wins, the
+       |                                    loser is deduplicated
+       |                                    fleet-wide
+    gossip   cluster.gossip                 fresh Trust-DB cache fills
+       |                                    broadcast to siblings on a
+       |                                    bounded budget (hot URLs
+       |                                    evaluated once fleet-wide)
+    join/    cluster.coordinator            runtime membership: fence +
+    leave                                   drain-and-handoff (EDF
+                                            order) on leave, admission-
+                                            journal replay on crash,
+                                            autoscaler-voted joins and
+                                            leaves between min/max
+                                            replica bounds
 
 No *admitted* request is ever dropped: every item leaves with a trust
 value (paper §5 invariant, preserved across the batching layer), every

@@ -97,6 +97,85 @@ def test_ring_route_chain_distinct_and_backup():
     assert solo.backup_for("tenant") is None       # no twin to race
 
 
+@given(st.lists(st.tuples(st.booleans(),          # True = join
+                          st.integers(1, 4)),     # weight
+                min_size=1, max_size=16),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ring_minimal_remap_under_arbitrary_churn(ops, seed):
+    """Minimal-remap invariant under ARBITRARY weighted join/leave
+    sequences (ISSUE 4): after every single membership change, the only
+    tenants whose owner moved are (join) those now owned by the joiner,
+    or (leave) those previously owned by the leaver."""
+    rng = np.random.default_rng(seed)
+    ring = ConsistentHashRing()
+    ring.add("seed", weight=float(rng.integers(1, 4)))
+    tenants = [f"tenant{i}" for i in range(120)]
+    next_id = 0
+    for join, weight in ops:
+        before = ring.assignments(tenants)
+        if join or len(ring) == 1:                 # never empty the ring
+            rid = f"j{next_id}"
+            next_id += 1
+            ring.add(rid, weight=float(weight))
+            after = ring.assignments(tenants)
+            for t in tenants:
+                if after[t] != before[t]:
+                    assert after[t] == rid         # only the joiner claims
+        else:
+            victim = sorted(ring.weights)[
+                int(rng.integers(len(ring)))]
+            ring.remove(victim)
+            after = ring.assignments(tenants)
+            for t in tenants:
+                if after[t] != before[t]:
+                    assert before[t] == victim     # only its tenants move
+
+
+def test_ring_fencing_excludes_then_restores_exactly():
+    ring = ConsistentHashRing()
+    for i in range(4):
+        ring.add(f"r{i}")
+    tenants = [f"t{i}" for i in range(200)]
+    before = ring.assignments(tenants)
+    ring.fence("r1")
+    fenced = ring.assignments(tenants)
+    assert all(owner != "r1" for owner in fenced.values())
+    # untouched tenants keep their owner; r1's tenants remap exactly
+    # where a removal would send them
+    diff = {t for t in tenants if fenced[t] != before[t]}
+    assert diff == {t for t in tenants if before[t] == "r1"}
+    assert "r1" not in ring.route_chain("anyone", 4)
+    assert ring.routable_ids == ["r0", "r2", "r3"]
+    ring.unfence("r1")
+    assert ring.assignments(tenants) == before     # bit-for-bit restore
+    with pytest.raises(KeyError):
+        ring.fence("nope")
+
+
+def test_ring_remap_diff_plans_without_mutating():
+    ring = ConsistentHashRing()
+    for i in range(4):
+        ring.add(f"r{i}", weight=1.0 + i % 2)
+    tenants = [f"t{i}" for i in range(150)]
+    before = ring.assignments(tenants)
+    diff = ring.remap_diff(tenants, remove="r2")
+    assert ring.assignments(tenants) == before     # planning is pure
+    assert set(diff) == {t for t in tenants if before[t] == "r2"}
+    for t, (old, new) in diff.items():
+        assert old == "r2" and new != "r2"
+    # the plan matches what actually happens on removal
+    ring.remove("r2")
+    after = ring.assignments(tenants)
+    for t, (_, new) in diff.items():
+        assert after[t] == new
+    ring.add("r2", 1.0)
+    join_diff = ring.remap_diff(tenants, add=("r9", 2.0))
+    assert ring.assignments(tenants) == before
+    assert all(new == "r9" for _, new in join_diff.values())
+    assert ring.remap_diff(tenants) == {}
+
+
 @given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=25, deadline=None)
 def test_ring_removal_remaps_only_removed_replicas_tenants(n_rep, seed):
