@@ -1,29 +1,40 @@
-"""Fused device-resident drain vs the host chunk-loop drain.
+"""Fused device-resident drain vs the host chunk-loop drain, plus the
+DrainExecutor pipeline-depth sweep.
 
-Acceptance benchmark for ``core.fused_shedder`` (the serving hot path):
-the same request stream is drained through
+Acceptance benchmark for ``core.fused_shedder`` +
+``scheduling.executor`` (the serving hot path): the same request stream
+is driven in the SERVING-LOOP pattern — requests enqueue as they
+arrive, and one micro-batch drains whenever the backlog reaches the
+batch budget (exactly how ``launch/serve.py`` and the cluster
+round-robin drive an engine) — through
 
   * ``drain_mode="host"`` — ``LoadShedder.process``: one Trust-DB probe
     dispatch, then a host-side chunk loop that re-gathers features and
     round-trips to the device once per chunk, per micro-batch;
-  * ``drain_mode="fused"`` — ``FusedLoadShedder``: ONE jitted step per
-    micro-batch (Pallas ``shed_partition`` probe+tier with compacted
-    eval indices, static-shape gather, batched evaluator forward,
-    scatter, cache/prior fold-back), async-dispatched so batch N+1 forms
-    while batch N computes.
+  * ``drain_mode="fused"`` at ``pipeline_depth`` 1 / 2 / 4 — ONE jitted
+    step per micro-batch (Pallas ``shed_partition`` (8,128)-lane
+    probe+tier with compacted eval indices, static-shape gather,
+    batched evaluator forward, scatter, cache/prior fold-back). Depth 1
+    syncs on every drain call (the PR-3 behaviour); depth >= 2 keeps
+    the DrainExecutor window open ACROSS drain calls, so the device
+    step of batch N overlaps the admission + formation of batch N+1
+    instead of the loop paying one device round-trip per iteration.
 
-Both paths use the SAME evaluator, chunk/batch budget and shedder
+All paths use the SAME evaluator, chunk/batch budget and shedder
 config; Ucapacity exceeds the batch bound so every item is fully
-evaluated on both paths (equal work — throughput isolates drain
-overhead). Targets: fused >= 2x host items/s, p99 no worse.
+evaluated everywhere (equal work — throughput isolates drain + sync
+overhead). Targets: fused (default depth) >= 2x host items/s with p99
+no worse, and depth >= 2 >= 1.3x depth-1 items/s with p99 no worse —
+every admitted request answered exactly once at every depth.
 
 A separate simulated-clock phase checks decision parity across all
 three regimes on a cold cache: tiers must match the host oracle
 EXACTLY (the fused budget derives from the same ``shed_plan`` math; the
 bench loads keep the drop-queue budget chunk-aligned so the host
-executor's chunk-granular clock lands on the identical grant), trust
-matches to float tolerance (batched vs chunked matmul reassociation),
-and the no-item-dropped property holds on both paths.
+executor's chunk-granular clock lands on the identical grant — and the
+(8,128)-tiled kernel pads its ragged tails internally), trust matches
+to float tolerance (batched vs chunked matmul reassociation), and the
+no-item-dropped property holds on both paths.
 """
 from __future__ import annotations
 
@@ -67,22 +78,32 @@ def _requests(n_requests: int, items_per_req: int, seed: int = 0,
     return reqs
 
 
-def _run_stream(eng, reqs) -> float:
+def _run_stream(eng, reqs, batch_items: int) -> float:
+    """The serving-loop driver: enqueue arrivals, drain ONE batch
+    (without syncing the pipeline window) whenever the backlog fills
+    the budget, flush at the end. Depth-1 engines sync inside every
+    ``drain`` call — the historical behaviour; depth >= 2 engines
+    overlap the dispatched step with the next iteration's enqueues."""
     t0 = time.perf_counter()
     for keys, buckets, feats in reqs:
         eng.enqueue(keys, buckets, feats)
+        if eng.scheduler.queued_items >= batch_items:
+            eng.drain(max_batches=1, flush=False)
     eng.drain()
     return time.perf_counter() - t0
 
 
 def _throughput_phase(n_requests: int, items_per_req: int,
-                      batch_items: int, out: Dict) -> None:
+                      batch_items: int, out: Dict,
+                      depths=(1, 2, 4)) -> None:
+    import dataclasses
+
     from repro.configs.base import TrustIRConfig
     from repro.scheduling import SchedulerConfig
     from repro.serving.engine import ServingEngine
 
     # Ucapacity above the batch bound: every item is fully evaluated on
-    # both paths (equal work at equal micro-batch budget).
+    # every path (equal work at equal micro-batch budget).
     cfg = TrustIRConfig(u_capacity=4096, u_threshold=2048,
                         deadline_s=0.5, overload_deadline_s=1.0,
                         chunk_size=64, cache_slots=8192)
@@ -90,25 +111,65 @@ def _throughput_phase(n_requests: int, items_per_req: int,
     n_items = n_requests * items_per_req
     sched_cfg = SchedulerConfig(max_batch_items=batch_items)
 
-    for mode in ("host", "fused"):
-        eng = ServingEngine(cfg, evaluate_np, sched_cfg=sched_cfg,
+    def _run_config(mode: str, depth: int, repeats: int) -> Dict:
+        """Best-of-``repeats`` serving-loop runs (min wall — the
+        least-contended estimate on a shared host). Every repeat
+        streams DISTINCT keys so the Trust-DB stays cold and all
+        configs do identical evaluator work."""
+        run_cfg = dataclasses.replace(cfg, pipeline_depth=depth)
+        eng = ServingEngine(run_cfg, evaluate_np, sched_cfg=sched_cfg,
                             drain_mode=mode, evaluate_batch=ev)
         _run_stream(eng, _requests(8, items_per_req,
-                                   key_offset=50_000_000))  # warm/compile
-        eng.completed.clear()
-        wall = _run_stream(eng, _requests(n_requests, items_per_req))
-        s = eng.slo_stats()
-        st = eng.scheduler_stats()
-        out[mode] = {"wall_s": wall, "items_per_s": n_items / wall,
-                     "p50_s": s["p50_s"], "p99_s": s["p99_s"],
-                     "n_batches": st["n_batches"],
-                     "mean_batch_fill": st["mean_batch_fill"]}
+                                   key_offset=900_000_000),
+                    batch_items)                     # warm/compile
+        best = None
+        for rep in range(repeats):
+            eng.completed.clear()
+            n0 = eng.scheduler.stats.n_batches
+            reqs = _requests(n_requests, items_per_req,
+                             key_offset=rep * 100_000_000)
+            wall = _run_stream(eng, reqs, batch_items)
+            rids = {r.request_id for r in eng.completed}
+            assert len(rids) == len(eng.completed) == len(reqs), \
+                f"{mode} depth={depth}: exactly-one-response violated"
+            s = eng.slo_stats()
+            row = {"wall_s": wall, "items_per_s": n_items / wall,
+                   "p50_s": s["p50_s"], "p99_s": s["p99_s"],
+                   "n_batches": eng.scheduler.stats.n_batches - n0}
+            if best is None or wall < best["wall_s"]:
+                best = row
+        return best
+
+    repeats = 3
+    sweep: Dict[int, Dict] = {}
+    out["host"] = _run_config("host", 1, repeats)
+    for d in depths:
+        sweep[d] = _run_config("fused", d, repeats)
+    out["depth_sweep"] = {str(d): r for d, r in sweep.items()}
+    default_depth = TrustIRConfig().pipeline_depth
+    out["fused"] = sweep.get(default_depth) or sweep[max(sweep)]
 
     out["speedup"] = (out["fused"]["items_per_s"]
                       / out["host"]["items_per_s"])
     out["speedup_ok"] = bool(out["speedup"] >= 2.0)
     out["p99_ok"] = bool(out["fused"]["p99_s"]
                          <= out["host"]["p99_s"] * 1.05)
+    # Pipeline-depth acceptance: a deeper window must buy real
+    # throughput over the depth-1 sync-per-drain behaviour (>= 1.3x
+    # items/s at the same batch budget), and its tail must stay no
+    # worse than the host-drain baseline (responses deliberately
+    # RESIDE in the window for up to depth drain intervals, so the
+    # depth-1 tail — which contains no pipeline residency at all — is
+    # not the meaningful guard; the baseline executor's is).
+    if 1 in sweep and len(sweep) > 1:
+        best = max((d for d in sweep if d > 1),
+                   key=lambda d: sweep[d]["items_per_s"])
+        out["depth_speedup"] = (sweep[best]["items_per_s"]
+                                / sweep[1]["items_per_s"])
+        out["depth_speedup_best"] = best
+        out["depth_ok"] = bool(out["depth_speedup"] >= 1.3)
+        out["depth_p99_ok"] = bool(sweep[best]["p99_s"]
+                                   <= out["host"]["p99_s"] * 1.05)
 
 
 def _parity_phase(out: Dict) -> None:
@@ -162,31 +223,48 @@ def _parity_phase(out: Dict) -> None:
     out["no_drop_ok"] = bool(no_drop_ok)
 
 
-def main(n_requests: int = 192, items_per_req: int = 64,
-         batch_items: int = 2048, quick: bool = False) -> Dict:
+def main(n_requests: int = 768, items_per_req: int = 64,
+         batch_items: int = 1024, quick: bool = False,
+         depths=(1, 2, 4)) -> Dict:
     if quick:
-        n_requests = min(n_requests, 64)
+        # Keep >= 16 batches per run: the depth sweep measures pipeline
+        # overlap, which needs enough batches to amortize noise.
+        n_requests = min(n_requests, 256)
+        batch_items = min(batch_items, 1024)
     if n_requests <= 0 or items_per_req <= 0 or batch_items <= 0:
         raise SystemExit("bench_fused_drain: --n-requests, "
                          "--items-per-req and --batch-items must be "
                          "positive")
+    depths = tuple(sorted(set(int(d) for d in depths)))
+    if any(d < 1 for d in depths):
+        raise SystemExit("bench_fused_drain: --depths must be >= 1")
     out: Dict = {"n_requests": n_requests,
                  "items_per_req": items_per_req,
-                 "batch_items": batch_items}
-    _throughput_phase(n_requests, items_per_req, batch_items, out)
+                 "batch_items": batch_items,
+                 "depths": list(depths)}
+    _throughput_phase(n_requests, items_per_req, batch_items, out,
+                      depths=depths)
     _parity_phase(out)
 
     print(f"workload: {n_requests} requests x {items_per_req} items "
-          f"(batch bound {batch_items})")
-    for mode in ("host", "fused"):
-        r = out[mode]
-        print(f"  {mode:>5}: {r['items_per_s']:10.0f} items/s   "
+          f"(batch bound {batch_items}, serving-loop driver)")
+    rows_to_print = [("host", out["host"])] + [
+        (f"d={d}", r) for d, r in sorted(
+            out["depth_sweep"].items(), key=lambda kv: int(kv[0]))]
+    for label, r in rows_to_print:
+        print(f"  {label:>5}: {r['items_per_s']:10.0f} items/s   "
               f"p50 {r['p50_s'] * 1e3:7.2f} ms   "
               f"p99 {r['p99_s'] * 1e3:7.2f} ms   "
               f"({r['n_batches']} batches)")
     print(f"  fused/host = {out['speedup']:.2f}x "
           f"({'PASS' if out['speedup_ok'] else 'FAIL'}: target >= 2x), "
           f"p99 {'ok' if out['p99_ok'] else 'WORSE'}")
+    if "depth_speedup" in out:
+        print(f"  depth-{out['depth_speedup_best']}/depth-1 = "
+              f"{out['depth_speedup']:.2f}x "
+              f"({'PASS' if out['depth_ok'] else 'FAIL'}: target >= "
+              f"1.3x), p99 "
+              f"{'ok' if out['depth_p99_ok'] else 'WORSE'}")
     print(f"  parity ({'/'.join(out['parity']['regimes'])}): tiers "
           f"{'EXACT' if out['parity_ok'] else 'MISMATCH'}, no-drop "
           f"{'holds' if out['no_drop_ok'] else 'VIOLATED'} on both "
@@ -196,14 +274,18 @@ def main(n_requests: int = 192, items_per_req: int = 64,
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--n-requests", type=int, default=192)
+    ap.add_argument("--n-requests", type=int, default=768)
     ap.add_argument("--items-per-req", type=int, default=64)
-    ap.add_argument("--batch-items", type=int, default=2048)
+    ap.add_argument("--batch-items", type=int, default=1024)
+    ap.add_argument("--depths", default="1,2,4",
+                    help="comma-separated pipeline_depth sweep")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
     rows = main(args.n_requests, args.items_per_req, args.batch_items,
-                quick=args.quick)
+                quick=args.quick,
+                depths=tuple(int(d) for d in
+                             args.depths.split(",") if d))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)

@@ -10,13 +10,22 @@ into one serving fleet:
   admission ladder against *its* regime; rejections surface through the
   coordinator as the same explicit prior-answered ``Response``.
 * **steal** — when one replica's ``PriorityQueueBank`` runs hot while a
-  sibling idles, queued work migrates from the *back* of the victim's
+  sibling idles, queued work migrates out of the victim's
   lowest-importance non-empty class (``PriorityQueueBank.steal_back``):
-  latest-deadline, least-important requests move, the victim's EDF
-  heads never reorder.
+  cost-aware by default (``ClusterConfig.cost_aware_steal``), the
+  non-head entry with the highest estimated eval cost on the victim —
+  items x Trust-DB miss probability (``ReplicaHandle.steal_cost``) —
+  moves, so cache-cold work migrates while cache-hot work stays where
+  its cache is warm; the victim's EDF heads never reorder.
 * **drain** — micro-batches execute round-robin across replicas, one
   batch per replica per round (fair progress; on simulated clocks the
-  replicas genuinely overlap in time).
+  replicas genuinely overlap in time). Each replica keeps ONE
+  ``DrainExecutor`` window alive ACROSS rounds (``pipeline_depth >=
+  2``, wall clocks): its fused device steps overlap the next round's
+  scans and batch formation, and every round begins by POLLING the
+  completed in-flight batches so the steal/hedge/autoscale decisions
+  below read stats as fresh as the hardware allows — not one batch
+  late.
 * **hedge** — requests stuck past the hedge latency are re-dispatched
   to a REAL backup replica (the ring's next distinct replica for the
   tenant) at CRITICAL priority and the twins race; the first completed
@@ -112,6 +121,15 @@ class ClusterConfig:
     # bounded per-round budget).
     gossip: bool = False
     gossip_budget_items: int = 256
+    # Warm Trust-DB handoff on graceful leave: the leaving replica's
+    # top-K freshest (url, trust) cache entries ship to the ring's new
+    # owners via apply_trust_deltas (0 disables — the cache then
+    # re-warms purely through gossip / duplicate evaluations).
+    warm_handoff_top_k: int = 1024
+    # Cost-aware stealing: rank steal candidates by estimated eval
+    # cost on the victim (items x Trust-DB miss probability), so
+    # cache-cold work migrates and cache-hot work stays warm.
+    cost_aware_steal: bool = True
 
 
 @dataclass
@@ -127,6 +145,8 @@ class ClusterStats:
     n_crashes: int = 0
     n_handoffs: int = 0                 # requests migrated on leave
     n_handoff_twin_drops: int = 0       # hedge twins deduped at handoff
+    n_warm_handoff_entries: int = 0     # (url, trust) pairs shipped on
+                                        # a graceful leave (warm cache)
     n_crash_recovered: int = 0          # journal-replayed after a crash
     # fleet-wide evaluation accounting (gossip's measured quantity)
     n_eval_items: int = 0               # fresh evaluations, fleet-wide
@@ -395,16 +415,32 @@ class ClusterCoordinator:
         if self.n_replicas == 1:
             raise ValueError("cannot remove the last replica")
         rep = self.by_id[replica_id]
+        # In-flight pipelined batches land first: a graceful leave waits
+        # for its window (those responses are about to be collected); a
+        # crash loses a real machine's in-flight work too, but THIS
+        # in-process stand-in has already mutated the shared Trust-DB
+        # arrays, so finalizing keeps the accounting consistent.
+        rep.engine.flush()
         # Responses the replica already produced left the building
         # before the leave/crash — collect them while the cursor lives.
         # Its un-harvested cache-fill deltas likewise: they happened,
         # so they count (and gossip) before the member disappears.
         self._collect()
         self._harvest_cache_deltas()
+        # Warm-state handoff plan must be computed BEFORE fencing: the
+        # new owners are "who the ring gives this replica's tenants
+        # to", and a fenced replica no longer owns anything to diff.
+        new_owner_ids: set = set()
+        if drain and self.cluster_cfg.warm_handoff_top_k > 0:
+            diff = self.ring.remap_diff(sorted(self.tenants_seen),
+                                        remove=replica_id)
+            new_owner_ids = {new for old, new in diff.values()
+                             if old == replica_id}
         self.ring.fence(replica_id)     # no fresh routes from here on
         migrated = 0
         if drain:
             migrated = self._handoff_queue(rep)
+            self._handoff_warm_cache(rep, new_owner_ids)
             self.stats.n_leaves += 1
         # Drop the member BEFORE journal replay so recovery routes and
         # twin-scans only see survivors.
@@ -456,6 +492,32 @@ class ClusterCoordinator:
             else:                       # receiver full: explicit reject
                 self._reject_overflow(owner, qreq)
         return migrated
+
+    def _handoff_warm_cache(self, leaving: ReplicaHandle,
+                            new_owner_ids: set) -> None:
+        """Warm Trust-DB handoff (graceful leave): ship the leaving
+        replica's top-K freshest ``(url, trust)`` cache entries to the
+        ring's new owners through the existing ``apply_trust_deltas``
+        path — the tenants' hot URLs keep answering from cache instead
+        of re-warming one duplicate evaluation at a time through
+        gossip. Inserts only, prior stays local (same poisoning
+        isolation as gossip)."""
+        if not new_owner_ids:
+            return
+        keys, vals = leaving.export_cache(
+            self.cluster_cfg.warm_handoff_top_k)
+        if len(keys) == 0:
+            return
+        delivered = False
+        for rid in sorted(new_owner_ids):
+            owner = self.by_id.get(rid)
+            if owner is not None and owner is not leaving:
+                owner.apply_trust_deltas(keys, vals)
+                delivered = True
+        if delivered:
+            # Distinct (url, trust) pairs that left the replica — NOT
+            # multiplied by the receiving fan-out.
+            self.stats.n_warm_handoff_entries += len(keys)
 
     def _reject_overflow(self, owner: ReplicaHandle,
                          qreq: QueuedRequest) -> None:
@@ -539,9 +601,30 @@ class ClusterCoordinator:
         """Migrate work from the hottest bank to the idlest while the
         imbalance exceeds the threshold. Steals come off the BACK of the
         victim's lowest-importance non-empty class and a class is never
-        robbed below 2 entries, so every EDF head stays put."""
+        robbed below 2 entries, so every EDF head stays put. With
+        ``cost_aware_steal`` the non-head candidate with the highest
+        estimated eval cost on the victim (items x Trust-DB miss
+        probability) leaves — a stolen chunk of cache-hot requests
+        would displace cache-cold work only to re-evaluate warm items
+        on the thief's cold cache."""
         if self.n_replicas < 2:
             return
+        # Per-scan cost memo: a candidate scored but left behind this
+        # round keeps its score on the next steal_back call (a victim's
+        # cache only changes when a batch lands, not mid-scan) —
+        # scoring is a device lookup, so pay it once per (victim,
+        # entry). Keyed by victim too: the same request re-scored on a
+        # different replica after a move sees THAT replica's cache.
+        memo: Dict[tuple, float] = {}
+
+        def _costed(rep):
+            def fn(qreq):
+                key = (rep.replica_id, id(qreq))
+                if key not in memo:
+                    memo[key] = rep.steal_cost(qreq)
+                return memo[key]
+            return fn
+
         for _ in range(self.cluster_cfg.max_steals_per_round):
             by_load = sorted(self.replicas,
                              key=lambda r: (r.queued_items,
@@ -550,7 +633,10 @@ class ClusterCoordinator:
             gap = hot.queued_items - idle.queued_items
             if gap < self.cluster_cfg.steal_threshold_items:
                 break
-            qreq = hot.bank.steal_back()
+            qreq = hot.bank.steal_back(
+                cost_fn=(_costed(hot)
+                         if self.cluster_cfg.cost_aware_steal
+                         else None))
             if qreq is None:            # nothing stealable (heads only)
                 break
             if qreq.n_items >= gap:
@@ -619,19 +705,39 @@ class ClusterCoordinator:
 
     # -- drain ---------------------------------------------------------------
     def drain(self, max_rounds: Optional[int] = None) -> List[Response]:
-        """Round-robin drain: steal + hedge scans, then one micro-batch
-        per replica, until every bank is empty (or ``max_rounds``).
-        Returns the NEW responses produced (deduplicated)."""
+        """Round-robin drain: poll + steal + hedge scans, then one
+        micro-batch per replica, until every bank is empty and every
+        pipeline window has landed (or ``max_rounds``). Returns the NEW
+        responses produced (deduplicated).
+
+        Fused replicas with ``pipeline_depth >= 2`` dispatch their
+        batch and return WITHOUT syncing (``flush=False``): the device
+        steps of round N overlap round N+1's steal/hedge scans and
+        batch formation, instead of the fleet paying one full device
+        round-trip per replica per round. The ``poll`` at the top of
+        each round folds every batch that has since landed back into
+        its replica's LoadMonitor / Trust-DB tap / response log FIRST,
+        so the steal, hedge, autoscale, and gossip decisions that
+        follow read stats as fresh as the hardware can make them —
+        not one batch late (the former ROADMAP gap)."""
         produced: List[Response] = []
         rounds = 0
         while max_rounds is None or rounds < max_rounds:
+            # Fold completed in-flight batches back BEFORE deciding
+            # anything: steal/hedge/autoscale read fresh stats.
+            for rep in self.replicas:
+                rep.engine.poll()
             self._steal_rebalance()
             self._hedge_scan()
             any_batch = False
             for rep in list(self.replicas):
-                before = rep.scheduler.stats.n_batches
-                rep.engine.drain(max_batches=1)
-                any_batch |= rep.scheduler.stats.n_batches > before
+                # n_submitted counts rescued batches too: a batch whose
+                # dispatch raised still consumed queue work (and was
+                # prior-answered), so the round made progress.
+                before = rep.scheduler.executor.n_submitted
+                rep.engine.drain(max_batches=1, flush=False)
+                any_batch |= \
+                    rep.scheduler.executor.n_submitted > before
             # Gossip: harvest this round's cache fills (duplicate-eval
             # accounting either way), then broadcast the freshest
             # deltas to siblings under the per-round budget.
@@ -648,6 +754,14 @@ class ClusterCoordinator:
                     self.replicas, self.tenants_seen)
                 self._autoscale_membership()
             if not any_batch:
+                # Queues are empty; land whatever is still in flight
+                # (their fold-backs may gossip) and finish.
+                for rep in self.replicas:
+                    rep.engine.flush()
+                self._harvest_cache_deltas()
+                if self.gossip is not None:
+                    self.gossip.flush(self.replicas)
+                produced.extend(self._collect())
                 break
         return produced
 
@@ -697,7 +811,8 @@ class ClusterCoordinator:
         reports consume both interchangeably), plus cluster extras."""
         agg: Dict = {"n_submitted": 0, "n_admitted": 0, "n_rejected": 0,
                      "rejected_by_reason": {}, "n_batches": 0,
-                     "n_batched_items": 0, "n_hedges": 0}
+                     "n_batched_items": 0, "n_hedges": 0,
+                     "n_executor_errors": 0}
         per_replica: Dict[str, Dict] = {}
         live = {rep.replica_id: rep.scheduler.stats.as_dict()
                 for rep in self.replicas}
@@ -707,8 +822,9 @@ class ClusterCoordinator:
                 + list(live.items()):
             per_replica[rid] = s
             for k in ("n_submitted", "n_admitted", "n_rejected",
-                      "n_batches", "n_batched_items", "n_hedges"):
-                agg[k] += s[k]
+                      "n_batches", "n_batched_items", "n_hedges",
+                      "n_executor_errors"):
+                agg[k] += s.get(k, 0)
             for reason, c in s["rejected_by_reason"].items():
                 agg["rejected_by_reason"][reason] = \
                     agg["rejected_by_reason"].get(reason, 0) + c

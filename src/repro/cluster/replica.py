@@ -129,6 +129,41 @@ class ReplicaHandle:
         out, self._cache_deltas = self._cache_deltas, []
         return out
 
+    def steal_cost(self, qreq: QueuedRequest) -> float:
+        """Estimated evaluation cost of serving ``qreq`` HERE: items
+        that would miss this replica's Trust-DB (a hit costs a probe, a
+        miss costs a full evaluator forward). Cost-aware stealing ranks
+        steal candidates by this, so a chunk of cache-hot requests is
+        not shipped to a sibling whose cold cache would re-evaluate it
+        while cache-cold work stays behind."""
+        keys = np.asarray(qreq.request.item_keys)
+        if len(keys) == 0:
+            return 0.0
+        _, hit = TC.lookup(self.engine.shedder.cache,
+                           jnp.asarray(keys, jnp.uint32))
+        return float(len(keys) - int(np.asarray(hit).sum()))
+
+    # -- warm-state handoff (graceful leave) ---------------------------------
+    def export_cache(self, top_k: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """The ``top_k`` FRESHEST ``(url_key, trust)`` Trust-DB entries
+        (by insertion age) — the warm-state complement of
+        ``export_queue``. A gracefully leaving replica ships these to
+        the ring's new owners through the same ``apply_trust_deltas``
+        path gossip uses, so its tenants' hot URLs stay answered from
+        cache instead of re-warming one duplicate evaluation at a
+        time."""
+        cache = self.engine.shedder.cache
+        keys = np.asarray(cache["keys"]).reshape(-1)
+        vals = np.asarray(cache["values"]).reshape(-1)
+        age = np.asarray(cache["age"]).reshape(-1)
+        live = keys != 0
+        keys, vals, age = keys[live], vals[live], age[live]
+        if len(keys) > top_k:
+            sel = np.argpartition(-age, top_k - 1)[:top_k]
+            keys, vals = keys[sel], vals[sel]
+        return keys.astype(np.uint32), vals.astype(np.float32)
+
     def apply_trust_deltas(self, keys: np.ndarray,
                            values: np.ndarray) -> None:
         """Fold a sibling's gossiped (key, trust) pairs into this

@@ -277,6 +277,18 @@ class TrustIRConfig:
     #             budget_dq derives from the same shed_plan math, so
     #             tiers match the host oracle. The serving hot path.
     drain_mode: str = "host"
+    # Depth of the drain executor's in-flight window
+    # (``scheduling.executor.DrainExecutor``): how many dispatched
+    # micro-batches may be outstanding before the oldest is finalized.
+    # Depth 1 reproduces the PR-3 behaviour bit-for-bit (one batch
+    # overlapped inside a drain call, every ``drain`` call synced on
+    # return); depth >= 2 keeps the window open ACROSS drain calls, so
+    # a serving loop that drains one batch per iteration no longer
+    # syncs per iteration — batch N+2 forms and transfers while N
+    # computes and N+1 waits. Sequential executors (host drain_mode,
+    # simulated clocks) ignore the depth: their timelines are
+    # sequential by construction.
+    pipeline_depth: int = 2
     # Serving fleet (repro.cluster): number of independent replica
     # engines (each with its own shedder/cache/prior state). 1 = the
     # single-host degenerate case; weights bias the consistent-hash

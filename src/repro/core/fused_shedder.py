@@ -17,13 +17,17 @@ shedding decision into ONE device dispatch per micro-batch:
                                   buffers update in place on TPU/GPU
 
 Features transfer to device once per *batch* (the host path converts
-the pytree then re-gathers per chunk). The step is dispatched
-asynchronously: ``process_async`` returns a :class:`PendingShed` whose
-arrays stay on device until ``.result()``, so the scheduler can form
-micro-batch N+1 while batch N computes (JAX async dispatch). With a
-``SimClock`` the step resolves eagerly instead — simulated timelines
-are sequential by construction and exist for deterministic parity with
-the host path, not throughput.
+the pytree then re-gathers per chunk), and the transfer is its own
+stage: ``stage`` enqueues the host->device copies, ``dispatch_staged``
+launches the step, and ``process_async`` composes the two into a
+:class:`PendingShed` whose arrays stay on device until ``.result()``.
+The ``scheduling.executor.DrainExecutor`` sequences these handles in a
+depth-k in-flight window (``TrustIRConfig.pipeline_depth``): batch N+2
+forms and transfers while batch N computes and N+1 waits, and at depth
+>= 2 the window survives across drain calls so a serving loop never
+pays a device sync per iteration. With a ``SimClock`` the step resolves
+eagerly instead — simulated timelines are sequential by construction
+and exist for deterministic parity with the host path, not throughput.
 
 Tier parity: ``budget_total = floor(rate * deadline_eff)`` is computed
 from the same Load-Monitor parameters and deadline controller as
@@ -47,11 +51,40 @@ from repro.configs.base import TrustIRConfig
 from repro.core import average_trust as AT
 from repro.core import trust_cache as TC
 from repro.core.deadline import effective_deadline
-from repro.core.load_monitor import LoadMonitor
+from repro.core.load_monitor import LoadMonitor, WarmupGate
 from repro.core.regimes import classify
 from repro.core.shedder import (LoadShedder, ShedResult, SimClock,
                                 TIER_CACHED, TIER_EVAL, TIER_PRIOR,
                                 combine_trust, eval_indices_from_rank)
+
+
+class StagedBatch:
+    """One micro-batch after its host->device feature transfer.
+
+    Staging is the front half of the fused pipeline: ``stage`` enqueues
+    the transfers, ``dispatch_staged`` launches the jitted shedding
+    step on the staged buffers. The copies are asynchronous, so under a
+    depth-k ``DrainExecutor`` window the transfer of batch N+2 runs
+    behind the in-flight device steps of N and N+1 — the overlap comes
+    from the window plus JAX async dispatch, the split keeps the
+    transfer cost visible (and monitorable) as its own stage.
+    """
+
+    __slots__ = ("item_keys", "keys_j", "buckets_j", "valid_j",
+                 "feats_j", "n", "n_total", "t_start", "wall_start")
+
+    def __init__(self, item_keys, keys_j, buckets_j, valid_j, feats_j,
+                 n: int, n_total: int, t_start: float,
+                 wall_start: float):
+        self.item_keys = item_keys
+        self.keys_j = keys_j
+        self.buckets_j = buckets_j
+        self.valid_j = valid_j
+        self.feats_j = feats_j
+        self.n = n
+        self.n_total = n_total
+        self.t_start = t_start
+        self.wall_start = wall_start
 
 
 class PendingShed:
@@ -79,11 +112,27 @@ class PendingShed:
         self._deadline_eff = deadline_eff
         self._skip_observe = skip_observe
         self._result: Optional[ShedResult] = None
+        # Wall time at which the step was FIRST observed complete
+        # (stamped by is_ready): the honest end of the throughput
+        # window when finalize happens long after completion.
+        self._wall_ready: Optional[float] = None
 
     def result(self) -> ShedResult:
         if self._result is None:
             self._result = self._shedder._finish(self)
         return self._result
+
+    def is_ready(self) -> bool:
+        """True when the device step has completed (materializing would
+        not block). The DrainExecutor's ``poll`` uses this to fold
+        finished batches back without stalling on running ones."""
+        if self._result is not None:
+            return True
+        ready = getattr(self._trust, "is_ready", None)
+        done = True if ready is None else bool(ready())
+        if done and self._wall_ready is None:
+            self._wall_ready = time.monotonic()
+        return done
 
 
 class FusedLoadShedder(LoadShedder):
@@ -122,6 +171,10 @@ class FusedLoadShedder(LoadShedder):
         self._step = jax.jit(
             self._step_impl, static_argnames=("max_evals",),
             donate_argnums=(0, 1) if donate else ())
+        # Wall time of the last throughput observation: pipelined
+        # batches overlap, so each observation charges only the
+        # marginal window since the previous one (see _finish).
+        self._last_obs_wall = 0.0
 
     # -- the fused device step ----------------------------------------------
     def _step_impl(self, cache, prior, keys, buckets, valid, features,
@@ -129,12 +182,13 @@ class FusedLoadShedder(LoadShedder):
                    max_evals: int):
         from repro.kernels.shed_partition import shed_partition
         n = keys.shape[0]
-        block_n = 1024 if n % 1024 == 0 else n
+        # (8, 128) lane-shaped blocks — the native f32/i32 TPU tile;
+        # the kernel pads ragged tails internally, so any batch budget
+        # (chunk-aligned or not) takes the same code path.
         tier, cval, rank = shed_partition(
             keys, valid, cache["keys"], cache["values"],
             u_capacity, u_threshold, budget_total,
-            budget_is_total=True, block_n=block_n,
-            interpret=self.interpret)
+            budget_is_total=True, interpret=self.interpret)
         # Safety on a too-small max_evals: overflow evals fall back to
         # the prior tier (no-drop) instead of silently scoring 0. The
         # default max_evals = batch capacity can never overflow.
@@ -156,17 +210,35 @@ class FusedLoadShedder(LoadShedder):
         return (trust, tier, jnp.sum(evald.astype(jnp.int32)),
                 new_cache, new_prior)
 
-    # -- dispatch / finish ----------------------------------------------------
-    def process_async(self, item_keys: np.ndarray, buckets: np.ndarray,
-                      features, n_valid: Optional[int] = None
-                      ) -> PendingShed:
-        """Dispatch one fused step; returns a handle whose ``.result()``
-        materializes the :class:`ShedResult`. With a ``SimClock`` the
-        handle resolves eagerly (deterministic sequential timeline)."""
+    # -- stage / dispatch / finish --------------------------------------------
+    def stage(self, item_keys: np.ndarray, buckets: np.ndarray,
+              features, n_valid: Optional[int] = None) -> StagedBatch:
+        """Front half of the fused step: ONE host->device transfer per
+        batch (the host path re-gathers from the feature pytree once
+        per chunk). The copies are enqueued asynchronously, so under a
+        depth-k executor the transfer of batch N+2 runs behind batch
+        N's in-flight compute — the transfer half of the pipeline."""
         t_start = self._now()
         wall_start = time.monotonic()
         n_total = len(item_keys)
         n = n_total if n_valid is None else int(n_valid)
+        valid = np.zeros((n_total,), bool)
+        valid[:n] = True
+        return StagedBatch(
+            item_keys=np.asarray(item_keys),
+            keys_j=jnp.asarray(item_keys, jnp.uint32),
+            buckets_j=jnp.asarray(buckets, jnp.int32),
+            valid_j=jnp.asarray(valid),
+            feats_j=jax.tree.map(jnp.asarray, features),
+            n=n, n_total=n_total, t_start=t_start,
+            wall_start=wall_start)
+
+    def dispatch_staged(self, staged: StagedBatch) -> PendingShed:
+        """Back half: launch the jitted shedding step on staged
+        buffers; returns a handle whose ``.result()`` materializes the
+        :class:`ShedResult`. With a ``SimClock`` the handle resolves
+        eagerly (deterministic sequential timeline)."""
+        n, n_total = staged.n, staged.n_total
         ucap, uthr = self.monitor.parameters()
         regime = classify(n, ucap, uthr)
         deadline_eff = effective_deadline(
@@ -178,46 +250,72 @@ class FusedLoadShedder(LoadShedder):
             ucap / self.cfg.deadline_s * deadline_eff))
         max_evals = self.max_evals or n_total
 
-        # ONE host->device transfer per batch (the host path re-gathers
-        # from the feature pytree once per chunk).
-        keys_j = jnp.asarray(item_keys, jnp.uint32)
-        buckets_j = jnp.asarray(buckets, jnp.int32)
-        valid_j = jnp.arange(n_total) < n
-        feats_j = jax.tree.map(jnp.asarray, features)
-
-        cache_size = getattr(self._step, "_cache_size", lambda: -1)()
+        # First sight of a work shape is jit warmup — the SAME
+        # exclusion rule the host chunk loop applies (WarmupGate), so
+        # both drain modes feed the LoadMonitor comparably.
+        warm = self._warmup.warm(
+            WarmupGate.signature(n_total, staged.feats_j)
+            + (max_evals,))
         trust, tier, n_evald, self.cache, self.prior = self._step(
-            self.cache, self.prior, keys_j, buckets_j, valid_j,
-            feats_j, ucap, uthr, budget_total, max_evals=max_evals)
-        # A call that traced+compiled would poison the throughput EWMA
-        # (Ucapacity would collapse for the next few batches); skip its
-        # monitor observation.
-        compiled_now = getattr(self._step, "_cache_size",
-                               lambda: -1)() != cache_size
+            self.cache, self.prior, staged.keys_j, staged.buckets_j,
+            staged.valid_j, staged.feats_j, ucap, uthr, budget_total,
+            max_evals=max_evals)
         pending = PendingShed(self, trust, tier, n_evald,
-                              t_start=t_start, wall_start=wall_start,
+                              t_start=staged.t_start,
+                              wall_start=staged.wall_start,
                               n=n, regime=regime,
                               deadline_eff=deadline_eff,
-                              skip_observe=compiled_now,
-                              item_keys=np.asarray(item_keys))
+                              skip_observe=not warm,
+                              item_keys=staged.item_keys)
         if self.sim_clock is not None:
             pending.result()
         return pending
 
+    def process_async(self, item_keys: np.ndarray, buckets: np.ndarray,
+                      features, n_valid: Optional[int] = None
+                      ) -> PendingShed:
+        """Stage + dispatch in one call (the DrainExecutor's entry
+        point; staging still runs ahead of the step's device slot)."""
+        return self.dispatch_staged(
+            self.stage(item_keys, buckets, features, n_valid=n_valid))
+
     def _finish(self, p: PendingShed) -> ShedResult:
+        t_entry = time.monotonic()
+        ready_at_entry = p.is_ready()   # stamps _wall_ready if so
         trust = np.asarray(p._trust)                # sync point
         tier = np.asarray(p._tier)
         n_evald = int(p._n_evald)
+        wall_end = time.monotonic()
         if self.sim_clock is not None:
             self.sim_clock.charge_probe()
             self.sim_clock.charge_eval(n_evald)
         elif n_evald and not p._skip_observe:
-            # Dispatch-to-materialize window: under the pipelined drain
-            # it also covers the next batch's host-side formation, so
-            # the rate reads slightly LOW — conservative for admission
-            # (Ucapacity never overstates sustained fused throughput).
-            self.monitor.observe(n_evald,
-                                 time.monotonic() - p._wall_start)
+            # Marginal service window: from the LATER of this batch's
+            # dispatch and the previous observation, to the batch's
+            # COMPLETION. Under a depth-k window the naive dispatch-to-
+            # materialize span covers several batches' device work (and,
+            # across ``flush=False`` drain calls, arbitrary caller idle
+            # time), which would deflate the rate — and Ucapacity — in
+            # proportion to the depth. Completion is taken from the
+            # earliest ``is_ready`` stamp (the executor checks the
+            # window head at poll AND at every submit, so busy loops
+            # stamp at loop cadence), or from the sync we just paid
+            # when the step was genuinely still running. A batch that
+            # finished at some unknown earlier moment (ready on entry,
+            # never observed) falls back to the entry time — an
+            # overestimate whose damage LoadMonitor bounds with its
+            # symmetric rate clamp.
+            if p._wall_ready is not None \
+                    and p._wall_ready < t_entry - 1e-6:
+                completed = p._wall_ready       # stamped earlier
+            elif not ready_at_entry:
+                completed = wall_end            # we blocked: honest end
+            else:
+                completed = t_entry             # bounded overestimate
+            base = max(p._wall_start, self._last_obs_wall)
+            if completed > base:
+                self.monitor.observe(n_evald, completed - base)
+                self._last_obs_wall = completed
         rt = self._now() - p._t_start
         result = ShedResult(
             trust=trust, tier=tier, regime=p._regime,

@@ -14,9 +14,44 @@ seed the estimate before any measurement exists.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Hashable, Optional, Tuple
 
 from repro.configs.base import TrustIRConfig
+
+
+class WarmupGate:
+    """Shared jit-warmup exclusion rule for throughput observations.
+
+    The first evaluation of a new work shape pays trace + compile; its
+    elapsed time measures the COMPILER, not the evaluator, and one such
+    sample collapses the rate EWMA (and with it Ucapacity) for several
+    batches. Both drain executors consult ONE rule — "the first sight
+    of a shape signature is warmup, skip its observation" — so
+    ``drain_mode="host"`` and ``"fused"`` feed the LoadMonitor with
+    identical exclusions and their Ucapacity estimates stay comparable.
+    """
+
+    def __init__(self) -> None:
+        self._seen: set = set()
+
+    def warm(self, signature: Hashable) -> bool:
+        """True when ``signature`` has been seen before (observe it);
+        False on first sight (jit warmup / per-shape recompile: skip)."""
+        if signature in self._seen:
+            return True
+        self._seen.add(signature)
+        return False
+
+    @staticmethod
+    def signature(n_items: int, features) -> Tuple:
+        """Shape signature of one evaluator call: item count plus every
+        feature leaf's trailing shape + dtype (what jit specializes
+        on)."""
+        leaves = tuple(sorted(
+            (k, tuple(v.shape[1:]), str(v.dtype))
+            for k, v in features.items())) if hasattr(
+                features, "items") else ()
+        return (int(n_items),) + leaves
 
 
 @dataclass
@@ -25,9 +60,13 @@ class LoadMonitor:
     ewma: float = 0.3
     _rate: Optional[float] = None        # items/s, EWMA
     n_observations: int = 0
-    # One pathological sample (tiny elapsed_s under clock jitter) must not
-    # spike the EWMA: per-observation rates are clamped to this multiple
-    # of the current estimate before blending.
+    # One pathological sample must not whipsaw the EWMA: per-observation
+    # rates are clamped SYMMETRICALLY to within this factor of the
+    # current estimate before blending — a tiny elapsed_s under clock
+    # jitter cannot spike it, and a window contaminated by caller idle
+    # time (a pipelined batch finalized long after it completed) cannot
+    # crater it. Real sustained shifts still converge: every sample
+    # moves the estimate up to clamp_mult-fold in its direction.
     rate_clamp_mult: float = 8.0
 
     @property
@@ -47,7 +86,8 @@ class LoadMonitor:
             # seed is a placeholder, not a measurement to clamp against).
             self._rate = r
         else:
-            r = min(r, self.rate_clamp_mult * self._rate)
+            r = min(max(r, self._rate / self.rate_clamp_mult),
+                    self.rate_clamp_mult * self._rate)
             self._rate = self.ewma * r + (1 - self.ewma) * self._rate
         self.n_observations += 1
 

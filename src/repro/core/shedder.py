@@ -40,7 +40,7 @@ from repro.configs.base import TrustIRConfig
 from repro.core import average_trust as AT
 from repro.core import trust_cache as TC
 from repro.core.deadline import effective_deadline, effective_deadline_jnp
-from repro.core.load_monitor import LoadMonitor
+from repro.core.load_monitor import LoadMonitor, WarmupGate
 from repro.core.regimes import Regime, classify, classify_jnp
 
 # Tier codes (answer ladder)
@@ -236,6 +236,10 @@ class LoadShedder:
     are padded to ``cfg.chunk_size`` so the evaluator jit-compiles once.
     """
 
+    # The host chunk loop is synchronous: the DrainExecutor runs it
+    # eagerly (dispatch + finalize per submit) instead of windowing.
+    supports_async = False
+
     def __init__(self, cfg: TrustIRConfig,
                  evaluate_chunk: Callable,
                  monitor: Optional[LoadMonitor] = None,
@@ -260,6 +264,10 @@ class LoadShedder:
         # deltas for cross-replica gossip.
         self.on_shed: Optional[Callable[[np.ndarray, "ShedResult"],
                                         None]] = None
+        # Shared jit-warmup exclusion (host and fused paths apply the
+        # SAME rule, so their Ucapacity estimates are comparable —
+        # see load_monitor.WarmupGate).
+        self._warmup = WarmupGate()
 
     def _vh_weight(self) -> float:
         return (self.adaptive.weight if self.adaptive is not None
@@ -285,11 +293,16 @@ class LoadShedder:
             padded = np.concatenate([chunk_idx,
                                      np.zeros((pad,), chunk_idx.dtype)])
             sub = jax.tree.map(lambda a: a[padded], features)
-            t0 = self._now()
+            warm = self._warmup.warm(WarmupGate.signature(cs, sub))
+            t0 = time.monotonic()
             scores = np.asarray(self.evaluate_chunk(sub))
             if self.sim_clock:
                 self.sim_clock.charge_eval(len(chunk_idx))
-            else:
+            elif warm:
+                # First sight of a chunk shape is jit warmup: excluded
+                # from the throughput EWMA under the same rule the
+                # fused path applies, so host-vs-fused Ucapacity
+                # estimates stay comparable.
                 self.monitor.observe(len(chunk_idx),
                                      time.monotonic() - t0)
             out[s:s + len(chunk_idx)] = scores[:len(chunk_idx)]

@@ -56,14 +56,14 @@ def dot_interaction(feats, *, block_b=128, interpret=None):
 
 @partial(jax.jit, static_argnames=("u_capacity", "u_threshold",
                                    "budget_dq", "budget_is_total",
-                                   "block_n", "interpret"))
+                                   "block_rows", "interpret"))
 def shed_partition(keys, valid, cache_keys, cache_values, *,
                    u_capacity, u_threshold, budget_dq,
-                   budget_is_total=False, block_n=1024,
+                   budget_is_total=False, block_rows=8,
                    interpret=None):
     if interpret is None:
         interpret = not _on_tpu()
     return _shed_partition(keys, valid, cache_keys, cache_values,
                            u_capacity, u_threshold, budget_dq,
                            budget_is_total=budget_is_total,
-                           block_n=block_n, interpret=interpret)
+                           block_rows=block_rows, interpret=interpret)

@@ -5,19 +5,33 @@ The paper's hot scheduling op (§5): for a stream of N candidate URLs,
 position vs Ucapacity, (3) grant drop-queue evaluation slots up to the
 deadline budget, (4) everything else falls to the average-trust prior.
 
-Kernel structure: grid over candidate blocks (arrival order). The cache
-(keys/values, set-associative) is VMEM-resident across all grid steps —
-at the production config (65536 x 4 x 8 B = 2 MB) it fits comfortably.
+Kernel structure: the (N,) arrival stream is laid out row-major as
+(rows, 128) and the grid walks **(block_rows, 128) lane-shaped blocks**
+— the native float32/int32 TPU tile is (8, 128), so the default block
+is exactly VPU-shaped instead of the 1-D blocks the kernel ran before
+(fine in interpret mode, but a production lowering wants registers
+full). Arrival order is row-major within a block; the running scans are
+two-pass 2-D cumsums (cumsum along lanes, then a sublane offset of row
+totals) — vector ops only, no 1-D reshapes. The cache (keys/values,
+set-associative) is VMEM-resident across all grid steps; at the
+production config (65536 x 4 ways x 8 B = 2 MiB) it fits the ~16 MiB
+VMEM budget comfortably, and :func:`shed_partition_vmem_bytes` computes
+the measured budget handed to the compiler as ``vmem_limit_bytes``.
 Running counters (valid-so-far, drop-queue-evals-so-far, normal-queue
 evals, EVAL-tier items) live in SMEM scratch and carry across the
 sequential grid, making the tier assignment an exact scan without host
 round-trips.
 
-Outputs per item: tier code, cached value, and — new for the fused
-serving drain — a **compacted eval rank**: the arrival-ordered position
-of every EVAL-tier item among all EVAL-tier items (-1 otherwise),
-carried by an SMEM write-cursor. Downstream the rank converts to a
-static-size gather index list with ONE O(N) scatter
+Ragged tails: the host wrapper pads N up to a whole number of blocks
+and marks the tail invalid — padding rows never touch the counters and
+come back ``TIER_INVALID``, so any N (chunk-aligned or not) runs
+without a shape constraint.
+
+Outputs per item: tier code, cached value, and — for the fused serving
+drain — a **compacted eval rank**: the arrival-ordered position of
+every EVAL-tier item among all EVAL-tier items (-1 otherwise), carried
+by an SMEM write-cursor. Downstream the rank converts to a static-size
+gather index list with ONE O(N) scatter
 (``core.shedder.eval_indices_from_rank``) instead of the O(N log N)
 argsort in ``gather_eval_indices``.
 
@@ -49,6 +63,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.shedder import (TIER_CACHED, TIER_EVAL, TIER_INVALID,
                                 TIER_PRIOR)
 
+LANES = 128          # last-dim tile width (every dtype)
+SUBLANES = 8         # float32/int32 sublane tile height
+
 
 def _hash32(x):
     x = x.astype(jnp.uint32)
@@ -57,10 +74,30 @@ def _hash32(x):
     return x ^ (x >> 16)
 
 
+def _cumsum_rowmajor(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive cumulative sum in row-major (arrival) order over a
+    (rows, LANES) block, built from 2-D vector ops only: a lane-axis
+    cumsum plus the exclusive running total of preceding rows."""
+    lane = jnp.cumsum(x, axis=1)
+    row_tot = lane[:, -1:]                           # (rows, 1)
+    row_off = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive
+    return lane + row_off
+
+
+def shed_partition_vmem_bytes(n_slots: int, n_ways: int,
+                              block_rows: int = SUBLANES) -> int:
+    """Measured VMEM budget of one grid step: the resident Trust-DB
+    (keys + values) plus the double-buffered in/out blocks (keys,
+    valid; tier, cval, rank — all 4-byte lanes) and scratch slack."""
+    cache = 2 * n_slots * n_ways * 4
+    blocks = 5 * block_rows * LANES * 4
+    return cache + 2 * blocks + (128 << 10)          # 128 KiB slack
+
+
 def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
                  keys_ref, valid_ref, ck_ref, cv_ref,
                  tier_ref, cval_ref, rank_ref,
-                 cnt_scr, *, block_n: int, n_slots: int, n_ways: int,
+                 cnt_scr, *, block_rows: int, n_slots: int, n_ways: int,
                  budget_is_total: bool):
     i = pl.program_id(0)
 
@@ -74,25 +111,25 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
     ucap = params_ref[0]
     budget = params_ref[2]
 
-    keys = keys_ref[...]                                  # (bn,) uint32
+    keys = keys_ref[...]                           # (block_rows, 128)
     valid = valid_ref[...] != 0
 
     # --- Trust DB probe (set-associative, VMEM-resident) ---
     slot = (_hash32(keys) % jnp.uint32(n_slots)).astype(jnp.int32)
-    hit = jnp.zeros((block_n,), jnp.bool_)
-    val = jnp.zeros((block_n,), jnp.float32)
-    for w in range(n_ways):                               # ways unrolled
-        ck = ck_ref[slot, w]                              # VMEM gather
+    hit = jnp.zeros((block_rows, LANES), jnp.bool_)
+    val = jnp.zeros((block_rows, LANES), jnp.float32)
+    for w in range(n_ways):                        # ways unrolled
+        ck = ck_ref[slot, w]                       # VMEM gather
         cv = cv_ref[slot, w]
         m = (ck == keys) & (keys != jnp.uint32(0))
         val = jnp.where(m & ~hit, cv, val)
         hit = hit | m
     hit = hit & valid
 
-    # --- arrival position scan (exclusive running counts) ---
+    # --- arrival position scan (exclusive running counts, row-major) ---
     base_valid = cnt_scr[0]
     v32 = valid.astype(jnp.int32)
-    pos = base_valid + jnp.cumsum(v32) - v32              # 0-based position
+    pos = base_valid + _cumsum_rowmajor(v32) - v32   # 0-based position
     in_normal = valid & (pos < ucap)
 
     tier = jnp.where(hit, TIER_CACHED, TIER_PRIOR)
@@ -103,18 +140,18 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
     # candidate the inclusive count is already the batch total.
     ne32 = (in_normal & ~hit).astype(jnp.int32)
     base_ne = cnt_scr[2]
-    ne_incl = base_ne + jnp.cumsum(ne32)
+    ne_incl = base_ne + _cumsum_rowmajor(ne32)
 
     dq_cand = valid & ~in_normal & ~hit
     d32 = dq_cand.astype(jnp.int32)
     base_dq = cnt_scr[1]
-    dq_rank = base_dq + jnp.cumsum(d32) - d32
+    dq_rank = base_dq + _cumsum_rowmajor(d32) - d32
     if budget_is_total:
         # shed_plan: budget_dq = max(budget_total - n_normal_evals, 0);
         # dq_rank >= 0 makes the max() implicit.
         dq_budget = budget - ne_incl
     else:
-        dq_budget = jnp.broadcast_to(budget, (block_n,))
+        dq_budget = jnp.broadcast_to(budget, (block_rows, LANES))
     tier = jnp.where(dq_cand & (dq_rank < dq_budget), TIER_EVAL, tier)
     tier = jnp.where(valid, tier, TIER_INVALID)
 
@@ -122,7 +159,7 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
     is_eval = tier == TIER_EVAL
     e32 = is_eval.astype(jnp.int32)
     base_e = cnt_scr[3]
-    erank = base_e + jnp.cumsum(e32) - e32
+    erank = base_e + _cumsum_rowmajor(e32) - e32
 
     cnt_scr[0] = base_valid + jnp.sum(v32)
     cnt_scr[1] = base_dq + jnp.sum(d32)
@@ -138,7 +175,7 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
                    cache_keys: jnp.ndarray, cache_values: jnp.ndarray,
                    u_capacity, u_threshold, budget_dq, *,
                    budget_is_total: bool = False,
-                   block_n: int = 1024, interpret: bool = False
+                   block_rows: int = SUBLANES, interpret: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """keys: (N,) uint32; valid: (N,) bool; cache_*: (slots, ways).
 
@@ -150,40 +187,67 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
     with ``budget_is_total=True``, the TOTAL eval budget
     ``floor(rate * deadline_eff)`` from which the kernel derives the
     drop-queue share itself.
+
+    ``block_rows`` sets the sublane height of each (block_rows, 128)
+    grid block (multiples of 8 — the float32 tile). Any N is accepted:
+    the tail is padded to a whole block and masked invalid.
     """
     n = keys.shape[0]
-    block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
+    if block_rows % SUBLANES:
+        raise ValueError(
+            f"block_rows must be a multiple of {SUBLANES} "
+            f"(the float32 sublane tile), got {block_rows}")
+    block_items = block_rows * LANES
+    n_pad = max(-n % block_items, block_items if n == 0 else 0)
+    keys_p = jnp.concatenate(
+        [keys.astype(jnp.uint32),
+         jnp.zeros((n_pad,), jnp.uint32)]) if n_pad else \
+        keys.astype(jnp.uint32)
+    valid_p = jnp.concatenate(
+        [valid.astype(jnp.int32),
+         jnp.zeros((n_pad,), jnp.int32)]) if n_pad else \
+        valid.astype(jnp.int32)
+    rows = (n + n_pad) // LANES
+    keys2 = keys_p.reshape(rows, LANES)
+    valid2 = valid_p.reshape(rows, LANES)
     n_slots, n_ways = cache_keys.shape
     params = jnp.asarray([u_capacity, u_threshold, budget_dq], jnp.int32)
 
-    kernel = functools.partial(_shed_kernel, block_n=block_n,
+    kernel = functools.partial(_shed_kernel, block_rows=block_rows,
                                n_slots=n_slots, n_ways=n_ways,
                                budget_is_total=budget_is_total)
+    kwargs = {}
+    if not interpret:
+        # Hand the compiler the measured residency claim: cache +
+        # double-buffered blocks must fit, nothing more is needed.
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            vmem_limit_bytes=shed_partition_vmem_bytes(
+                n_slots, n_ways, block_rows))
     tier, cval, rank = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n // block_n,),
+            grid=(rows // block_rows,),
             in_specs=[
-                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
-                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
                 pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
                 pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
             ],
             out_specs=[
-                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
-                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
-                pl.BlockSpec((block_n,), lambda i, *_: (i,)),
+                pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
             ],
             scratch_shapes=[pltpu.SMEM((4,), jnp.int32)],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
         ],
         interpret=interpret,
-    )(params, keys.astype(jnp.uint32), valid.astype(jnp.int32),
-      cache_keys, cache_values)
-    return tier, cval, rank
+        **kwargs,
+    )(params, keys2, valid2, cache_keys, cache_values)
+    return (tier.reshape(-1)[:n], cval.reshape(-1)[:n],
+            rank.reshape(-1)[:n])

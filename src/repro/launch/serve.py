@@ -35,6 +35,12 @@ def main() -> int:
                    help="micro-batch executor: host chunk loop "
                         "(wall-clock deadline) or the fused "
                         "one-device-step-per-batch drain")
+    p.add_argument("--pipeline-depth", type=int, default=2,
+                   help="DrainExecutor in-flight window (fused drain): "
+                        "1 syncs every drain call (the PR-3 "
+                        "behaviour); >= 2 keeps that many batches in "
+                        "flight across drain calls, overlapping device "
+                        "compute with admission + batch formation")
     p.add_argument("--replicas", type=int, default=1,
                    help="serving fleet size (1 = single host)")
     p.add_argument("--min-replicas", type=int, default=0,
@@ -86,7 +92,8 @@ def main() -> int:
                         chunk_size=64, n_replicas=n_rep,
                         min_replicas=args.min_replicas,
                         max_replicas=args.max_replicas,
-                        gossip=args.gossip)
+                        gossip=args.gossip,
+                        pipeline_depth=max(args.pipeline_depth, 1))
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
           f"(overload {odl * 1e3:.0f}ms)"
@@ -96,7 +103,9 @@ def main() -> int:
           + (f" [elastic {max(args.min_replicas, 1)}"
              f"..{args.max_replicas}]" if elastic else "")
           + (" [gossip]" if args.gossip else "")
-          + f" [drain={args.drain_mode}]")
+          + f" [drain={args.drain_mode}"
+          + (f" depth={cfg.pipeline_depth}]"
+             if args.drain_mode == "fused" else "]"))
 
     def evaluate_batch(chunk):            # jax-traceable (fused drain)
         return ev(chunk)

@@ -15,24 +15,50 @@ Request lifecycle (who owns each hop):
     batch    scheduling.batcher             coalesce queued candidate
        |                                    sets into one padded,
        |                                    budget-shaped micro-batch
+    execute  scheduling.executor            ONE DrainExecutor sequences
+       |     (DrainExecutor)                every path: a depth-k
+       |                                    in-flight window
+       |                                    (``TrustIRConfig.
+       |                                    pipeline_depth``; depth 1 =
+       |                                    sync-per-drain, depth >= 2
+       |                                    keeps the window open
+       |                                    ACROSS drain calls so batch
+       |                                    N+2 forms + transfers while
+       |                                    N computes and N+1 waits),
+       |                                    per-batch completion
+       |                                    callbacks (results, Trust-
+       |                                    DB/prior fold-back, Load-
+       |                                    Monitor observations land
+       |                                    as EACH batch finishes, and
+       |                                    ``poll`` folds ready
+       |                                    batches without blocking),
+       |                                    and exception-mid-window
+       |                                    rescue (a failed batch is
+       |                                    prior-answered; the rest of
+       |                                    the window still lands)
     shed     core.shedder                   ONE three-regime shedding
        |     (drain_mode="host")            decision per micro-batch
        |                                    (EVAL / CACHED / PRIOR tiers)
        |                                    via the host chunk loop with
-       |                                    a wall-clock deadline, OR
+       |                                    a wall-clock deadline
+       |                                    (sequential: the executor
+       |                                    runs it eagerly), OR
        |     core.fused_shedder             shed[fused]
        |     (drain_mode="fused")           (``TrustIRConfig.drain_mode``)
        |                                    ONE jitted device step per
        |                                    batch: Pallas shed_partition
-       |                                    probe+tier with compacted
+       |                                    probe+tier ((8,128)-lane
+       |                                    blocks, ragged tails padded
+       |                                    in-kernel) with compacted
        |                                    eval indices, static-shape
        |                                    gather, batched evaluator,
        |                                    scatter, cache/prior
-       |                                    fold-back — async-dispatched
-       |                                    so batch N+1 forms while
-       |                                    batch N computes
-    respond  scheduling.scheduler.drain     split per-request Responses;
-                                            hedged re-dispatch via
+       |                                    fold-back — staged (host->
+       |                                    device transfer) then
+       |                                    dispatched, both async
+    respond  scheduling.scheduler           split per-request Responses
+                                            per completed batch; hedged
+                                            re-dispatch via
                                             distribution.fault_tolerance
 
 With a multi-replica fleet (``repro.cluster``) the map gains a layer in
@@ -44,13 +70,27 @@ gossip -> join/leave``:
     admit    (this subsystem, per replica)  the ladder above, against
        |                                    THAT replica's regime
     steal    cluster.coordinator            hot bank -> idle sibling,
-       |                                    back of the lowest class
-       |                                    (EDF heads never reorder)
+       |                                    non-head entry of the
+       |                                    lowest class picked by
+       |                                    estimated eval cost (items
+       |                                    x Trust-DB miss probability
+       |                                    — cache-cold work migrates,
+       |                                    cache-hot work stays warm;
+       |                                    EDF heads never reorder)
     drain    cluster.coordinator            round-robin micro-batches
-       |                                    across replicas; decode
-       |                                    requests only occupy batch
-       |                                    budget when a KVCachePool
-       |                                    slot is claimable
+       |                                    across replicas, one
+       |                                    DrainExecutor window per
+       |                                    replica spanning rounds
+       |                                    (device steps overlap the
+       |                                    next round's scans); each
+       |                                    round POLLS completed
+       |                                    batches first so steal/
+       |                                    hedge/autoscale read fresh
+       |                                    stats, not one batch late;
+       |                                    decode requests only occupy
+       |                                    batch budget when a
+       |                                    KVCachePool slot is
+       |                                    claimable
     hedge    distribution.fault_tolerance   stuck requests race a twin
        |                                    on a REAL backup replica;
        |                                    first completion wins, the
@@ -62,11 +102,16 @@ gossip -> join/leave``:
        |                                    evaluated once fleet-wide)
     join/    cluster.coordinator            runtime membership: fence +
     leave                                   drain-and-handoff (EDF
-                                            order) on leave, admission-
-                                            journal replay on crash,
-                                            autoscaler-voted joins and
-                                            leaves between min/max
-                                            replica bounds
+                                            order) on leave — queued
+                                            work AND the top-K freshest
+                                            Trust-DB entries ship to
+                                            the ring's new owners (warm
+                                            handoff via the gossip
+                                            apply_trust_deltas path) —
+                                            admission-journal replay on
+                                            crash, autoscaler-voted
+                                            joins and leaves between
+                                            min/max replica bounds
 
 No *admitted* request is ever dropped: every item leaves with a trust
 value (paper §5 invariant, preserved across the batching layer), every
@@ -76,6 +121,7 @@ when its hedged twin also ran.
 """
 from repro.scheduling.batcher import (MicroBatch, MicroBatcher,
                                       to_fused_inputs)
+from repro.scheduling.executor import DrainExecutor
 from repro.scheduling.priorities import (AdmissionPolicy, Priority,
                                          REASON_QUEUE_FULL,
                                          REASON_RATE_LIMITED,
@@ -94,6 +140,7 @@ __all__ = [
     "REASON_SHED_LOW_VERY_HEAVY", "REASON_SHED_NORMAL_VERY_HEAVY",
     "EDFQueue", "PriorityQueueBank", "QueuedRequest",
     "TenantRateLimiter", "TokenBucket",
+    "DrainExecutor",
     "MicroBatch", "MicroBatcher", "to_fused_inputs",
     "Request", "Response", "Scheduler", "SchedulerConfig",
     "SchedulerStats",

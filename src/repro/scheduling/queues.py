@@ -15,7 +15,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.scheduling.priorities import Priority
 
@@ -95,18 +95,39 @@ class EDFQueue:
     def peek(self) -> Optional[QueuedRequest]:
         return self._heap[0][2] if self._heap else None
 
-    def pop_back(self) -> Optional[QueuedRequest]:
-        """Remove the entry with the LATEST deadline (the EDF back).
+    def pop_back(self, cost_fn: Optional[Callable] = None,
+                 max_candidates: int = 8) -> Optional[QueuedRequest]:
+        """Remove a non-head entry for a thief — the work-stealing
+        primitive. Never touches the head, so the victim's EDF drain
+        order is unchanged for every request that remains.
 
-        The work-stealing primitive: taking from the back never touches
-        the head, so the victim's EDF drain order is unchanged for every
-        request that remains (with >= 2 entries the max-key entry is
-        never the min-key head).
+        Without ``cost_fn``: the entry with the LATEST deadline leaves
+        (with >= 2 entries the max-key entry is never the min-key
+        head). With ``cost_fn(qreq) -> float`` (cost-aware stealing):
+        the HIGHEST-cost entry among the ``max_candidates`` LATEST-
+        deadline non-head entries leaves — stealing a cache-cold
+        request moves real work to the idle sibling, where stealing a
+        cache-hot one would displace cold work only to re-evaluate warm
+        items on a cold cache. Scoring is bounded to the back region
+        because each cost probe may be a device lookup; deadline breaks
+        ties (latest first), so ``cost_fn=None`` and a constant cost_fn
+        pick identically.
         """
         if not self._heap:
             return None
-        i = max(range(len(self._heap)),
+        if cost_fn is None:
+            i = max(range(len(self._heap)),
+                    key=lambda j: self._heap[j][:2])
+        else:
+            head_j = min(range(len(self._heap)),
+                         key=lambda j: self._heap[j][:2]) \
+                if len(self._heap) > 1 else None
+            back = heapq.nlargest(
+                max(max_candidates, 1),
+                (j for j in range(len(self._heap)) if j != head_j),
                 key=lambda j: self._heap[j][:2])
+            i = max(back, key=lambda j: (cost_fn(self._heap[j][2]),) +
+                    self._heap[j][:2])
         _, _, qreq = self._heap[i]
         last = self._heap.pop()
         if i < len(self._heap):
@@ -158,14 +179,21 @@ class PriorityQueueBank:
     def fill_frac(self, priority: Priority) -> float:
         return self.queues[priority].fill_frac()
 
-    def steal_back(self, min_leave: int = 1) -> Optional[QueuedRequest]:
+    def steal_back(self, min_leave: int = 1,
+                   cost_fn: Optional[Callable] = None
+                   ) -> Optional[QueuedRequest]:
         """Pop from the back of the lowest-importance non-empty class.
 
-        Victim-side work stealing: least-important, latest-deadline work
-        leaves first, and a class is only robbed while more than
-        ``min_leave`` entries remain — with the default of 1 the head of
-        every class stays in place, so the victim's EDF drain order is
-        never reordered by a steal.
+        Victim-side work stealing: least-important work leaves first,
+        and a class is only robbed while more than ``min_leave``
+        entries remain — with the default of 1 the head of every class
+        stays in place, so the victim's EDF drain order is never
+        reordered by a steal. Within the robbed class, ``cost_fn``
+        (estimated evaluation cost, e.g. items x Trust-DB miss
+        probability on the victim) selects WHICH non-head entry leaves
+        — cache-cold work migrates, cache-hot work stays where its
+        cache is warm; without it the latest-deadline back entry leaves
+        (the original policy, and the tie-break either way).
 
         The CRITICAL queue is never robbed: it is next to drain here
         anyway, and it may hold escalated hedge twins (entries whose
@@ -177,5 +205,5 @@ class PriorityQueueBank:
                 continue
             q = self.queues[p]
             if len(q) > min_leave:
-                return q.pop_back()
+                return q.pop_back(cost_fn=cost_fn)
         return None

@@ -13,11 +13,14 @@ Ties the subsystem together in front of the Load Shedder:
      static-capacity backpressure (``queues``).
   3. **Drain** (``drain``): the batcher coalesces queued requests into
      padded, budget-shaped micro-batches (``batcher``) and each batch
-     runs through ``LoadShedder.process`` as ONE shedding decision under
-     the effective deadline; per-request responses are split back out.
-     Requests that have waited past the hedge latency are re-dispatched
-     at CRITICAL priority via ``distribution.fault_tolerance
-     .HedgedDispatch`` (first completion wins, twin is deduplicated).
+     goes through the :class:`~repro.scheduling.executor.DrainExecutor`
+     — a depth-k in-flight window over the shedder (host chunk loop or
+     fused device step) that finalizes each batch as it lands, splits
+     per-request responses, and rescues a batch whose executor raised
+     by answering it from the average-trust prior. Requests that have
+     waited past the hedge latency are re-dispatched at CRITICAL
+     priority via ``distribution.fault_tolerance.HedgedDispatch``
+     (first completion wins, twin is deduplicated).
 
 The paper's no-drop invariant survives end to end: every *admitted*
 request leaves ``drain`` with a trust value per item (property-tested
@@ -36,6 +39,7 @@ from repro.core.shedder import (LoadShedder, ShedResult, TIER_CACHED,
                                 TIER_EVAL, TIER_PRIOR)
 from repro.distribution.fault_tolerance import HedgedDispatch
 from repro.scheduling.batcher import MicroBatch, MicroBatcher
+from repro.scheduling.executor import DrainExecutor
 from repro.scheduling.priorities import (AdmissionPolicy, Priority,
                                          REASON_QUEUE_FULL,
                                          REASON_RATE_LIMITED)
@@ -98,6 +102,7 @@ class SchedulerStats:
     n_batches: int = 0
     n_batched_items: int = 0
     n_hedges: int = 0
+    n_executor_errors: int = 0      # batches rescued from the prior
 
     def as_dict(self) -> Dict:
         return {"n_submitted": self.n_submitted,
@@ -107,6 +112,7 @@ class SchedulerStats:
                 "n_batches": self.n_batches,
                 "n_batched_items": self.n_batched_items,
                 "n_hedges": self.n_hedges,
+                "n_executor_errors": self.n_executor_errors,
                 "mean_batch_fill": (self.n_batched_items
                                     / max(self.n_batches, 1))}
 
@@ -124,7 +130,6 @@ class Scheduler:
                  now: Optional[Callable[[], float]] = None,
                  kv_pool=None):
         self.cfg = cfg
-        self.shedder = shedder
         # KVCachePool (or bare SlotAllocator) consulted by drain so
         # decode requests without a claimable slot stay queued.
         self.kv_pool = kv_pool
@@ -145,6 +150,26 @@ class Scheduler:
                       if self.sched_cfg.hedge_after_s > 0 else None)
         self.stats = SchedulerStats()
         self._answered: set = set()   # rids whose hedged twin is queued
+        # ONE execution pipeline for every drain path (host chunk loop,
+        # fused device step, cluster round-robin): the executor owns
+        # the depth-k in-flight window, per-batch completion, and
+        # exception-mid-window rescue.
+        self.executor = DrainExecutor(
+            shedder, self._split_responses,
+            depth=getattr(cfg, "pipeline_depth", 1),
+            rescue=self._rescue_responses)
+
+    # The executor runs whatever shedder the scheduler carries; keeping
+    # the reference in ONE place lets baseline drivers swap shedders
+    # (``engine.shedder = ProcessAll(...)``) without the pipeline and
+    # the admission layer diverging.
+    @property
+    def shedder(self) -> LoadShedder:
+        return self.executor.shedder
+
+    @shedder.setter
+    def shedder(self, s: LoadShedder) -> None:
+        self.executor.shedder = s
 
     # -- admission ----------------------------------------------------------
     @property
@@ -193,11 +218,13 @@ class Scheduler:
             self.stats.rejected_by_reason.get(reason, 0) + 1
         return self._reject(request, priority, regime, reason)
 
-    def _reject(self, request: Request, priority: Priority,
-                regime: Regime, reason: str) -> Response:
-        """Explicit rejection: answered from the average-trust prior (the
-        shedder's own fallback tier), so even shed traffic leaves with a
-        trust value per item."""
+    def _prior_answer(self, request: Request, regime: Regime
+                      ) -> tuple:
+        """Answer a whole request from the average-trust prior (the
+        shedder's own fallback tier): the shared construction behind
+        explicit rejections AND executor-error rescues, so the two
+        degraded paths can never diverge. Returns (trust, tier, shed,
+        latency, met_slo) as of now."""
         n = len(request.item_keys)
         means = np.asarray(self.shedder.prior["mean"])
         trust = means[np.asarray(request.buckets) % len(means)
@@ -207,9 +234,17 @@ class Scheduler:
                           response_time_s=0.0, deadline_eff_s=0.0,
                           n_evaluated=0, n_cached=0, n_prior=n, uload=n)
         latency = max(self._now() - request.arrival_s, 0.0)
+        return trust, tier, shed, latency, \
+            latency <= request.slo_s + 1e-9
+
+    def _reject(self, request: Request, priority: Priority,
+                regime: Regime, reason: str) -> Response:
+        """Explicit rejection: answered from the average-trust prior,
+        so even shed traffic leaves with a trust value per item."""
+        trust, tier, shed, latency, met = self._prior_answer(request,
+                                                             regime)
         return Response(request_id=request.request_id, trust=trust,
-                        tier=tier, latency_s=latency,
-                        met_slo=latency <= request.slo_s + 1e-9,
+                        tier=tier, latency_s=latency, met_slo=met,
                         shed=shed, priority=priority, admitted=False,
                         reason=reason)
 
@@ -243,29 +278,32 @@ class Scheduler:
         alloc = getattr(self.kv_pool, "alloc", self.kv_pool)
         return len(alloc.free)
 
-    def drain(self, max_batches: Optional[int] = None) -> List[Response]:
-        """Form and execute micro-batches until the queues are empty (or
-        ``max_batches`` is reached, or the head is a decode request with
-        no claimable KV slot — which stays queued).
+    def drain(self, max_batches: Optional[int] = None,
+              flush: Optional[bool] = None) -> List[Response]:
+        """Form micro-batches and feed them through the
+        :class:`~repro.scheduling.executor.DrainExecutor` until the
+        queues are empty (or ``max_batches`` is reached, or the head is
+        a decode request with no claimable KV slot — which stays
+        queued). Batches are dispatched with full padded arrays +
+        ``n_valid`` so shapes stay static across drains and device ops
+        reuse cached executables instead of recompiling per fill level.
 
-        With an async-capable shedder (``FusedLoadShedder``,
-        ``drain_mode="fused"``) the loop pipelines one batch deep: batch
-        N's fused device step is dispatched, then batch N+1 is *formed*
-        (host work — pops, packing, padding) while N computes, and only
-        then is N materialized. JAX async dispatch overlaps the two
-        instead of blocking on ``np.asarray`` mid-loop. On a simulated
-        clock the loop stays sequential: the async step resolves eagerly
-        there, and finalizing batch N after dispatching N+1 would stamp
-        N's responses with a clock already charged for N+1."""
+        ``flush`` controls what happens to the executor's in-flight
+        window on return. Default (``None``): flush — every response
+        for the batches formed here is returned, the pre-executor
+        contract. ``flush=False`` (honored only at ``pipeline_depth >=
+        2``; depth 1 keeps the historical sync-on-return behaviour
+        bit-for-bit) leaves up to depth batches in flight so a serving
+        loop draining one batch per iteration overlaps device compute
+        with the next iteration's admission and batch formation —
+        their responses surface from a later ``drain``/``poll``/
+        ``flush`` call."""
         out: List[Response] = []
         n_done = 0
         # KV budget threads across the whole drain: slots are claimed by
         # the decode executor after responses land, so batches formed in
         # one drain must share the snapshot taken here.
         kv_budget = self._kv_free_slots()
-        pipelined = getattr(self.shedder, "supports_async", False) \
-            and getattr(self.shedder, "sim_clock", None) is None
-        pending: Optional[tuple] = None      # (batch, PendingShed)
         while max_batches is None or n_done < max_batches:
             if self.hedge is not None:
                 self._hedge_scan()
@@ -276,31 +314,50 @@ class Scheduler:
                 kv_budget -= sum(
                     1 for q, _, _ in batch.slices
                     if MicroBatcher._needs_kv_slot(q))
-            if pipelined:
-                handle = self.shedder.process_async(
-                    batch.item_keys, batch.buckets, batch.features,
-                    n_valid=batch.n_valid)
-                if pending is not None:
-                    out.extend(self._finalize(*pending))
-                pending = (batch, handle)
-            else:
-                out.extend(self._execute(batch))
+            out.extend(self.executor.submit(batch))
             n_done += 1
-        if pending is not None:
-            out.extend(self._finalize(*pending))
+        if flush is None or flush or self.executor.depth <= 1:
+            out.extend(self.executor.flush())
         return out
 
-    def _execute(self, batch: MicroBatch) -> List[Response]:
-        # Full padded arrays + n_valid: shapes stay static across drains
-        # so device ops reuse cached executables instead of recompiling
-        # per batch fill level.
-        shed = self.shedder.process(batch.item_keys, batch.buckets,
-                                    batch.features,
-                                    n_valid=batch.n_valid)
-        return self._split_responses(batch, shed)
+    def poll(self) -> List[Response]:
+        """Finalize already-completed in-flight batches without
+        blocking (fresh stats for steal/hedge/autoscale scans)."""
+        return self.executor.poll()
 
-    def _finalize(self, batch: MicroBatch, handle) -> List[Response]:
-        return self._split_responses(batch, handle.result())
+    def flush(self) -> List[Response]:
+        """Block until every in-flight batch has landed."""
+        return self.executor.flush()
+
+    def _rescue_responses(self, batch: MicroBatch,
+                          exc: Exception) -> List[Response]:
+        """Exception-mid-window recovery: a batch whose dispatch or
+        finalize raised is answered from the average-trust prior —
+        degraded service, never a dropped request (and never a torn
+        window: the executor still finalizes every other in-flight
+        batch). The error is counted, not re-raised: overload systems
+        shed work, they don't shed the rest of the window."""
+        self.stats.n_executor_errors += 1
+        end = self._now()
+        regime = self.offered_regime()
+        responses: List[Response] = []
+        for qreq, s, ln in batch.slices:
+            rid = qreq.request.request_id
+            if rid in self._answered:       # hedged twin already served
+                self._answered.discard(rid)
+                continue
+            trust, tier, shed, latency, met = self._prior_answer(
+                qreq.request, regime)
+            responses.append(Response(
+                request_id=rid, trust=trust, tier=tier,
+                latency_s=latency, met_slo=met,
+                shed=shed, priority=qreq.priority,
+                reason=f"executor_error:{type(exc).__name__}",
+                queue_delay_s=max(end - qreq.enqueue_t, 0.0),
+                hedged=qreq.hedged))
+            if qreq.hedged and self.hedge is not None:
+                self._answered.add(rid)
+        return responses
 
     def _split_responses(self, batch: MicroBatch,
                          shed: ShedResult) -> List[Response]:

@@ -148,9 +148,29 @@ class ServingEngine:
             self.completed.append(rejection)
         return rid
 
-    def drain(self, max_batches: Optional[int] = None) -> List[Response]:
-        """Drain queued micro-batches; returns the responses produced."""
-        out = self.scheduler.drain(max_batches)
+    def drain(self, max_batches: Optional[int] = None,
+              flush: Optional[bool] = None) -> List[Response]:
+        """Drain queued micro-batches; returns the responses produced.
+
+        ``flush=False`` (honored at ``cfg.pipeline_depth >= 2`` with an
+        async executor) leaves up to depth batches in flight on return
+        — the serving-loop pattern: device compute overlaps the next
+        iteration's enqueues and batch formation, and the responses
+        surface from a later ``drain``/``poll``/``flush``."""
+        out = self.scheduler.drain(max_batches, flush=flush)
+        self.completed.extend(out)
+        return out
+
+    def poll(self) -> List[Response]:
+        """Fold back every in-flight batch that already completed,
+        without blocking on the ones still computing."""
+        out = self.scheduler.poll()
+        self.completed.extend(out)
+        return out
+
+    def flush(self) -> List[Response]:
+        """Block until every in-flight batch has landed."""
+        out = self.scheduler.flush()
         self.completed.extend(out)
         return out
 

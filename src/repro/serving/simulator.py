@@ -217,7 +217,11 @@ def run_scheduled_workload(engine, searcher: SyntheticSearcher,
                        tenant=tenant.name)
         if engine.scheduler.queued_items >= \
                 engine.scheduler.max_batch_items:
-            engine.drain(max_batches=1)
+            # The serving-loop drain pattern: with pipeline_depth >= 2
+            # (wall-clock fused engines) the batch stays in flight and
+            # its device step overlaps the next arrivals; simulated
+            # clocks are sequential, so there flush=False is a no-op.
+            engine.drain(max_batches=1, flush=False)
     engine.drain()
     return SchedSimReport(responses=list(engine.completed[n0:]),
                           scheduler_stats=engine.scheduler_stats())

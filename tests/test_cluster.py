@@ -549,6 +549,92 @@ def test_steal_back_never_robs_critical_queue():
     assert len(bank.queues[Priority.CRITICAL]) == 2
 
 
+def test_steal_back_cost_fn_picks_costliest_non_head():
+    """Cost-aware stealing: the cost function selects WHICH non-head
+    entry leaves; the EDF head is untouchable no matter how costly."""
+    bank = PriorityQueueBank(capacity_per_class=16)
+    bank.push(_mkq(0, 4, Priority.LOW, deadline=1.0))   # head
+    bank.push(_mkq(1, 4, Priority.LOW, deadline=9.0))
+    bank.push(_mkq(2, 4, Priority.LOW, deadline=5.0))
+    cost = {0: 100.0, 1: 1.0, 2: 50.0}   # head costliest — protected
+    stolen = bank.steal_back(
+        cost_fn=lambda q: cost[q.request.request_id])
+    # rid 2 (cost 50) beats rid 1 (cost 1) despite the later deadline;
+    # rid 0 stays: it is the EDF head.
+    assert stolen.request.request_id == 2
+    assert bank.queues[Priority.LOW].peek().request.request_id == 0
+    # constant cost degenerates to the latest-deadline back entry
+    bank.push(_mkq(3, 4, Priority.LOW, deadline=7.0))
+    stolen = bank.steal_back(cost_fn=lambda q: 1.0)
+    assert stolen.request.request_id == 1              # deadline 9.0
+
+
+def test_cost_aware_steal_moves_cache_cold_work():
+    """A stolen chunk of cache-hot requests would displace cache-cold
+    work only to re-evaluate warm items on the thief's cold cache: the
+    coordinator's steal scan must pick the victim's cache-COLD entry
+    even when the hot one sits further back in EDF order."""
+    coord = _coordinator(2, steal_threshold_items=1,
+                         max_steals_per_round=1)
+    hot, idle = coord.replicas
+    hot_q = _mkq(1, 32, Priority.NORMAL, deadline=9.0)   # latest EDF
+    cold_q = _mkq(2, 32, Priority.NORMAL, deadline=5.0)
+    head_q = _mkq(0, 32, Priority.NORMAL, deadline=1.0)
+    # warm the victim's Trust-DB with the hot request's keys
+    hot.apply_trust_deltas(
+        np.asarray(hot_q.request.item_keys, np.uint32),
+        np.full(hot_q.n_items, 2.5, np.float32))
+    for q in (head_q, hot_q, cold_q):
+        assert hot.bank.push(q)
+    assert hot.steal_cost(hot_q) < hot.steal_cost(cold_q)
+    coord._steal_rebalance()
+    assert coord.stats.n_steals == 1
+    moved = [q.request.request_id
+             for q in idle.bank.queues[Priority.NORMAL].entries()]
+    # the pre-cost policy would have taken rid 1 (deadline 9.0); the
+    # cache-cold rid 2 moves instead, and the EDF head stays put
+    assert moved == [2]
+    assert hot.bank.queues[Priority.NORMAL].peek() \
+        .request.request_id == 0
+
+
+def test_warm_cache_handoff_on_graceful_leave():
+    """Graceful leave ships the leaving replica's freshest Trust-DB
+    entries to the ring's new owners (apply_trust_deltas path): the
+    departed tenants' hot URLs keep answering from cache instead of
+    re-warming through duplicate evaluations."""
+    from repro.core import trust_cache as TC
+    import jax.numpy as jnp
+
+    coord = _coordinator(3)
+    tenant = "warm-tenant"
+    victim = coord.route(tenant)
+    keys, buckets, feats = _req_arrays(7, 64)
+    coord.enqueue(keys, buckets, feats, tenant=tenant)
+    coord.drain()                       # evaluates -> cache fills
+    _, hit = TC.lookup(victim.engine.shedder.cache,
+                       jnp.asarray(keys, jnp.uint32))
+    assert int(np.asarray(hit).sum()) > 32
+    coord.remove_replica(victim.replica_id, drain=True)
+    assert coord.stats.n_warm_handoff_entries > 0
+    new_owner = coord.route(tenant)
+    _, hit2 = TC.lookup(new_owner.engine.shedder.cache,
+                        jnp.asarray(keys, jnp.uint32))
+    # the new owner answers the departed tenant's keys from cache
+    assert int(np.asarray(hit2).sum()) > 32
+
+
+def test_warm_handoff_disabled_by_config():
+    coord = _coordinator(3, warm_handoff_top_k=0)
+    tenant = "t0"
+    victim = coord.route(tenant)
+    keys, buckets, feats = _req_arrays(8, 64)
+    coord.enqueue(keys, buckets, feats, tenant=tenant)
+    coord.drain()
+    coord.remove_replica(victim.replica_id, drain=True)
+    assert coord.stats.n_warm_handoff_entries == 0
+
+
 # ---------------------------------------------------------------------------
 # simulator integration: the cluster workload driver
 # ---------------------------------------------------------------------------

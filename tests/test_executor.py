@@ -1,0 +1,306 @@
+"""Unified depth-k drain pipeline (``repro.scheduling.executor``):
+exactly-one-response ordering under seeded churn at every depth,
+exception-mid-window recovery, depth-1 ≡ pre-executor (PR-3) parity,
+simulated-clock sequential degeneration, poll()/flush() semantics, and
+the shared host/fused jit-warmup exclusion rule for the LoadMonitor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import TrustIRConfig
+from repro.core import (FusedLoadShedder, LoadShedder, SimClock,
+                        TIER_INVALID, TIER_PRIOR)
+from repro.scheduling import SchedulerConfig
+from repro.scheduling.executor import DrainExecutor
+from repro.serving.engine import ServingEngine
+
+D = 8
+W = np.linspace(-1.0, 1.0, D).astype(np.float32)
+
+
+@jax.jit
+def _ev(chunk):
+    return jax.nn.sigmoid(chunk["x"] @ jnp.asarray(W)) * 5.0
+
+
+def _ev_np(chunk):
+    return np.asarray(_ev({"x": jnp.asarray(chunk["x"])}))
+
+
+def _cfg(**kw):
+    base = dict(u_capacity=4096, u_threshold=2048, deadline_s=0.5,
+                overload_deadline_s=1.0, chunk_size=16,
+                cache_slots=1024, cache_ways=2)
+    base.update(kw)
+    return TrustIRConfig(**base)
+
+
+def _batch(n, off, seed=0):
+    r = np.random.default_rng(seed + off)
+    keys = np.arange(off, off + n, dtype=np.uint32)
+    buckets = r.integers(0, 4, n).astype(np.int32)
+    feats = {"x": r.normal(size=(n, D)).astype(np.float32)}
+    return keys, buckets, feats
+
+
+def _engine(mode, depth, sim=False, **sched_kw):
+    cfg = _cfg(pipeline_depth=depth)
+    clock = SimClock(cfg.u_capacity / cfg.deadline_s) if sim else None
+    return ServingEngine(cfg, _ev_np, sim_clock=clock,
+                         sched_cfg=SchedulerConfig(**sched_kw),
+                         drain_mode=mode, evaluate_batch=_ev)
+
+
+# ---------------------------------------------------------------------------
+# depth-k ordering + exactly-one-response under seeded churn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_depth_k_exactly_one_response_under_churn(depth):
+    """Wall-clock fused engine driven in the serving-loop pattern with
+    a seeded, irregular enqueue/drain/poll interleave: every admitted
+    request yields EXACTLY one response, no valid item is INVALID, and
+    completion preserves dispatch order (same-SLO requests drain FIFO
+    through the window no matter how deep it is)."""
+    eng = _engine("fused", depth, max_batch_items=128)
+    r = np.random.default_rng(17 * depth)
+    rids = []
+    for i in range(40):
+        n = int(r.integers(8, 64))
+        keys, buckets, feats = _batch(n, 1 + i * 10_000)
+        rids.append(eng.enqueue(keys, buckets, feats, slo_s=10.0))
+        action = r.integers(0, 4)
+        if action == 0:
+            eng.drain(max_batches=1, flush=False)
+        elif action == 1:
+            eng.poll()
+        elif action == 2 and r.integers(0, 4) == 0:
+            eng.drain(max_batches=2, flush=False)
+    eng.drain()                                   # drain + final flush
+    ex = eng.scheduler.executor
+    assert ex.in_flight == 0
+    assert ex.n_completed == ex.n_dispatched
+    by_rid = {}
+    for resp in eng.completed:
+        assert resp.request_id not in by_rid      # exactly one response
+        by_rid[resp.request_id] = resp
+    assert set(by_rid) == set(rids)
+    answered_in_order = [resp.request_id for resp in eng.completed
+                         if resp.admitted]
+    assert answered_in_order == sorted(answered_in_order)
+    for resp in by_rid.values():
+        if resp.admitted:
+            assert (resp.tier != TIER_INVALID).all()
+
+
+def test_depth1_keeps_sync_on_return_depth2_keeps_window_open():
+    """The compat contract: depth-1 ``drain`` syncs on return even with
+    ``flush=False`` (the pre-executor behaviour, bit-for-bit); at depth
+    >= 2 the window survives the call and later drains/flushes land
+    it."""
+    shallow = _engine("fused", 1, max_batch_items=64)
+    deep = _engine("fused", 2, max_batch_items=64)
+    for eng in (shallow, deep):
+        for i in range(2):
+            keys, buckets, feats = _batch(64, 1 + i * 10_000)
+            eng.enqueue(keys, buckets, feats)
+        eng.drain(max_batches=1, flush=False)
+    assert shallow.scheduler.executor.in_flight == 0
+    assert len(shallow.completed) == 1
+    assert deep.scheduler.executor.in_flight == 1
+    assert len(deep.completed) == 0
+    deep.drain()                    # drains batch 2, flushes both
+    assert deep.scheduler.executor.in_flight == 0
+    assert len(deep.completed) == 2
+
+
+def test_depth1_matches_deeper_windows_and_host_oracle():
+    """Depth-1 ≡ PR-3 parity and depth-invariance: the same stream
+    through fused depth 1 / 2 / 4 and the host chunk loop produces
+    identical tiers (Ucapacity above the backlog: every item evaluated
+    on every path) and matching trust per request."""
+    runs = {}
+    for label, mode, depth in (("host", "host", 1),
+                               ("d1", "fused", 1),
+                               ("d2", "fused", 2),
+                               ("d4", "fused", 4)):
+        eng = _engine(mode, depth, max_batch_items=256)
+        r = np.random.default_rng(5)
+        for i in range(10):
+            n = int(r.integers(8, 96))
+            keys, buckets, feats = _batch(n, 1 + i * 10_000)
+            eng.enqueue(keys, buckets, feats)
+            if i % 3 == 2:
+                eng.drain(max_batches=1, flush=False)
+        eng.drain()
+        runs[label] = {resp.request_id: resp for resp in eng.completed}
+    base = runs["d1"]
+    for label in ("host", "d2", "d4"):
+        assert runs[label].keys() == base.keys()
+        for rid, resp in base.items():
+            other = runs[label][rid]
+            assert np.array_equal(resp.tier, other.tier), (label, rid)
+            np.testing.assert_allclose(other.trust, resp.trust,
+                                       atol=1e-5)
+
+
+def test_simclock_degenerates_to_sequential_at_any_depth():
+    """Simulated timelines are sequential by construction: the
+    executor runs eagerly (nothing ever in flight) and the responses —
+    including simulated latencies — are identical at every depth."""
+    runs = {}
+    for depth in (1, 3):
+        eng = _engine("fused", depth, sim=True, max_batch_items=128)
+        for i in range(4):
+            keys, buckets, feats = _batch(96, 1 + i * 10_000)
+            eng.enqueue(keys, buckets, feats)
+            eng.drain(max_batches=1, flush=False)
+            assert eng.scheduler.executor.in_flight == 0    # eager
+        eng.drain()
+        runs[depth] = eng.completed
+    assert [r.request_id for r in runs[1]] == \
+        [r.request_id for r in runs[3]]
+    for a, b in zip(runs[1], runs[3]):
+        assert a.latency_s == b.latency_s
+        assert np.array_equal(a.tier, b.tier)
+
+
+def test_pipeline_depth_config_plumbs_through():
+    eng = _engine("fused", 3)
+    assert eng.scheduler.executor.depth == 3
+    assert eng.scheduler.executor.effective_depth == 3
+    host = _engine("host", 3)
+    assert host.scheduler.executor.effective_depth == 0     # eager
+
+
+# ---------------------------------------------------------------------------
+# exception-mid-window recovery
+# ---------------------------------------------------------------------------
+
+def test_exception_mid_window_rescues_batch_from_prior_host():
+    """A batch whose evaluator blows up mid-drain is answered from the
+    average-trust prior (admitted, TIER_PRIOR, explicit reason) while
+    every other batch completes normally — no-drop survives the
+    crash."""
+    eng = _engine("host", 1, max_batch_items=64)
+    rids, poison_rid = [], None
+    for i in range(4):
+        keys, buckets, feats = _batch(64, 1 + i * 10_000)
+        if i == 1:                        # marker the evaluator trips on
+            feats["x"][:] = 999.0
+            poison_rid = i
+        rids.append(eng.enqueue(keys, buckets, feats))
+    real_eval = eng.shedder.evaluate_chunk
+
+    def exploding(chunk):
+        if np.asarray(chunk["x"]).max() > 900.0:
+            raise RuntimeError("evaluator OOM")
+        return real_eval(chunk)
+
+    eng.shedder.evaluate_chunk = exploding
+    eng.drain()
+    by_rid = {r.request_id: r for r in eng.completed}
+    assert set(by_rid) == set(rids)
+    rescued = by_rid[rids[poison_rid]]
+    assert rescued.admitted
+    assert rescued.reason.startswith("executor_error")
+    assert (rescued.tier == TIER_PRIOR).all()
+    assert eng.scheduler.stats.n_executor_errors == 1
+    for rid in rids:
+        if rid != rids[poison_rid]:
+            assert not by_rid[rid].reason
+            assert by_rid[rid].shed.n_evaluated > 0
+
+
+def test_exception_mid_window_fused_dispatch_spares_in_flight():
+    """Depth-2 fused window: dispatch of batch k raises AFTER batch
+    k-1 was dispatched — the in-flight predecessor still lands
+    normally, only the failed batch is prior-answered."""
+    eng = _engine("fused", 2, max_batch_items=64)
+    rids = []
+    for i in range(3):
+        keys, buckets, feats = _batch(64, 1 + i * 10_000)
+        rids.append(eng.enqueue(keys, buckets, feats))
+    sh = eng.shedder
+    real_stage = sh.stage
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("transfer failed")
+        return real_stage(*a, **kw)
+
+    sh.stage = flaky
+    eng.drain()
+    ex = eng.scheduler.executor
+    assert ex.n_rescued == 1
+    assert ex.n_completed == 2
+    by_rid = {r.request_id: r for r in eng.completed}
+    assert set(by_rid) == set(rids)
+    assert by_rid[rids[1]].reason.startswith("executor_error")
+    assert (by_rid[rids[1]].tier == TIER_PRIOR).all()
+    assert by_rid[rids[0]].shed.n_evaluated > 0
+    assert by_rid[rids[2]].shed.n_evaluated > 0
+
+
+# ---------------------------------------------------------------------------
+# poll(): fold ready batches back without blocking
+# ---------------------------------------------------------------------------
+
+def test_poll_folds_only_ready_batches():
+    eng = _engine("fused", 4, max_batch_items=64)
+    for i in range(3):
+        keys, buckets, feats = _batch(64, 1 + i * 10_000)
+        eng.enqueue(keys, buckets, feats)
+    eng.drain(max_batches=3, flush=False)
+    ex = eng.scheduler.executor
+    assert ex.in_flight == 3
+    # Force batch completion, then poll must fold ALL of them without
+    # a flush (and a second poll is a no-op).
+    jax.block_until_ready([h._trust for _, h in ex._window])
+    polled = eng.poll()
+    assert len(polled) == 3
+    assert ex.in_flight == 0
+    assert eng.poll() == []
+
+
+# ---------------------------------------------------------------------------
+# host/fused monitor parity: one warmup-exclusion rule
+# ---------------------------------------------------------------------------
+
+def test_host_and_fused_share_the_warmup_exclusion_rule():
+    """First sight of a work shape is jit warmup on BOTH paths: the
+    host chunk loop skips its first chunk observation, the fused step
+    its first batch observation — afterwards every completion lands in
+    the LoadMonitor, so the two Ucapacity estimates are comparable."""
+    host = _engine("host", 1, max_batch_items=64)
+    fused = _engine("fused", 2, max_batch_items=64)
+    for eng in (host, fused):
+        for i in range(3):
+            keys, buckets, feats = _batch(64, 1 + i * 10_000)
+            eng.enqueue(keys, buckets, feats)
+        eng.drain()
+    # host: 3 batches x 4 chunks of 16, minus the single warmup chunk
+    assert host.monitor.n_observations == 3 * 4 - 1
+    # fused: 3 batches, one observation each, minus the warmup batch
+    assert fused.monitor.n_observations == 3 - 1
+
+
+def test_executor_requires_rescue_to_swallow_errors():
+    """Without a rescue callback the executor re-raises — silent loss
+    is never the default."""
+    sh = LoadShedder(_cfg(), lambda chunk: (_ for _ in ()).throw(
+        RuntimeError("boom")))
+    ex = DrainExecutor(sh, lambda batch, shed: [])
+
+    class _B:
+        item_keys = np.arange(1, 17, dtype=np.uint32)
+        buckets = np.zeros(16, np.int32)
+        features = {"x": np.ones((16, D), np.float32)}
+        n_valid = 16
+
+    with pytest.raises(RuntimeError):
+        ex.submit(_B())

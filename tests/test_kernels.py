@@ -107,7 +107,7 @@ def test_shed_partition_matches_oracle(n_valid, ucap, uthr, budget,
     tier, cval, rank = ops.shed_partition(
         keys, valid, cache["keys"], cache["values"],
         u_capacity=ucap, u_threshold=uthr, budget_dq=budget,
-        block_n=256, interpret=True)
+        block_rows=8, interpret=True)
     tier_r, cval_r, rank_r = ref.shed_partition_ref(
         keys, valid, cache["keys"], cache["values"], ucap, uthr, budget)
     assert bool(jnp.all(tier == tier_r))
@@ -117,6 +117,50 @@ def test_shed_partition_matches_oracle(n_valid, ucap, uthr, budget,
 
 # -- shed_partition: fused-drain extensions (budget_total mode, compacted
 #    eval ranks) vs the shed_plan + gather_eval_indices oracle ------------
+
+@pytest.mark.parametrize("cache_mode", ["all_miss", "all_hit",
+                                        "strided"])
+@pytest.mark.parametrize("n,n_valid,budget_is_total", [
+    (64, 64, True),        # smaller than one (8,128) block
+    (200, 137, False),     # not lane-aligned, partial validity
+    (1000, 1000, True),    # ragged tail inside the last block
+    (1000, 0, True),       # all padding
+    (3333, 2048, True),    # multi-block with ragged tail
+    (4096, 4096, False),   # exactly block-aligned
+])
+def test_shed_partition_lane_tiled_ragged_tails(n, n_valid,
+                                                budget_is_total,
+                                                cache_mode):
+    """The (8,128)-lane-tiled kernel pads arbitrary N internally: tier,
+    cached value and compacted rank must match the 1-D oracle exactly
+    for ragged tails, sub-block batches, all-hit and all-miss caches —
+    no chunk/block alignment requirement survives the retile."""
+    keys = jnp.arange(1, n + 1, dtype=jnp.uint32)
+    valid = jnp.arange(n) < n_valid
+    cache = _probe_cache(keys, cache_mode)
+    ucap, uthr, budget = 256, 128, 300
+    tier, cval, rank = ops.shed_partition(
+        keys, valid, cache["keys"], cache["values"],
+        u_capacity=ucap, u_threshold=uthr, budget_dq=budget,
+        budget_is_total=budget_is_total, interpret=True)
+    tier_r, cval_r, rank_r = ref.shed_partition_ref(
+        keys, valid, cache["keys"], cache["values"], ucap, uthr,
+        budget, budget_is_total=budget_is_total)
+    assert tier.shape == (n,)
+    assert bool(jnp.all(tier == tier_r))
+    assert bool(jnp.all(rank == rank_r))
+    np.testing.assert_allclose(np.asarray(cval), np.asarray(cval_r))
+
+
+def test_shed_partition_vmem_budget_fits_production_config():
+    """The measured VMEM claim: the production Trust-DB (65536 x 4
+    ways, keys + values) plus double-buffered (8,128) blocks must fit
+    comfortably under the ~16 MiB per-core budget."""
+    from repro.kernels.shed_partition import shed_partition_vmem_bytes
+    budget = shed_partition_vmem_bytes(65536, 4)
+    assert budget < 4 * (1 << 20)          # ~2.3 MiB measured
+    assert budget >= 2 * 65536 * 4 * 4     # never under-claims the DB
+
 
 def _probe_cache(keys, mode: str, n_slots=256, n_ways=4):
     """Cold / fully-warm / strided cache states."""
@@ -159,7 +203,7 @@ def test_shed_partition_budget_total_matches_shed_plan(
     tier, cval, rank = ops.shed_partition(
         keys, valid, cache["keys"], cache["values"],
         u_capacity=ucap, u_threshold=uthr, budget_dq=budget_total,
-        budget_is_total=True, block_n=128, interpret=True)
+        budget_is_total=True, block_rows=8, interpret=True)
     assert bool(jnp.all(tier == plan["tier"]))
     # kernel and pure-jnp oracle agree in budget_total mode too
     tier_r, cval_r, rank_r = ref.shed_partition_ref(
@@ -200,7 +244,7 @@ def test_eval_indices_from_rank_matches_gather(n_valid, ucap, budget,
     tier, _, rank = ops.shed_partition(
         keys, valid, cache["keys"], cache["values"],
         u_capacity=ucap, u_threshold=64, budget_dq=budget,
-        block_n=64, interpret=True)
+        block_rows=8, interpret=True)
     idx_o, valid_o = gather_eval_indices(tier, max_evals)
     idx_k, valid_k = eval_indices_from_rank(rank, max_evals)
     assert bool(jnp.all(valid_o == valid_k))
