@@ -23,8 +23,9 @@ def main(quick: bool = False) -> None:
     from benchmarks import (bench_adaptive, bench_cluster,
                             bench_elastic, bench_fused_drain,
                             bench_heavy_load, bench_response_time,
-                            bench_roofline, bench_scheduler,
-                            bench_throughput, bench_very_heavy_load)
+                            bench_retrieval, bench_roofline,
+                            bench_scheduler, bench_throughput,
+                            bench_very_heavy_load)
 
     csv_rows = []
 
@@ -105,6 +106,25 @@ def main(quick: bool = False) -> None:
     with open("BENCH_elastic.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_elastic.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: sharded retrieval front-end — regimes, kernel "
+          "parity, scorer (repro.retrieval)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "retrieval",
+        (lambda: bench_retrieval.main(n_queries=120, n_docs=768,
+                                      n_partitions=8)) if quick
+        else bench_retrieval.main)
+    csv_rows.append((name, us,
+                     f"no_drop={rows['no_drop_ok']} "
+                     f"regimes={rows['regimes_ok']} "
+                     f"parity={rows['parity_ok']} scorer "
+                     f"{rows['scorer']['speedup']:.1f}x jit vs py"))
+    with open("BENCH_retrieval.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_retrieval.json")
 
     print()
     print("=" * 72)

@@ -1,12 +1,19 @@
 """RecSys scenario (deliverable b/f): the paper's overload setting as a
-retrieval workload — one query scored against a large candidate set with
+retrieval workload — queries scored against large candidate sets with
 the two-tower backbone, under the load shedder's deadline ladder.
 
+Default path is the REAL retrieve stage (``repro.retrieval``): query
+strings go parse -> sharded BM25 -> Pallas top-k, and the retrieved
+candidate set (not a synthetic one) flows into the shedder.
+``--synthetic`` restores the original pre-retrieved 50k-candidate run.
+
 The `retrieval_cand` assigned shape is this exact workload at 1M
-candidates on the production mesh; here we run 50k candidates on CPU.
+candidates on the production mesh; here we run CPU-sized corpora.
 
     PYTHONPATH=src python examples/retrieval_overload.py
+    PYTHONPATH=src python examples/retrieval_overload.py --synthetic
 """
+import argparse
 import time
 
 import jax.numpy as jnp
@@ -17,18 +24,17 @@ from repro.core import LoadShedder
 from repro.serving.evaluators import make_evaluator
 
 
-def main():
-    n_cand = 50_000
+def _make_evaluate():
     ev, mk = make_evaluator("two-tower-retrieval", smoke=True)
 
     def evaluate(chunk):
         return np.asarray(ev({k: jnp.asarray(v)
                               for k, v in chunk.items()}))
+    return evaluate, mk
 
-    feats = mk(n_cand, fseed=0)
-    # calibrate: big chunks — retrieval scoring is one batched matmul
-    chunk = 8192
-    warm = {k: v[:chunk] for k, v in feats.items()}
+
+def _calibrate(evaluate, mk, chunk):
+    warm = {k: v[:chunk] for k, v in mk(chunk, fseed=0).items()}
     evaluate(warm)
     t0 = time.perf_counter()
     evaluate(warm)
@@ -39,12 +45,20 @@ def main():
                         chunk_size=chunk)
     print(f"two-tower scoring rate ~{rate:,.0f} candidates/s; "
           f"SLO {cfg.overload_deadline_s * 1e3:.0f} ms")
+    return cfg
+
+
+def main_synthetic():
+    """The original run: one pre-retrieved 50k synthetic candidate set."""
+    n_cand = 50_000
+    evaluate, mk = _make_evaluate()
+    feats = mk(n_cand, fseed=0)
+    cfg = _calibrate(evaluate, mk, chunk=8192)
 
     shed = LoadShedder(cfg, evaluate)
     keys = np.arange(1, n_cand + 1, dtype=np.uint32)
     buckets = np.zeros(n_cand, np.int32)
     shed.process(keys + 10**7, buckets, feats)      # warm jit paths
-
     t0 = time.perf_counter()
     res = shed.process(keys, buckets, feats)
     wall = time.perf_counter() - t0
@@ -57,6 +71,67 @@ def main():
     top = np.argsort(-res.trust)[:5]
     print(f"  top-5 candidates by trust: {top.tolist()} "
           f"(scores {np.round(res.trust[top], 2).tolist()})")
+
+
+def main_retrieve(n_docs=8192, n_queries=12, top_k=2048):
+    """Query strings in, shard-scored candidates out: parse -> sharded
+    BM25 -> Pallas top-k picks each candidate set, THEN the shedder's
+    deadline ladder fights the overload — the paper's full front half."""
+    from repro.retrieval import (CorpusRetrieval, SyntheticCorpus,
+                                 ZipfQueryModel)
+
+    evaluate, mk = _make_evaluate()
+    cfg = _calibrate(evaluate, mk, chunk=1024)
+
+    t0 = time.perf_counter()
+    corpus = SyntheticCorpus(n_docs=n_docs, seed=0)
+    retrieval = CorpusRetrieval(
+        corpus, n_partitions=4,
+        # retrieved docs -> two-tower features (doc-id-seeded so a doc
+        # keeps its features across queries, like a real feature store)
+        feature_fn=lambda docs: mk(
+            len(docs), fseed=int(docs[0]) % 1_000_000 if len(docs) else 0))
+    searcher = retrieval.searcher(
+        [retrieval.build_shard([p]) for p in range(4)])
+    print(f"indexed {n_docs:,} docs into 4 shards in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    shed = LoadShedder(cfg, evaluate)
+    queries = ZipfQueryModel.for_corpus(corpus, seed=1)
+    # warm: one query exercises parse/BM25/top-k + evaluator jit
+    warm = searcher.search(queries.sample(), top_k)
+    shed.process(warm.url_ids + 10**7, warm.buckets, warm.features)
+
+    for qi in range(n_queries):
+        q = queries.sample()
+        t0 = time.perf_counter()
+        res = searcher.search(q, top_k)
+        t_ret = time.perf_counter() - t0
+        sr = shed.process(res.url_ids, res.buckets, res.features)
+        wall = time.perf_counter() - t0
+        print(f"  q{qi:>2} {q[:28]!r:<30} retrieved "
+              f"{len(res.url_ids):>5} ({t_ret * 1e3:5.1f} ms) "
+              f"{sr.regime.name:<11} wall {wall * 1e3:6.1f} ms  "
+              f"eval {sr.n_evaluated:>5} cached {sr.n_cached:>5} "
+              f"prior {sr.n_prior:>5}")
+    print(f"{searcher.n_searches} searches, "
+          f"{searcher.n_fallback} fallback draws")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--synthetic", action="store_true",
+                   help="original pre-retrieved synthetic candidate "
+                        "run (no index, no query strings)")
+    p.add_argument("--n-docs", type=int, default=8192)
+    p.add_argument("--n-queries", type=int, default=12)
+    p.add_argument("--top-k", type=int, default=2048)
+    args = p.parse_args()
+    if args.synthetic:
+        main_synthetic()
+    else:
+        main_retrieve(n_docs=args.n_docs, n_queries=args.n_queries,
+                      top_k=args.top_k)
 
 
 if __name__ == "__main__":

@@ -81,6 +81,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
@@ -148,6 +149,9 @@ class ClusterStats:
     n_warm_handoff_entries: int = 0     # (url, trust) pairs shipped on
                                         # a graceful leave (warm cache)
     n_crash_recovered: int = 0          # journal-replayed after a crash
+    # doc-partitioned retrieval shards (repro.retrieval)
+    n_partition_moves: int = 0          # stripes handed off (join/leave)
+    n_partition_rebuilds: int = 0       # stripes re-indexed after crash
     # fleet-wide evaluation accounting (gossip's measured quantity)
     n_eval_items: int = 0               # fresh evaluations, fleet-wide
     n_duplicate_evals: int = 0          # same key evaluated again
@@ -179,7 +183,13 @@ class ClusterCoordinator:
                  autoscaler: Optional[WatermarkAutoscaler] = None,
                  kv_pools: Optional[List] = None,
                  drain_mode: Optional[str] = None,
-                 evaluate_batch: Optional[Callable] = None):
+                 evaluate_batch: Optional[Callable] = None,
+                 retrieval=None):
+        """``retrieval`` (a ``repro.retrieval.CorpusRetrieval``)
+        attaches the sharded inverted-index front end: doc-partition
+        stripes route through THIS ring under ``"docpart:p"`` keys,
+        each replica's shard is built from the stripes it owns, and
+        :meth:`enqueue_query` accepts raw query strings."""
         self.cfg = cfg
         if cluster_cfg is None:
             # Bare coordinators inherit the system config's elastic
@@ -269,6 +279,23 @@ class ClusterCoordinator:
         # key -> fleet-wide fresh-evaluation count (duplicate-eval
         # accounting: the quantity gossip exists to reduce).
         self._eval_counts: Dict[int, int] = {}
+        # Retrieval front end: build each replica's shard from the
+        # doc-partition stripes the ring assigns it, then point every
+        # engine at ONE fleet searcher (queries scatter-gather across
+        # all live shards; ownership governs residency + handoff).
+        self.retrieval = retrieval
+        self.searcher = None
+        self._part_owner: Dict[int, str] = {}
+        if retrieval is not None:
+            for rep in self.replicas:
+                owned = [p for p in range(retrieval.n_partitions)
+                         if self.ring.route(retrieval.partition_key(p))
+                         == rep.replica_id]
+                rep.shard = retrieval.build_shard(owned)
+                for p in owned:
+                    self._part_owner[p] = rep.replica_id
+            self.searcher = retrieval.searcher([])
+            self._attach_searcher()
 
     # -- fleet views ---------------------------------------------------------
     @property
@@ -338,6 +365,100 @@ class ClusterCoordinator:
         self._collect()                 # surface immediate rejections
         return rid
 
+    # -- retrieval front end -------------------------------------------------
+    def _attach_searcher(self) -> None:
+        """Refresh the fleet searcher's shard list and point every live
+        engine at it (a replica handles raw query strings by scatter-
+        gathering across ALL live shards — its own stripe is just the
+        part it stores and hands off)."""
+        if self.searcher is None:
+            return
+        self.searcher.shards = [r.shard for r in self.replicas
+                                if r.shard is not None]
+        for rep in self.replicas:
+            rep.engine.retriever = self.searcher
+
+    def partition_owners(self) -> Dict[int, str]:
+        """Current doc-partition -> replica-id map (observability and
+        the shard-ownership tests)."""
+        return dict(self._part_owner)
+
+    def enqueue_query(self, query: str, n_results: Optional[int] = None,
+                      slo_s: Optional[float] = None,
+                      priority: Priority = Priority.NORMAL,
+                      tenant: str = "default",
+                      needs_kv_slot: bool = False,
+                      t_arrival: Optional[float] = None) -> int:
+        """The full lifecycle front half, fleet edition: parse ->
+        retrieve (scatter-gather across every live shard) -> route by
+        tenant -> admit. Retrieval latency folds into the routed
+        replica's LoadMonitor under the WarmupGate rule (wall clocks
+        only), so its Ucapacity reflects the retrieve stage too."""
+        if self.searcher is None:
+            raise RuntimeError(
+                "enqueue_query needs a retrieval front end (pass "
+                "retrieval= to the coordinator)")
+        k = (n_results if n_results is not None
+             else getattr(self.cfg, "retrieve_top_k", 64))
+        t0 = time.perf_counter()
+        res = self.searcher.search(query, k)
+        elapsed = time.perf_counter() - t0
+        feats = dict(res.features)
+        feats["trust"] = res.exact_trust
+        self.route(tenant).engine.note_retrieval(
+            len(res.url_ids), elapsed, feats)
+        return self.enqueue(res.url_ids, res.buckets, feats,
+                            slo_s=slo_s, priority=priority,
+                            tenant=tenant, needs_kv_slot=needs_kv_slot,
+                            t_arrival=t_arrival)
+
+    def _partition_diff(self, *, remove: Optional[str] = None,
+                        add=None) -> Dict[int, tuple]:
+        """Doc-partitions a membership change would move:
+        ``{partition: (old_owner, new_owner)}``. Must run BEFORE the
+        ring mutates (and before fencing — a fenced replica no longer
+        owns anything to diff)."""
+        if self.retrieval is None:
+            return {}
+        diff = self.ring.remap_diff(self.retrieval.partition_keys(),
+                                    remove=remove, add=add)
+        return {self.retrieval.partition_index(key): owners
+                for key, owners in diff.items()}
+
+    def _move_partitions(self, moved: Dict[int, tuple],
+                         joining=None, leaving=None,
+                         rebuild: bool = False) -> None:
+        """Commit a partition-ownership diff: each moved stripe leaves
+        its old owner's shard and lands in the new owner's. On a
+        graceful move the postings themselves travel
+        (``export_docs``/``absorb`` — the index handoff next to the
+        warm Trust-DB one); after a crash (``rebuild=True``) the dead
+        shard is gone and the new owner re-indexes the stripe from the
+        corpus."""
+        if not moved or self.retrieval is None:
+            return
+        for p, (old_rid, new_rid) in sorted(moved.items()):
+            docs = self.retrieval.partition_doc_ids(p)
+            old = leaving if (leaving is not None
+                              and leaving.replica_id == old_rid) \
+                else self.by_id.get(old_rid)
+            new = joining if (joining is not None
+                              and joining.replica_id == new_rid) \
+                else self.by_id.get(new_rid)
+            if new is None or new.shard is None:   # pragma: no cover
+                continue
+            if rebuild or old is None or old.shard is None:
+                sub = self.retrieval.build_partition(p)
+                self.stats.n_partition_rebuilds += 1
+            else:
+                sub = old.shard.export_docs(docs)
+                if len(sub.doc_len) != len(docs):  # pragma: no cover
+                    sub = self.retrieval.build_partition(p)
+            new.shard.absorb(sub)
+            self._part_owner[p] = new.replica_id
+            self.stats.n_partition_moves += 1
+        self._attach_searcher()
+
     # -- elastic membership --------------------------------------------------
     def _next_replica_id(self) -> str:
         while True:
@@ -380,11 +501,21 @@ class ClusterCoordinator:
             raise ValueError(
                 f"replica id {handle.replica_id!r} belonged to a "
                 f"departed replica whose stats live on under that name")
+        # Plan the stripe moves BEFORE the ring mutates: "which
+        # partitions does the newcomer claim" is a diff against the
+        # pre-join membership.
+        moved = self._partition_diff(
+            add=(handle.replica_id, handle.weight))
         handle.advance_to(self._now_hint if now_t is None else now_t)
         self.ring.add(handle.replica_id, handle.weight)
         self.replicas.append(handle)
         self.by_id[handle.replica_id] = handle
         self.stats.n_joins += 1
+        if self.retrieval is not None:
+            # Build/load the newcomer's shard: exactly the stripes the
+            # ring hands it, loaded from their old owners' postings.
+            handle.shard = self.retrieval.build_shard([])
+            self._move_partitions(moved, joining=handle)
         cc = self.cluster_cfg
         if self.hedge is None and cc.hedge_after_s > 0 \
                 and self.n_replicas > 1:
@@ -436,11 +567,19 @@ class ClusterCoordinator:
                                         remove=replica_id)
             new_owner_ids = {new for old, new in diff.values()
                              if old == replica_id}
+        # Same pre-fence rule for the index stripes: the handoff plan
+        # is "who inherits this replica's partitions", and a fenced
+        # replica owns none.
+        part_moved = self._partition_diff(remove=replica_id)
         self.ring.fence(replica_id)     # no fresh routes from here on
         migrated = 0
         if drain:
             migrated = self._handoff_queue(rep)
             self._handoff_warm_cache(rep, new_owner_ids)
+            # Index handoff rides next to the warm Trust-DB one: the
+            # leaving shard's postings travel to the stripes' new
+            # owners instead of being re-indexed.
+            self._move_partitions(part_moved, leaving=rep)
             self.stats.n_leaves += 1
         # Drop the member BEFORE journal replay so recovery routes and
         # twin-scans only see survivors.
@@ -450,9 +589,14 @@ class ClusterCoordinator:
         del self.by_id[replica_id]
         if not drain:
             migrated = self._crash_recover()
+            # The dead shard is gone wholesale: survivors re-index the
+            # crashed stripes from the corpus (the corpus is durable
+            # shared storage; only the built postings were lost).
+            self._move_partitions(part_moved, rebuild=True)
             self.stats.n_crashes += 1
         if self.autoscaler is not None:
             self.autoscaler.forget(replica_id)
+        self._attach_searcher()         # drop the departed shard
         return migrated
 
     def _queued_rids(self, exclude: Optional[ReplicaHandle] = None

@@ -27,6 +27,14 @@ Elastic membership needs two more facilities per replica:
   gossip bus and ``apply_trust_deltas`` folds a sibling's broadcast
   into this replica's Trust-DB (cache-only — the prior stays local, so
   a poisoned sibling can at worst pre-warm cache entries that evict).
+
+With a retrieval front end attached (``repro.retrieval``), a replica
+additionally OWNS an inverted-index ``shard`` — the merge of the
+doc-partition stripes the ring assigns it under ``"docpart:p"`` keys.
+Shards load on join, hand their postings off on graceful leave (next
+to the warm Trust-DB handoff), and rebuild from the corpus after a
+crash; the coordinator keeps the fleet-wide searcher pointed at the
+live set.
 """
 from __future__ import annotations
 
@@ -51,9 +59,15 @@ class ReplicaHandle:
                  sim_rate_items_per_s: Optional[float] = None,
                  kv_pool=None, request_ids=None,
                  drain_mode: Optional[str] = None,
-                 evaluate_batch: Optional[Callable] = None):
+                 evaluate_batch: Optional[Callable] = None,
+                 retriever=None):
         self.replica_id = replica_id
         self.weight = float(weight)
+        # Doc-partitioned index shard this replica OWNS (the merge of
+        # its ring stripes); None until the coordinator attaches one.
+        # Ownership is about residency + handoff accounting — queries
+        # scatter-gather across every live shard via the fleet searcher.
+        self.shard = None
         self.clock = (SimClock(sim_rate_items_per_s)
                       if sim_rate_items_per_s is not None else None)
         # drain_mode/evaluate_batch pass straight through: a fused
@@ -65,7 +79,8 @@ class ReplicaHandle:
                                     kv_pool=kv_pool,
                                     request_ids=request_ids,
                                     drain_mode=drain_mode,
-                                    evaluate_batch=evaluate_batch)
+                                    evaluate_batch=evaluate_batch,
+                                    retriever=retriever)
         # Responses the coordinator has already collected from
         # ``engine.completed`` (consumption cursor).
         self.n_collected = 0

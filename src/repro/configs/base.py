@@ -305,6 +305,28 @@ class TrustIRConfig:
     # sibling replicas (bounded per-round budget) so correlated hot-URL
     # floods are evaluated once fleet-wide.
     gossip: bool = False
+    # Retrieval front end (repro.retrieval): the sharded inverted-index
+    # stage ahead of the trust pipeline. The synthetic corpus is fully
+    # determined by (corpus_docs, corpus_vocab, corpus_zipf_a,
+    # corpus_seed) — same numbers, bit-identical corpus and postings
+    # anywhere.
+    corpus_docs: int = 4096             # synthetic corpus size
+    corpus_vocab: int = 2048            # Zipf-ranked content vocabulary
+    corpus_zipf_a: float = 1.15         # term-frequency skew (rank 1 =
+                                        # the paper's "book" hot keyword)
+    corpus_seed: int = 0
+    # Blocked index construction: documents per build block. Postings
+    # are block-size invariant (sequential merge), so this knob trades
+    # peak build memory only — never retrieval results.
+    index_block_docs: int = 512
+    # Doc-partition count for the consistent-hash ring ("docpart:p"
+    # keys). More partitions = finer-grained rebalancing on membership
+    # change; each replica's shard is the merge of the stripes it owns.
+    index_partitions: int = 16
+    # Candidate-set size a raw query string retrieves (BM25 top-k)
+    # before the shed ladder sees it. Quantized up to a power of two on
+    # the device path, so the jit cache stays O(log k).
+    retrieve_top_k: int = 64
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ from repro.kernels.dot_interaction import dot_interaction as _dot_interaction
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.shed_partition import shed_partition as _shed_partition
+from repro.kernels.topk_select import topk_select as _topk_select
 
 
 def _on_tpu() -> bool:
@@ -52,6 +53,14 @@ def dot_interaction(feats, *, block_b=128, interpret=None):
     if interpret is None:
         interpret = not _on_tpu()
     return _dot_interaction(feats, block_b=block_b, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_select(scores, *, k, block_rows=8, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _topk_select(scores, k, block_rows=block_rows,
+                        interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("u_capacity", "u_threshold",

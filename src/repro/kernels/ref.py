@@ -68,6 +68,17 @@ def dot_interaction_ref(feats):
     return z[:, iu, ju].astype(feats.dtype)
 
 
+def topk_select_ref(scores, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k of a dense (N,) score vector by ``(score desc, index
+    asc)`` — the postings-scorer total order (``retrieval.index
+    .topk_py`` sorts identically). Returns (values (k,) f32,
+    indices (k,) int32)."""
+    scores = jnp.asarray(scores, jnp.float32)
+    n = scores.shape[0]
+    order = jnp.lexsort((jnp.arange(n, dtype=jnp.int32), -scores))[:k]
+    return scores[order], order.astype(jnp.int32)
+
+
 def shed_partition_ref(keys, valid, cache_keys, cache_values,
                        u_capacity, u_threshold, budget_dq,
                        budget_is_total: bool = False

@@ -11,6 +11,12 @@ budget-shaped micro-batches round-robin across replicas. ``--replicas
 1`` (the default) is the degenerate single-host path; ``--sync``
 restores the original per-request synchronous path; ``--adaptive``
 enables the §7 adaptive Very-Heavy controller.
+
+``--corpus N`` attaches the ``repro.retrieval`` front end: a
+deterministic N-doc Zipf corpus is indexed into ``--index-shards``
+doc-partitions owned by replicas through the consistent-hash ring, and
+requests arrive as *raw query strings* — parse -> BM25 -> Pallas top-k
+picks each candidate set — instead of pre-retrieved key arrays.
 """
 from __future__ import annotations
 
@@ -60,6 +66,15 @@ def main() -> int:
                         "--replicas >= 2)")
     p.add_argument("--drain-every", type=int, default=4,
                    help="drain a micro-batch every N enqueues")
+    p.add_argument("--corpus", type=int, default=0,
+                   help="attach the retrieval front end: synthetic "
+                        "Zipf corpus of this many docs; requests "
+                        "become raw query strings (0 = requests "
+                        "arrive pre-retrieved, the original path)")
+    p.add_argument("--index-shards", type=int, default=0,
+                   help="doc-partition count for the inverted index "
+                        "(0 = config default); partitions map to "
+                        "replicas through the consistent-hash ring")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
@@ -86,14 +101,19 @@ def main() -> int:
     odl = args.overload_deadline_ms / 1e3
     n_rep = max(args.replicas, 1)
     elastic = args.max_replicas > 0
-    cfg = TrustIRConfig(u_capacity=max(int(rate * dl), 16),
-                        u_threshold=max(int(rate * (odl - dl)), 8),
-                        deadline_s=dl, overload_deadline_s=odl,
-                        chunk_size=64, n_replicas=n_rep,
-                        min_replicas=args.min_replicas,
-                        max_replicas=args.max_replicas,
-                        gossip=args.gossip,
-                        pipeline_depth=max(args.pipeline_depth, 1))
+    cfg_kw = dict(u_capacity=max(int(rate * dl), 16),
+                  u_threshold=max(int(rate * (odl - dl)), 8),
+                  deadline_s=dl, overload_deadline_s=odl,
+                  chunk_size=64, n_replicas=n_rep,
+                  min_replicas=args.min_replicas,
+                  max_replicas=args.max_replicas,
+                  gossip=args.gossip,
+                  pipeline_depth=max(args.pipeline_depth, 1))
+    if args.corpus > 0:
+        cfg_kw["corpus_docs"] = args.corpus
+        if args.index_shards > 0:
+            cfg_kw["index_partitions"] = args.index_shards
+    cfg = TrustIRConfig(**cfg_kw)
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
           f"(overload {odl * 1e3:.0f}ms)"
@@ -110,9 +130,39 @@ def main() -> int:
     def evaluate_batch(chunk):            # jax-traceable (fused drain)
         return ev(chunk)
 
+    retrieval = queries = None
+    if args.corpus > 0:
+        from repro.retrieval import (CorpusRetrieval, SyntheticCorpus,
+                                     ZipfQueryModel)
+
+        def doc_features(docs):    # retrieved docs -> backbone features
+            return mk(len(docs),
+                      fseed=int(docs[0]) % 1_000_000 if len(docs) else 0)
+
+        t0 = time.perf_counter()
+        corpus = SyntheticCorpus(n_docs=cfg.corpus_docs,
+                                 vocab_size=cfg.corpus_vocab,
+                                 zipf_a=cfg.corpus_zipf_a,
+                                 seed=cfg.corpus_seed)
+        retrieval = CorpusRetrieval(corpus,
+                                    n_partitions=cfg.index_partitions,
+                                    block_docs=cfg.index_block_docs,
+                                    feature_fn=doc_features)
+        queries = ZipfQueryModel.for_corpus(corpus, seed=args.seed + 1)
+        print(f"retrieval: {corpus.n_docs} docs / vocab "
+              f"{corpus.vocab_size} -> {cfg.index_partitions} "
+              f"doc-partitions, top-k={cfg.retrieve_top_k} "
+              f"({time.perf_counter() - t0:.2f}s corpus+stats)")
+
     if args.sync:
+        retriever = None
+        if retrieval is not None:
+            # single host owns every doc-partition in one shard
+            retriever = retrieval.searcher(
+                [retrieval.build_shard(range(cfg.index_partitions))])
         eng = ServingEngine(cfg, evaluate, drain_mode=args.drain_mode,
-                            evaluate_batch=evaluate_batch)
+                            evaluate_batch=evaluate_batch,
+                            retriever=retriever)
         if args.adaptive:
             eng.shedder.adaptive = AdaptiveWeightController()
     else:
@@ -126,7 +176,8 @@ def main() -> int:
                 max_replicas=args.max_replicas,
                 gossip=args.gossip),
             drain_mode=args.drain_mode,
-            evaluate_batch=evaluate_batch)
+            evaluate_batch=evaluate_batch,
+            retrieval=retrieval)
         if args.adaptive:
             for rep in eng.replicas:
                 rep.engine.shedder.adaptive = AdaptiveWeightController()
@@ -139,28 +190,62 @@ def main() -> int:
     prios = r.choice(4, size=args.n_requests, p=[0.1, 0.2, 0.5, 0.2])
     warm_shedders = ([eng.shedder] if args.sync
                      else [rep.engine.shedder for rep in eng.replicas])
-    for n in sorted(set(int(s) for s in sizes)):   # warm jit per size
-        for shedder in warm_shedders:    # every replica pays compile NOW
-            shedder.process(
-                np.arange(10**6, 10**6 + n, dtype=np.uint32),
-                np.zeros(n, np.int32), mk(n, fseed=999))
+    if queries is None:
+        for n in sorted(set(int(s) for s in sizes)):  # warm jit per size
+            for shedder in warm_shedders:  # every replica compiles NOW
+                shedder.process(
+                    np.arange(10**6, 10**6 + n, dtype=np.uint32),
+                    np.zeros(n, np.int32), mk(n, fseed=999))
     # ... and the padded micro-batch shape the submit/drain path uses —
     # again per replica (the ring would route one warm tenant to ONE
-    # replica; the rest would pay the batch-shape compile mid-run)
+    # replica; the rest would pay the batch-shape compile mid-run). In
+    # corpus mode one real query per replica warms the whole front
+    # half — index dense form, BM25 segment-sum, top-k kernel — plus
+    # the evaluator batch shape (fixed warm string: sampling the query
+    # model here would shift the serve stream's rng).
+    warm_q = "term00001 term00002"
     if args.sync:
-        eng.enqueue(np.arange(1, 65, dtype=np.uint32),
-                    np.zeros(64, np.int32), mk(64, fseed=998))
+        if queries is not None:
+            eng.enqueue_query(warm_q, slo_s=odl * 2.5)
+        else:
+            eng.enqueue(np.arange(1, 65, dtype=np.uint32),
+                        np.zeros(64, np.int32), mk(64, fseed=998))
         eng.drain()
     else:
         for rep in eng.replicas:
-            rep.engine.enqueue(np.arange(1, 65, dtype=np.uint32),
-                               np.zeros(64, np.int32), mk(64, fseed=998))
+            if queries is not None:
+                rep.engine.enqueue_query(warm_q, slo_s=odl * 2.5)
+            else:
+                rep.engine.enqueue(np.arange(1, 65, dtype=np.uint32),
+                                   np.zeros(64, np.int32),
+                                   mk(64, fseed=998))
             rep.engine.drain()
         eng.drain()                  # collect warm responses, then drop
     eng.completed.clear()
 
     for i, n in enumerate(int(s) for s in sizes):
         prio = prio_choices[int(prios[i])]
+        if queries is not None:
+            q = queries.sample()
+            if args.sync:
+                rid = eng.enqueue_query(q, slo_s=odl * 2.5,
+                                        priority=prio)
+                eng.drain()
+                resp = next(rr for rr in reversed(eng.completed)
+                            if rr.request_id == rid)
+                sh = resp.shed
+                print(f"  req {i:>3} q={q[:22]!r:<24} {prio.name:<9} "
+                      f"{sh.regime.name:<11} "
+                      f"{resp.latency_s * 1e3:7.1f} ms  "
+                      f"eval {sh.n_evaluated:>5} cached "
+                      f"{sh.n_cached:>5} prior {sh.n_prior:>5} "
+                      f"{'SLO ok' if resp.met_slo else 'SLO MISS'}")
+            else:
+                eng.enqueue_query(q, slo_s=odl * 2.5, priority=prio,
+                                  tenant=f"tenant{i % (4 * n_rep)}")
+                if (i + 1) % args.drain_every == 0:
+                    eng.drain(1)             # one batch (or round)
+            continue
         keys = np.arange(i * 10_000 + 1, i * 10_000 + n + 1,
                          dtype=np.uint32)
         buckets = r.integers(0, 64, n).astype(np.int32)
@@ -209,6 +294,12 @@ def main() -> int:
                       f"{g['n_dropped_stale']} stale), "
                       f"{c['n_duplicate_evals']} duplicate evals "
                       f"fleet-wide")
+    if retrieval is not None:
+        sr = eng.retriever if args.sync else eng.searcher
+        live = [s for s in sr.shards if s.n_docs]
+        print(f"retrieval: {sr.n_searches} searches "
+              f"({sr.n_fallback} fallback), {len(live)} live "
+              f"shard(s), {sum(s.n_docs for s in live)} docs resident")
     board = eng.slo_stats()
     print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "

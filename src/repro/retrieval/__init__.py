@@ -1,0 +1,34 @@
+"""``repro.retrieval`` — the sharded inverted-index front end.
+
+The paper's system is a *search engine*: queries retrieve candidate
+URLs first, and only then does the trust pipeline (shed -> evaluate ->
+rank) fight overload. This package supplies that front half:
+
+    parse (text) -> index (blocked build + merge) -> retrieve
+    (dense BM25 -> Pallas top-k) -> ... existing serving path ...
+
+* :mod:`.text` — tokenize / common-word filter / stem.
+* :mod:`.corpus` — deterministic Zipf-vocab synthetic corpus +
+  query model (no external data needed anywhere).
+* :mod:`.index` — blocked inverted-index construction, sequential
+  merge, pure-Python BM25 (the host oracle and speed baseline).
+* :mod:`.shard` — doc-partitioned :class:`IndexShard` (dense jitted
+  BM25 -> ``kernels.ops.topk_select``), ring-keyed partition
+  ownership (:class:`CorpusRetrieval`), and the
+  ``SyntheticSearcher``-compatible :class:`CorpusSearcher`.
+"""
+from .corpus import SyntheticCorpus, ZipfQueryModel
+from .index import (BM25_B, BM25_K1, CollectionStats, InvertedIndex,
+                    bm25_scores, build_index, collection_stats,
+                    index_checksum, merge_indexes, topk_py)
+from .shard import (CorpusRetrieval, CorpusSearcher, IndexShard, Q_MAX)
+from .text import STOPWORDS, normalize, stem, tokenize
+
+__all__ = [
+    "SyntheticCorpus", "ZipfQueryModel",
+    "BM25_B", "BM25_K1", "CollectionStats", "InvertedIndex",
+    "bm25_scores", "build_index", "collection_stats",
+    "index_checksum", "merge_indexes", "topk_py",
+    "CorpusRetrieval", "CorpusSearcher", "IndexShard", "Q_MAX",
+    "STOPWORDS", "normalize", "stem", "tokenize",
+]

@@ -1,0 +1,420 @@
+"""Doc-partitioned index shards with a dense jitted BM25 -> top-k path.
+
+:class:`IndexShard` wraps one replica's merged :class:`InvertedIndex`
+in a **static-shape dense form** the accelerator can chew on:
+
+* shard documents map to local slots ``0..D-1`` in ascending global
+  doc-id order (so the kernel's index-ascending tie-break reproduces
+  the oracle's doc-id-ascending one), padded to ``D_pad`` (a whole
+  number of 128-lane rows);
+* every term's postings become one row of a ``(T+1, P)`` pair of
+  arrays — local slot ids and **precomputed BM25 per-posting weights**
+  ``w(t,d) = idf(t) * tf * (k1+1) / (tf + k1*(1-b+b*dl/avgdl))`` —
+  padded with an out-of-range slot that a ``mode="drop"`` scatter
+  ignores. Row ``T`` is the all-padding sentinel for unknown or absent
+  query terms, which makes the query vector a fixed-size ``(Q_MAX,)``
+  int32 array and the whole score step one jitted segment-sum;
+* scoring is ``score[slot] += w`` over the query rows, then
+  ``kernels.ops.topk_select`` (Pallas, interpret on CPU) picks the
+  candidate set. ``k`` quantizes to the next power of two so the jit
+  cache holds O(log k) entries, not one per distinct request size.
+
+Shard ownership moves through the consistent-hash ring at doc-
+*partition* granularity (``CorpusRetrieval.partition_key``):
+:meth:`IndexShard.export_docs` carves out a departing stripe's
+postings for the graceful-leave handoff (next to the warm Trust-DB
+handoff) and :meth:`IndexShard.absorb` splices a stripe in on join —
+both invalidate the dense form, which rebuilds lazily on next query.
+
+:class:`CorpusSearcher` adapts a shard to the ``SyntheticSearcher``
+interface (``search(query, n_results) -> SearchResults``) so every
+existing driver — engine, cluster, churn — runs real retrieval by
+swapping one object.
+"""
+from __future__ import annotations
+
+import time
+from bisect import bisect_right
+from functools import partial
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import SearchResults
+from repro.kernels import ops
+
+from .corpus import SyntheticCorpus
+from .index import (BM25_B, BM25_K1, CollectionStats, InvertedIndex,
+                    bm25_scores, build_index, collection_stats, topk_py)
+from .text import normalize
+
+LANES = 128
+Q_MAX = 8          # static query width: terms beyond this are dropped
+
+# A shard whose full term x doc weight matrix fits this f32 budget
+# scores by pure gather+sum (W[qt].sum(axis)) instead of scatter-add —
+# XLA scatters are slow on CPU and serialize on TPU, while the gather
+# form is one contiguous read per query term. Bigger shards fall back
+# to the (T+1, P) postings scatter, which is O(postings) memory.
+DENSE_W_BUDGET_BYTES = 64 << 20
+
+
+@partial(jax.jit)
+def _bm25_gather(w_dense, qt):
+    return w_dense[qt].sum(axis=0)
+
+
+@partial(jax.jit)
+def _bm25_gather_batch(w_dense, qts):
+    return w_dense[qts].sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("d_pad",))
+def _bm25_dense(post_slot, post_w, qt, *, d_pad: int):
+    """Segment-sum BM25: gather the query terms' posting rows and
+    scatter-add their precomputed weights into the slot axis. Padding
+    slots are >= d_pad and fall out via ``mode="drop"``."""
+    slots = post_slot[qt].reshape(-1)
+    ws = post_w[qt].reshape(-1)
+    return jnp.zeros((d_pad,), jnp.float32).at[slots].add(
+        ws, mode="drop")
+
+
+@partial(jax.jit, static_argnames=("d_pad",))
+def _bm25_dense_batch(post_slot, post_w, qts, *, d_pad: int):
+    """Vmapped :func:`_bm25_dense`: ``(B, Q_MAX)`` query-term ids ->
+    ``(B, D_pad)`` scores in ONE dispatch (the serving shape — a
+    micro-batch of queries amortizes the per-call overhead)."""
+    return jax.vmap(
+        lambda qt: jnp.zeros((d_pad,), jnp.float32).at[
+            post_slot[qt].reshape(-1)].add(
+            post_w[qt].reshape(-1), mode="drop"))(qts)
+
+
+def _pow2_at_least(k: int) -> int:
+    return 1 << max(int(k) - 1, 0).bit_length()
+
+
+class IndexShard:
+    """One replica's documents: merged postings + dense scoring form."""
+
+    def __init__(self, index: InvertedIndex, *, k1: float = BM25_K1,
+                 b: float = BM25_B,
+                 stats: Optional[CollectionStats] = None):
+        self.index = index
+        self.k1 = float(k1)
+        self.b = float(b)
+        # collection-global statistics; None -> this shard IS the
+        # whole collection (single-node mode)
+        self.stats = stats
+        self._dense_ok = False
+        # dense form (built lazily)
+        self._slot_doc: Optional[np.ndarray] = None   # (D,) global ids
+        self._term_id: Dict[str, int] = {}
+        self._post_slot: Optional[jnp.ndarray] = None  # (T+1, P)
+        self._post_w: Optional[jnp.ndarray] = None     # (T+1, P)
+        self._w_dense: Optional[jnp.ndarray] = None    # (T+1, D_pad)
+        self._d_pad = 0
+
+    # -- construction / handoff --------------------------------------------
+
+    @classmethod
+    def build(cls, texts: Sequence[str], doc_ids: Sequence[int], *,
+              block_docs: int = 512, k1: float = BM25_K1,
+              b: float = BM25_B,
+              stats: Optional[CollectionStats] = None) -> "IndexShard":
+        return cls(build_index(texts, doc_ids, block_docs=block_docs),
+                   k1=k1, b=b, stats=stats)
+
+    @property
+    def n_docs(self) -> int:
+        return self.index.n_docs
+
+    def export_docs(self, doc_ids: Iterable[int]) -> InvertedIndex:
+        """Carve the given documents OUT of this shard (graceful-leave
+        handoff payload). Returns their sub-index; postings order is
+        preserved on both sides."""
+        leaving = {int(d) for d in doc_ids}
+        sub = InvertedIndex()
+        for d in sorted(leaving):
+            if d in self.index.doc_len:
+                sub.doc_len[d] = self.index.doc_len.pop(d)
+        if not sub.doc_len:
+            return sub
+        for t in list(self.index.postings):
+            plist = self.index.postings[t]
+            keep = [p for p in plist if p[0] not in leaving]
+            gone = [p for p in plist if p[0] in leaving]
+            if gone:
+                sub.postings[t] = gone
+                if keep:
+                    self.index.postings[t] = keep
+                else:
+                    del self.index.postings[t]
+        self._dense_ok = False
+        return sub
+
+    def absorb(self, sub: InvertedIndex) -> None:
+        """Splice a handed-off (or freshly built) stripe in. Doc-id
+        ranges may interleave with what the shard already owns, so each
+        touched postings list re-sorts by doc id."""
+        dup = set(sub.doc_len) & set(self.index.doc_len)
+        if dup:
+            raise ValueError(f"absorb: docs already owned: {sorted(dup)[:4]}")
+        self.index.doc_len.update(sub.doc_len)
+        for t, plist in sub.postings.items():
+            mine = self.index.postings.setdefault(t, [])
+            mine.extend(plist)
+            mine.sort(key=lambda p: p[0])
+        self._dense_ok = False
+
+    # -- dense form ---------------------------------------------------------
+
+    def _ensure_dense(self) -> None:
+        if self._dense_ok:
+            return
+        idx = self.index
+        docs = np.asarray(idx.doc_ids(), dtype=np.int64)
+        d = len(docs)
+        self._slot_doc = docs
+        self._d_pad = max(-(-max(d, 1) // LANES) * LANES, LANES)
+        slot_of = {int(did): s for s, did in enumerate(docs)}
+        terms = sorted(idx.postings)
+        self._term_id = {t: i for i, t in enumerate(terms)}
+        t_rows = len(terms) + 1                      # +1 sentinel row
+        p = max((len(pl) for pl in idx.postings.values()), default=1)
+        post_slot = np.full((t_rows, p), self._d_pad, np.int32)
+        post_w = np.zeros((t_rows, p), np.float32)
+        st = self.stats
+        avg = st.avg_dl if st is not None else idx.avg_dl
+        k1, b = self.k1, self.b
+        for t in terms:
+            tid = self._term_id[t]
+            idf = st.idf(t) if st is not None else idx.idf(t)
+            for j, (did, tf) in enumerate(idx.postings[t]):
+                dl = idx.doc_len[did]
+                denom = tf + k1 * (1.0 - b + b * dl / avg)
+                post_slot[tid, j] = slot_of[did]
+                post_w[tid, j] = idf * tf * (k1 + 1.0) / denom
+        self._post_slot = jnp.asarray(post_slot)
+        self._post_w = jnp.asarray(post_w)
+        # Gather-form weight matrix when it fits the budget (each
+        # (term, doc) pair holds at most one posting, so a plain
+        # assignment materializes it; the extra dump column absorbs
+        # the out-of-range padding slots).
+        if t_rows * self._d_pad * 4 <= DENSE_W_BUDGET_BYTES:
+            w = np.zeros((t_rows, self._d_pad + 1), np.float32)
+            rows = np.repeat(np.arange(t_rows), post_slot.shape[1])
+            cols = np.minimum(post_slot.reshape(-1), self._d_pad)
+            w[rows, cols] = post_w.reshape(-1)
+            self._w_dense = jnp.asarray(w[:, :self._d_pad])
+        else:
+            self._w_dense = None
+        self._dense_ok = True
+
+    def query_term_ids(self, query: str) -> np.ndarray:
+        """(Q_MAX,) int32 term-id vector; unknown/absent -> sentinel."""
+        self._ensure_dense()
+        sentinel = len(self._term_id)
+        ids = [self._term_id.get(t, sentinel)
+               for t in normalize(query)[:Q_MAX]]
+        ids += [sentinel] * (Q_MAX - len(ids))
+        return np.asarray(ids, np.int32)
+
+    # -- scoring ------------------------------------------------------------
+
+    def score(self, query: str) -> jnp.ndarray:
+        """Dense (D_pad,) BM25 scores (jitted path)."""
+        qt = self.query_term_ids(query)
+        if self._w_dense is not None:
+            return _bm25_gather(self._w_dense, jnp.asarray(qt))
+        return _bm25_dense(self._post_slot, self._post_w,
+                           jnp.asarray(qt), d_pad=self._d_pad)
+
+    def score_batch(self, queries: Sequence[str]) -> jnp.ndarray:
+        """``(B, D_pad)`` dense BM25 scores for a batch of queries in
+        one jitted call (compiles per batch width B — callers should
+        pad to a fixed B)."""
+        self._ensure_dense()
+        qt = np.stack([self.query_term_ids(q) for q in queries])
+        if self._w_dense is not None:
+            return _bm25_gather_batch(self._w_dense, jnp.asarray(qt))
+        return _bm25_dense_batch(self._post_slot, self._post_w,
+                                 jnp.asarray(qt), d_pad=self._d_pad)
+
+    def score_py(self, query: str) -> Dict[int, float]:
+        """Pure-Python postings-walk baseline (global doc ids)."""
+        return bm25_scores(self.index, query, k1=self.k1, b=self.b,
+                           stats=self.stats)
+
+    def retrieve(self, query: str, k: int,
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k matching docs: ``(global doc ids (m,), scores (m,))``
+        with ``m <= k``, ordered (score desc, doc id asc). Only docs
+        with a positive BM25 score count as matches — parity with
+        ``index.topk_py(score_py(q), k)``."""
+        if k <= 0 or self.n_docs == 0:
+            return (np.zeros(0, np.int64), np.zeros(0, np.float32))
+        scores = self.score(query)
+        kq = min(_pow2_at_least(min(k, self._d_pad)), self._d_pad)
+        vals, idxs = ops.topk_select(scores, k=kq)
+        vals = np.asarray(vals)
+        idxs = np.asarray(idxs)
+        good = (vals > 0.0) & (idxs < len(self._slot_doc))
+        vals, idxs = vals[good][:k], idxs[good][:k]
+        return self._slot_doc[idxs], vals
+
+
+class CorpusSearcher:
+    """``SyntheticSearcher``-compatible front end over real shards.
+
+    ``search`` fans the query out to every attached shard (one shard =
+    single-node; the cluster attaches each replica's shard), merges by
+    (score desc, doc id asc), and materializes the candidates' trust
+    state from the corpus. A query matching nothing falls back to a
+    seeded-hash draw — every query must yield a non-empty candidate
+    set or the no-drop ledger would undercount, and a real engine
+    answers "no good match" with *something* too.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus,
+                 shards: Optional[List[IndexShard]] = None,
+                 feature_fn: Optional[Callable] = None):
+        self.corpus = corpus
+        self.shards: List[IndexShard] = list(shards or [])
+        # ``feature_fn(doc_ids) -> Dict[str, np.ndarray]`` overrides the
+        # corpus feature vectors — launchers serving a real evaluator
+        # backbone (transformer/GNN/recsys) map retrieved docs to that
+        # backbone's feature shapes here.
+        self.feature_fn = feature_fn
+        self.trust_scale = corpus.trust_scale
+        self.last_retrieve_s = 0.0     # wall time of the last search
+        self.n_searches = 0
+        self.n_fallback = 0
+
+    def retrieve(self, query: str, k: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Scatter to shards, gather + merge top-k."""
+        parts = [sh.retrieve(query, k) for sh in self.shards
+                 if sh.n_docs]
+        parts = [(d, s) for d, s in parts if len(d)]
+        if not parts:
+            return (np.zeros(0, np.int64), np.zeros(0, np.float32))
+        docs = np.concatenate([d for d, _ in parts])
+        scores = np.concatenate([s for _, s in parts])
+        order = np.lexsort((docs, -scores))[:k]
+        return docs[order], scores[order]
+
+    def _fallback_docs(self, query: str, k: int) -> np.ndarray:
+        h = abs(hash(query)) % (2 ** 31)
+        rng = np.random.default_rng(h)
+        n = self.corpus.n_docs
+        return np.sort(rng.choice(n, size=min(k, n), replace=False))
+
+    def search(self, query: str, n_results: int) -> SearchResults:
+        t0 = time.perf_counter()
+        self.n_searches += 1
+        docs, _ = self.retrieve(query, max(int(n_results), 1))
+        if len(docs) == 0:
+            self.n_fallback += 1
+            docs = self._fallback_docs(query, max(int(n_results), 1))
+        c = self.corpus
+        feats = (self.feature_fn(docs) if self.feature_fn is not None
+                 else {"x": c.features[docs]})
+        res = SearchResults(
+            url_ids=(docs.astype(np.uint32) + 1),     # 0 reserved = empty
+            buckets=c.domains[docs],
+            features=feats,
+            quality_metrics=c.quality[docs],
+            exact_trust=c.exact_trust[docs],
+        )
+        self.last_retrieve_s = time.perf_counter() - t0
+        return res
+
+
+class CorpusRetrieval:
+    """Doc-partitioned retrieval over the consistent-hash ring.
+
+    The corpus splits into ``n_partitions`` contiguous doc-id stripes;
+    partition ``p`` routes through the ring under the key
+    ``"docpart:p"`` — the same weighted-vnode hash that places tenants,
+    so replica joins/leaves move exactly the stripes ``remap_diff``
+    claims and nothing else. The cluster coordinator asks this object
+    to build a stripe's index (join, crash rebuild) or to key the
+    handoff (graceful leave).
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, n_partitions: int = 16,
+                 *, block_docs: int = 512, k1: float = BM25_K1,
+                 b: float = BM25_B,
+                 feature_fn: Optional[Callable] = None):
+        if n_partitions <= 0:
+            raise ValueError("n_partitions must be positive")
+        self.corpus = corpus
+        # forwarded to every CorpusSearcher this object mints
+        self.feature_fn = feature_fn
+        self.n_partitions = int(n_partitions)
+        self.block_docs = int(block_docs)
+        self.k1, self.b = float(k1), float(b)
+        # stripe boundaries: partition p owns [bounds[p], bounds[p+1])
+        n, m = corpus.n_docs, self.n_partitions
+        self._bounds = [-(-p * n // m) for p in range(m + 1)]
+        # Collection-global statistics, shared by every shard so a
+        # doc-partitioned fleet ranks exactly like one big index.
+        df: Dict[str, int] = {}
+        total_len = 0
+        for text in corpus.doc_text:
+            terms = normalize(text)
+            total_len += len(terms)
+            for t in set(terms):
+                df[t] = df.get(t, 0) + 1
+        self.stats = CollectionStats(
+            n_docs=n, avg_dl=max(total_len / max(n, 1), 1e-6), df=df)
+
+    @staticmethod
+    def partition_key(p: int) -> str:
+        return f"docpart:{p}"
+
+    def partition_keys(self) -> List[str]:
+        return [self.partition_key(p) for p in range(self.n_partitions)]
+
+    @staticmethod
+    def partition_index(key: str) -> int:
+        if not key.startswith("docpart:"):
+            raise ValueError(f"not a partition key: {key!r}")
+        return int(key.split(":", 1)[1])
+
+    def partition_of(self, doc_id: int) -> int:
+        return bisect_right(self._bounds, int(doc_id)) - 1
+
+    def partition_doc_ids(self, p: int) -> List[int]:
+        return list(range(self._bounds[p], self._bounds[p + 1]))
+
+    def build_partition(self, p: int) -> InvertedIndex:
+        """Index one stripe from the corpus (join / crash rebuild)."""
+        ids = self.partition_doc_ids(p)
+        return build_index([self.corpus.text(d) for d in ids], ids,
+                           block_docs=self.block_docs)
+
+    def build_shard(self, partitions: Iterable[int]) -> IndexShard:
+        shard = IndexShard(InvertedIndex(), k1=self.k1, b=self.b,
+                           stats=self.stats)
+        for p in sorted(set(int(x) for x in partitions)):
+            shard.absorb(self.build_partition(p))
+        return shard
+
+    def searcher(self, shards: List[IndexShard]) -> CorpusSearcher:
+        return CorpusSearcher(self.corpus, shards,
+                              feature_fn=self.feature_fn)
+
+    def oracle_topk(self, query: str, k: int) -> List[Tuple[int, float]]:
+        """Whole-corpus pure-Python BM25 top-k (test oracle)."""
+        full = build_index(self.corpus.doc_text,
+                           list(range(self.corpus.n_docs)),
+                           block_docs=self.block_docs)
+        return topk_py(bm25_scores(full, query, k1=self.k1, b=self.b,
+                                   stats=self.stats), k)

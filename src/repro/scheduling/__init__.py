@@ -1,7 +1,37 @@
 """Priority-aware admission & scheduling in front of the Load Shedder.
 
-Request lifecycle (who owns each hop):
+Request lifecycle (who owns each hop). The front half is the retrieval
+stage (``repro.retrieval``, optional — engines fed pre-retrieved
+candidate sets start at *arrive*):
 
+    parse    retrieval.text                 tokenize -> common-word
+       |                                    filter -> stem the raw
+       |                                    query string
+    index    retrieval.index / .shard       blocked inverted-index
+       |                                    build (per-block postings,
+       |                                    sequential merge) held as
+       |                                    doc-partitioned IndexShards
+       |                                    owned by replicas through
+       |                                    the consistent-hash ring
+       |                                    (``"docpart:p"`` keys);
+       |                                    dense static-shape postings
+       |                                    with precomputed BM25
+       |                                    per-posting weights,
+       |                                    collection-GLOBAL stats so
+       |                                    a sharded fleet ranks like
+       |                                    one big index
+    retrieve ServingEngine.enqueue_query    jitted BM25 segment-sum ->
+       |     (retrieval.CorpusSearcher)     Pallas ``topk_select``
+       |                                    per shard, scatter-gather
+       |                                    merge (score desc, doc id
+       |                                    asc) picks the candidate
+       |                                    set; measured retrieve
+       |                                    latency feeds the
+       |                                    LoadMonitor under the
+       |                                    WarmupGate rule so
+       |                                    Ucapacity reflects the
+       |                                    whole pipeline
+       |
     arrive   ServingEngine.enqueue          stamp arrival + SLO deadline
        |
     admit    scheduling.priorities          per-regime priority ladder
@@ -103,11 +133,16 @@ gossip -> join/leave``:
     join/    cluster.coordinator            runtime membership: fence +
     leave                                   drain-and-handoff (EDF
                                             order) on leave — queued
-                                            work AND the top-K freshest
-                                            Trust-DB entries ship to
-                                            the ring's new owners (warm
+                                            work, the top-K freshest
+                                            Trust-DB entries (warm
                                             handoff via the gossip
-                                            apply_trust_deltas path) —
+                                            apply_trust_deltas path),
+                                            AND the doc-partition index
+                                            stripes remap_diff claims
+                                            (postings travel
+                                            export_docs -> absorb; a
+                                            crash rebuilds them from
+                                            the corpus on survivors) —
                                             admission-journal replay on
                                             crash, autoscaler-voted
                                             joins and leaves between

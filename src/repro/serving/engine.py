@@ -1,7 +1,10 @@
 """Batched serving engine: priority scheduler + Load Shedder admission.
 
-Request lifecycle: arrive -> admit (``repro.scheduling`` priority ladder
-+ per-tenant rate limits) -> EDF queue -> micro-batch -> shed (the
+Request lifecycle: arrive (a raw query string via ``enqueue_query`` —
+parse -> index lookup -> BM25 top-k retrieve through the attached
+``repro.retrieval`` searcher — or a pre-retrieved candidate set via
+``enqueue``) -> admit (``repro.scheduling`` priority ladder +
+per-tenant rate limits) -> EDF queue -> micro-batch -> shed (the
 paper's three-tier ladder decides EVAL / CACHED / PRIOR per coalesced
 batch) -> response. LM decode requests additionally claim KV slots
 (continuous batching via ``KVCachePool``).
@@ -34,7 +37,7 @@ import numpy as np
 
 from repro.configs.base import TrustIRConfig
 from repro.core.fused_shedder import FusedLoadShedder
-from repro.core.load_monitor import LoadMonitor
+from repro.core.load_monitor import LoadMonitor, WarmupGate
 from repro.core.shedder import LoadShedder, ShedResult, SimClock
 from repro.scheduling import (Priority, Request, Response, Scheduler,
                               SchedulerConfig)
@@ -67,7 +70,8 @@ class ServingEngine:
                  kv_pool=None, request_ids=None,
                  drain_mode: Optional[str] = None,
                  evaluate_batch: Optional[Callable] = None,
-                 fused_max_evals: Optional[int] = None):
+                 fused_max_evals: Optional[int] = None,
+                 retriever=None):
         """``drain_mode`` (default ``cfg.drain_mode``) selects the
         micro-batch executor: ``"host"`` is the chunked wall-clock-
         deadline path (paper figures), ``"fused"`` runs one jitted
@@ -78,7 +82,13 @@ class ServingEngine:
         it for both is the common case). ``fused_max_evals`` caps the
         fused evaluator batch width (default: the full padded batch —
         always tier-exact; a smaller cap saves evaluator FLOPs on
-        warm-cache traffic but demotes overflow evals to the prior)."""
+        warm-cache traffic but demotes overflow evals to the prior).
+
+        ``retriever`` (a ``retrieval.CorpusSearcher`` or anything with
+        ``search(query, n) -> SearchResults``) enables
+        :meth:`enqueue_query` — raw query strings in, candidate sets
+        out — with the retrieve stage's measured latency folded into
+        the LoadMonitor under the WarmupGate rule."""
         self.cfg = cfg
         self.monitor = LoadMonitor(cfg)
         mode = drain_mode or getattr(cfg, "drain_mode", "host")
@@ -103,6 +113,10 @@ class ServingEngine:
         self._ids = request_ids if request_ids is not None \
             else itertools.count()
         self.completed: List[Response] = []
+        # Retrieval front end (repro.retrieval): optional — engines fed
+        # pre-retrieved candidate sets never touch it.
+        self.retriever = retriever
+        self._retrieval_gate = WarmupGate()
 
     # The scheduler executes whatever shedder the engine carries, so the
     # two references stay one (baseline drivers swap in ProcessAll/RLSEDA
@@ -147,6 +161,51 @@ class ServingEngine:
         if rejection is not None:
             self.completed.append(rejection)
         return rid
+
+    def note_retrieval(self, n_items: int, elapsed_s: float,
+                       features: Dict[str, np.ndarray]) -> None:
+        """Fold a retrieve stage's measured latency into the
+        LoadMonitor, under the same WarmupGate rule the drain executors
+        use: the first sight of a (quantized item count, feature
+        shapes) signature is jit/index warmup — its elapsed time
+        measures compilation, not retrieval — and is skipped. Wall
+        clocks only: a simulated timeline advances by item rate, and
+        mixing real seconds into it would corrupt the EWMA."""
+        if self.sim_clock is not None or n_items <= 0:
+            return
+        # Quantize the count the way the device path does (top-k pads
+        # to a power of two), so one warmup skip covers its jit bucket.
+        q = 1 << max(int(n_items) - 1, 0).bit_length()
+        sig = ("retrieve", q) + WarmupGate.signature(0, features)[1:]
+        if self._retrieval_gate.warm(sig):
+            self.monitor.observe(n_items, elapsed_s)
+
+    def enqueue_query(self, query: str, n_results: Optional[int] = None,
+                      slo_s: Optional[float] = None,
+                      priority: Priority = Priority.NORMAL,
+                      tenant: str = "default",
+                      needs_kv_slot: bool = False) -> int:
+        """The full front half: parse -> retrieve -> admit. Takes a raw
+        query string, retrieves its BM25 top-k candidate set from the
+        attached ``retriever``, and enqueues it like any pre-retrieved
+        request. Retrieval latency feeds the LoadMonitor (see
+        :meth:`note_retrieval`) so Ucapacity reflects the whole
+        pipeline, not just the evaluator."""
+        if self.retriever is None:
+            raise RuntimeError(
+                "enqueue_query needs a retriever (pass retriever= or "
+                "use enqueue with a pre-retrieved candidate set)")
+        k = (n_results if n_results is not None
+             else getattr(self.cfg, "retrieve_top_k", 64))
+        t0 = time.perf_counter()
+        res = self.retriever.search(query, k)
+        elapsed = time.perf_counter() - t0
+        feats = dict(res.features)
+        feats["trust"] = res.exact_trust    # oracle evaluators may use it
+        self.note_retrieval(len(res.url_ids), elapsed, feats)
+        return self.enqueue(res.url_ids, res.buckets, feats,
+                            slo_s=slo_s, priority=priority,
+                            tenant=tenant, needs_kv_slot=needs_kv_slot)
 
     def drain(self, max_batches: Optional[int] = None,
               flush: Optional[bool] = None) -> List[Response]:

@@ -123,6 +123,13 @@ class MultiTenantWorkload:
     tenants: List[TenantSpec]
     n_queries: int = 200                # total, split by tenant qps share
     seed: int = 0
+    # A ``retrieval.ZipfQueryModel`` (or any ``sample(rng) -> str``):
+    # arrivals then carry query strings drawn from the SAME Zipf vocab
+    # the corpus generator used, so hot-term floods hit the same docs
+    # across tenants — the correlation the gossip/dedup benches assume
+    # (one tenant's cache fill answers a sibling's repeat of the hot
+    # term). None keeps the legacy per-arrival unique query string.
+    query_model: Optional[object] = None
 
 
 @dataclass
@@ -179,9 +186,13 @@ def _draw_priority(rng: np.random.Generator,
 
 
 def make_arrivals(wl: MultiTenantWorkload
-                  ) -> List[Tuple[float, TenantSpec, Priority, int]]:
+                  ) -> List[Tuple[float, TenantSpec, Priority, int, str]]:
     """Merged per-tenant Poisson processes:
-    ``[(t_arrival, tenant, priority, n_results), ...]`` time-sorted."""
+    ``[(t_arrival, tenant, priority, n_results, query), ...]``
+    time-sorted. Queries come from ``wl.query_model`` when set (drawn
+    in arrival order from a separate rng stream, so attaching a model
+    never perturbs the timing/priority/size draws); the default is the
+    legacy per-arrival unique string ``"{tenant}_{t:.6f}"``."""
     rng = np.random.default_rng(wl.seed)
     total_qps = sum(t.qps for t in wl.tenants)
     events = []
@@ -195,7 +206,14 @@ def make_arrivals(wl: MultiTenantWorkload
             events.append((t, tn, _draw_priority(rng, tn.priority_mix),
                            n_res))
     events.sort(key=lambda e: e[0])
-    return events
+    # Query strings assign AFTER the sort so the draw order (and thus
+    # which arrival gets which hot term) is the global arrival order —
+    # deterministic and independent of the per-tenant loop above.
+    qrng = np.random.default_rng(wl.seed + 0x5eed)
+    return [(t, tn, prio, n_res,
+             (wl.query_model.sample(qrng) if wl.query_model is not None
+              else f"{tn.name}_{t:.6f}"))
+            for t, tn, prio, n_res in events]
 
 
 def run_scheduled_workload(engine, searcher: SyntheticSearcher,
@@ -206,10 +224,10 @@ def run_scheduled_workload(engine, searcher: SyntheticSearcher,
     reaches the batch budget, plus a final flush."""
     clock = engine.sim_clock
     n0 = len(engine.completed)
-    for t_arr, tenant, prio, n_res in make_arrivals(wl):
+    for t_arr, tenant, prio, n_res, query in make_arrivals(wl):
         if clock is not None:
             clock.t = max(clock.t, t_arr)
-        res = searcher.search(f"{tenant.name}_{t_arr:.6f}", n_res)
+        res = searcher.search(query, n_res)
         feats = dict(res.features)
         feats["trust"] = res.exact_trust    # oracle evaluators may use it
         engine.enqueue(res.url_ids, res.buckets, feats,
@@ -239,8 +257,8 @@ def run_cluster_workload(coordinator, searcher: SyntheticSearcher,
     scans) fires whenever the fleet backlog reaches one per-replica
     batch budget, plus a final flush."""
     n0 = len(coordinator.completed)
-    for t_arr, tenant, prio, n_res in make_arrivals(wl):
-        res = searcher.search(f"{tenant.name}_{t_arr:.6f}", n_res)
+    for t_arr, tenant, prio, n_res, query in make_arrivals(wl):
+        res = searcher.search(query, n_res)
         feats = dict(res.features)
         feats["trust"] = res.exact_trust
         coordinator.enqueue(res.url_ids, res.buckets, feats,
@@ -328,11 +346,11 @@ def run_churn_workload(coordinator, searcher: SyntheticSearcher,
         round_s = (coordinator.max_batch_items / rate
                    if rate else 0.05)
     next_drain = round_s
-    for t_arr, tenant, prio, n_res in make_arrivals(wl):
+    for t_arr, tenant, prio, n_res, query in make_arrivals(wl):
         while ci < len(churn) and churn[ci].t <= t_arr:
             log.append(_apply_churn(coordinator, churn[ci]))
             ci += 1
-        res = searcher.search(f"{tenant.name}_{t_arr:.6f}", n_res)
+        res = searcher.search(query, n_res)
         feats = dict(res.features)
         feats["trust"] = res.exact_trust
         coordinator.enqueue(res.url_ids, res.buckets, feats,

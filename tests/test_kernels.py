@@ -250,3 +250,54 @@ def test_eval_indices_from_rank_matches_gather(n_valid, ucap, budget,
     assert bool(jnp.all(valid_o == valid_k))
     assert bool(jnp.all(jnp.where(valid_o, idx_o, -1)
                         == jnp.where(valid_k, idx_k, -1)))
+
+
+# ---------------------------------------------------------------------------
+# topk_select (retrieval candidate selection)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [
+    (5, 3),            # sub-block, k < n
+    (128, 8),          # one lane row
+    (1024, 16),        # one (8,128) block exactly
+    (1500, 100),       # ragged tail block
+    (3000, 1024),      # k spans multiple candidate rows
+    (17, 17),          # k == n
+    (2048, 1),         # single winner
+])
+def test_topk_select_matches_ref(n, k):
+    r = np.random.default_rng(n * 1000 + k)
+    # heavy ties: quantized scores force index tie-breaks everywhere
+    scores = jnp.asarray(np.round(r.normal(size=n) * 4) / 4, jnp.float32)
+    vals, idxs = ops.topk_select(scores, k=k, interpret=True)
+    vref, iref = ref.topk_select_ref(scores, k)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(iref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vref))
+
+
+def test_topk_select_all_neg_inf_and_duplicates():
+    """Padding-valued inputs must not wedge the selection loop, and a
+    run of identical scores must come out in ascending index order."""
+    neg = jnp.full((256,), ref.NEG_INF, jnp.float32)
+    vals, idxs = ops.topk_select(neg, k=8, interpret=True)
+    assert sorted(np.asarray(idxs).tolist()) == \
+        np.asarray(idxs).tolist()                  # unique ascending
+    assert len(set(np.asarray(idxs).tolist())) == 8
+    same = jnp.ones((300,), jnp.float32) * 2.5
+    vals, idxs = ops.topk_select(same, k=12, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idxs), np.arange(12))
+    np.testing.assert_allclose(np.asarray(vals), np.full(12, 2.5))
+
+
+@given(st.integers(1, 600), st.integers(1, 64), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_topk_select_hypothesis(n, k, seed):
+    k = min(k, n)
+    r = np.random.default_rng(seed)
+    scores = jnp.asarray(
+        np.round(r.normal(size=n) * 8) / 8, jnp.float32)
+    vals, idxs = ops.topk_select(scores, k=k, interpret=True)
+    vref, iref = ref.topk_select_ref(scores, k)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(iref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vref))

@@ -1,0 +1,337 @@
+"""The sharded retrieval front end (ISSUE 6): blocked inverted-index
+construction determinism, collection-global BM25 parity between the
+dense jitted shard path and the pure-Python oracle, doc-partition
+ownership moving through the consistent-hash ring exactly as
+``remap_diff`` claims on join / graceful leave / crash, and raw query
+strings flowing end to end (engine + fleet) under the no-drop
+invariant."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterCoordinator
+from repro.configs.base import reduced
+from repro.configs.trust_ir import smoke_config
+from repro.retrieval import (CollectionStats, CorpusRetrieval,
+                             CorpusSearcher, IndexShard, SyntheticCorpus,
+                             ZipfQueryModel, bm25_scores, build_index,
+                             index_checksum, merge_indexes, normalize,
+                             stem, tokenize, topk_py)
+from repro.scheduling import Priority
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return SyntheticCorpus(n_docs=192, vocab_size=256, doc_len=24,
+                           seed=3)
+
+
+@pytest.fixture(scope="module")
+def retrieval(corpus):
+    return CorpusRetrieval(corpus, n_partitions=8, block_docs=48)
+
+
+def _queries(corpus, n, seed=11):
+    qm = ZipfQueryModel.for_corpus(corpus, seed=seed)
+    return [qm.sample() for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# text analysis
+# ---------------------------------------------------------------------------
+
+def test_text_pipeline():
+    assert tokenize("The QUICK brown-fox, 42!") == \
+        ["the", "quick", "brown", "fox", "42"]
+    assert stem("running") == "runn"
+    assert stem("is") == "is"            # short words keep their tail
+    # stopwords drop, inflections collapse onto their stem
+    assert normalize("the running dogs and a dog") == \
+        ["runn", "dog", "dog"]
+
+
+# ---------------------------------------------------------------------------
+# index construction: determinism + merge discipline
+# ---------------------------------------------------------------------------
+
+def test_index_identical_across_block_sizes(corpus):
+    ids = list(range(corpus.n_docs))
+    texts = [corpus.text(d) for d in ids]
+    ref = build_index(texts, ids, block_docs=7)
+    for bd in (1, 16, 48, 1000):
+        idx = build_index(texts, ids, block_docs=bd)
+        assert idx.postings == ref.postings
+        assert idx.doc_len == ref.doc_len
+        assert index_checksum(idx) == index_checksum(ref)
+
+
+def test_same_seed_same_corpus_same_checksum():
+    a = SyntheticCorpus(n_docs=64, vocab_size=128, seed=9)
+    b = SyntheticCorpus(n_docs=64, vocab_size=128, seed=9)
+    ids = list(range(64))
+    assert index_checksum(build_index([a.text(d) for d in ids], ids)) \
+        == index_checksum(build_index([b.text(d) for d in ids], ids))
+    c = SyntheticCorpus(n_docs=64, vocab_size=128, seed=10)
+    assert index_checksum(build_index([c.text(d) for d in ids], ids)) \
+        != index_checksum(build_index([a.text(d) for d in ids], ids))
+
+
+def test_merge_rejects_overlapping_blocks(corpus):
+    ids = list(range(8))
+    texts = [corpus.text(d) for d in ids]
+    a = build_index(texts[:5], ids[:5])
+    b = build_index(texts[3:], ids[3:])          # overlaps a
+    with pytest.raises(ValueError):
+        merge_indexes([a, b])
+
+
+# ---------------------------------------------------------------------------
+# BM25: dense jitted shard path vs pure-Python oracle
+# ---------------------------------------------------------------------------
+
+def test_single_shard_retrieve_matches_py_oracle(corpus):
+    ids = list(range(corpus.n_docs))
+    shard = IndexShard.build([corpus.text(d) for d in ids], ids)
+    for q in _queries(corpus, 15):
+        want = topk_py(shard.score_py(q), 10)
+        docs, scores = shard.retrieve(q, 10)
+        assert docs.tolist() == [d for d, _ in want]
+        np.testing.assert_allclose(
+            scores, [s for _, s in want], rtol=2e-5, atol=2e-6)
+
+
+def test_gather_and_scatter_scorers_agree(corpus):
+    """The dense gather-form scorer (W[qt].sum) and the postings
+    scatter-add fallback are the same function; the bench's speedup
+    claim must not change what gets ranked."""
+    ids = list(range(corpus.n_docs))
+    shard = IndexShard.build([corpus.text(d) for d in ids], ids)
+    qs = _queries(corpus, 8)
+    shard._ensure_dense()
+    assert shard._w_dense is not None
+    via_gather = [np.asarray(shard.score(q)) for q in qs]
+    via_gather_b = np.asarray(shard.score_batch(qs))
+    shard._w_dense = None          # force the scatter fallback
+    for q, want in zip(qs, via_gather):
+        np.testing.assert_allclose(np.asarray(shard.score(q)), want,
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(shard.score_batch(qs)),
+                               via_gather_b, rtol=1e-6, atol=1e-7)
+
+
+def test_retrieve_empty_and_unknown_query(corpus):
+    ids = list(range(16))
+    shard = IndexShard.build([corpus.text(d) for d in ids], ids)
+    docs, scores = shard.retrieve("zzzqqq unknownterm", 5)
+    assert len(docs) == 0 and len(scores) == 0
+    docs, _ = shard.retrieve("", 5)
+    assert len(docs) == 0
+    empty = IndexShard.build([], [])
+    assert len(empty.retrieve("term00001", 5)[0]) == 0
+
+
+def test_sharded_scatter_gather_matches_whole_corpus(retrieval, corpus):
+    """Doc-partitioned shards score with collection-GLOBAL stats, so a
+    4-way split ranks exactly like one big index."""
+    groups = [[0, 1], [2, 3], [4, 5], [6, 7]]
+    searcher = retrieval.searcher(
+        [retrieval.build_shard(g) for g in groups])
+    for q in _queries(corpus, 12, seed=5):
+        want = retrieval.oracle_topk(q, 8)
+        docs, scores = searcher.retrieve(q, 8)
+        assert docs.tolist() == [d for d, _ in want]
+        np.testing.assert_allclose(
+            scores, [s for _, s in want], rtol=2e-5, atol=2e-6)
+
+
+def test_collection_stats_matter(retrieval, corpus):
+    """Shard-local idf diverges from the oracle on skewed partitions —
+    the reason CollectionStats exists."""
+    ids = list(range(corpus.n_docs))
+    texts = [corpus.text(d) for d in ids]
+    local = IndexShard.build(texts[:40], ids[:40])        # local stats
+    with_stats = IndexShard.build(texts[:40], ids[:40],
+                                  stats=retrieval.stats)
+    q = "term00000 term00001"
+    s_local = local.score_py(q)
+    s_global = with_stats.score_py(q)
+    assert set(s_local) == set(s_global)       # same matches...
+    assert any(abs(s_local[d] - s_global[d]) > 1e-9
+               for d in s_local)               # ...different weights
+
+
+def test_export_absorb_round_trip(retrieval, corpus):
+    a = retrieval.build_shard(range(4))
+    b = retrieval.build_shard(range(4, 8))
+    docs_moving = retrieval.partition_doc_ids(2)
+    b.absorb(a.export_docs(docs_moving))
+    assert a.n_docs + b.n_docs == corpus.n_docs
+    with pytest.raises(ValueError):            # double-absorb guards
+        b.absorb(retrieval.build_partition(2))
+    searcher = retrieval.searcher([a, b])
+    for q in _queries(corpus, 8, seed=7):
+        want = retrieval.oracle_topk(q, 6)
+        docs, _ = searcher.retrieve(q, 6)
+        assert docs.tolist() == [d for d, _ in want]
+
+
+def test_searcher_fallback_never_empty(retrieval, corpus):
+    searcher = retrieval.searcher([retrieval.build_shard(range(8))])
+    res = searcher.search("qqqzz nothingmatchesthis", 10)
+    assert len(res.url_ids) == 10
+    assert searcher.n_fallback == 1
+    # deterministic: the same unmatched query draws the same docs
+    res2 = searcher.search("qqqzz nothingmatchesthis", 10)
+    np.testing.assert_array_equal(res.url_ids, res2.url_ids)
+
+
+def test_query_model_stream_independent(corpus):
+    a = ZipfQueryModel.for_corpus(corpus, seed=2)
+    b = ZipfQueryModel.for_corpus(corpus, seed=2)
+    assert [a.sample() for _ in range(10)] == \
+        [b.sample() for _ in range(10)]
+    vocab = set(corpus.vocab)
+    assert all(w in vocab for w in " ".join(
+        _queries(corpus, 20)).split())
+
+
+# ---------------------------------------------------------------------------
+# shard ownership through the ring (join / leave / crash)
+# ---------------------------------------------------------------------------
+
+def _fleet(n_replicas, retrieval):
+    cfg = reduced(smoke_config(), n_replicas=n_replicas)
+    rate = cfg.u_capacity / cfg.deadline_s
+    return ClusterCoordinator(cfg, lambda ch: np.asarray(ch["trust"]),
+                              cluster_cfg=ClusterConfig(),
+                              sim_rate_items_per_s=rate,
+                              retrieval=retrieval)
+
+
+def _owned_docs(coord):
+    """{replica_id: sorted resident doc ids} from the shards."""
+    return {r.replica_id: sorted(r.shard.index.doc_len)
+            for r in coord.replicas}
+
+
+def _assert_ownership_consistent(coord, retrieval, corpus):
+    owners = coord.partition_owners()
+    assert sorted(owners) == list(range(retrieval.n_partitions))
+    # every doc resident exactly once, on the replica owning its stripe
+    seen = []
+    for rid, docs in _owned_docs(coord).items():
+        seen.extend(docs)
+        for d in docs:
+            assert owners[retrieval.partition_of(d)] == rid
+    assert sorted(seen) == list(range(corpus.n_docs))
+
+
+def test_initial_build_matches_ring(retrieval, corpus):
+    coord = _fleet(4, retrieval)
+    _assert_ownership_consistent(coord, retrieval, corpus)
+    for p, rid in coord.partition_owners().items():
+        assert coord.ring.route(retrieval.partition_key(p)) == rid
+
+
+def test_join_moves_exactly_the_claimed_partitions(retrieval, corpus):
+    coord = _fleet(3, retrieval)
+    before = coord.partition_owners()
+    claimed = coord.ring.remap_diff(
+        retrieval.partition_keys(),
+        add=(f"r{coord.n_replicas}", 1.0))
+    h = coord.add_replica()
+    after = coord.partition_owners()
+    moved = {p for p in after if after[p] != before[p]}
+    assert moved == {retrieval.partition_index(k) for k in claimed}
+    assert all(after[p] == h.replica_id for p in moved)
+    _assert_ownership_consistent(coord, retrieval, corpus)
+
+
+def test_graceful_leave_hands_off_postings(retrieval, corpus):
+    coord = _fleet(4, retrieval)
+    victim = coord.replicas[1].replica_id
+    owned_before = [p for p, rid in coord.partition_owners().items()
+                    if rid == victim]
+    coord.remove_replica(victim, drain=True)
+    after = coord.partition_owners()
+    assert victim not in after.values()
+    _assert_ownership_consistent(coord, retrieval, corpus)
+    # graceful: postings traveled, nothing re-indexed from the corpus
+    assert coord.stats.n_partition_rebuilds == 0
+    assert coord.stats.n_partition_moves == len(owned_before)
+    # retrieval still matches the whole-corpus oracle after the move
+    q = _queries(corpus, 1, seed=13)[0]
+    want = retrieval.oracle_topk(q, 6)
+    docs, _ = coord.searcher.retrieve(q, 6)
+    assert docs.tolist() == [d for d, _ in want]
+
+
+def test_crash_rebuilds_stripes_on_survivors(retrieval, corpus):
+    coord = _fleet(4, retrieval)
+    victim = coord.replicas[2].replica_id
+    lost = [p for p, rid in coord.partition_owners().items()
+            if rid == victim]
+    coord.remove_replica(victim, drain=False)
+    _assert_ownership_consistent(coord, retrieval, corpus)
+    assert coord.stats.n_partition_rebuilds == len(lost)
+
+
+# ---------------------------------------------------------------------------
+# end to end: query strings in, exactly one response out
+# ---------------------------------------------------------------------------
+
+def test_engine_enqueue_query_no_drop(retrieval, corpus):
+    cfg = reduced(smoke_config())
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["trust"]),
+                        retriever=retrieval.searcher(
+                            [retrieval.build_shard(range(8))]))
+    rids = [eng.enqueue_query(q, n_results=12,
+                              slo_s=10.0, priority=Priority.NORMAL)
+            for q in _queries(corpus, 10, seed=21)]
+    eng.drain()
+    assert sorted(r.request_id for r in eng.completed) == sorted(rids)
+    assert all(len(r.trust) > 0 for r in eng.completed)
+
+
+def test_engine_without_retriever_raises():
+    cfg = reduced(smoke_config())
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]))
+    with pytest.raises(RuntimeError):
+        eng.enqueue_query("term00001")
+
+
+def test_fleet_enqueue_query_no_drop_across_churn(retrieval, corpus):
+    coord = _fleet(4, retrieval)
+    qs = _queries(corpus, 24, seed=31)
+    rids = [coord.enqueue_query(q, n_results=10, slo_s=50.0,
+                                tenant=f"t{i % 6}", t_arrival=i * 0.01)
+            for i, q in enumerate(qs[:12])]
+    coord.add_replica()
+    coord.remove_replica(coord.replicas[0].replica_id, drain=True)
+    rids += [coord.enqueue_query(q, n_results=10, slo_s=50.0,
+                                 tenant=f"t{i % 6}",
+                                 t_arrival=0.12 + i * 0.01)
+             for i, q in enumerate(qs[12:])]
+    coord.drain()
+    assert sorted(r.request_id for r in coord.completed) == sorted(rids)
+    _assert_ownership_consistent(coord, retrieval, corpus)
+
+
+def test_simulator_query_model_feeds_real_searcher(retrieval, corpus):
+    """The simulator's arrival stream drives a real CorpusSearcher when
+    a query model is attached (hot terms -> same docs across tenants)."""
+    from repro.serving.simulator import (MultiTenantWorkload, TenantSpec,
+                                         run_cluster_workload)
+    coord = _fleet(2, retrieval)
+    wl = MultiTenantWorkload(
+        tenants=[TenantSpec("a", qps=50.0, min_results=8,
+                            max_results=32, slo_s=50.0),
+                 TenantSpec("b", qps=50.0, min_results=8,
+                            max_results=32, slo_s=50.0)],
+        n_queries=30, seed=5,
+        query_model=ZipfQueryModel.for_corpus(corpus, seed=41))
+    rep = run_cluster_workload(coord, coord.searcher, wl)
+    assert len(rep.responses) == len(set(
+        r.request_id for r in rep.responses))
+    assert rep.summary()["n_responses"] >= 30
+    assert coord.searcher.n_searches >= 30
