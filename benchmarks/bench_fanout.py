@@ -1,0 +1,247 @@
+"""Tail-tolerant scatter-gather acceptance (repro.fanout, ISSUE 7).
+
+A 32-shard fan-out with injected stragglers (one persistent x12 shard
+plus rare transient heavy-tail pauses) is the paper's overload tail in
+miniature: the synchronous gather waits for the slowest probe, so its
+p99 rides the straggler. Four checks, one JSON gate:
+
+**Tail** — first-(n-slack)-of-n quorum gather + per-shard hedging vs
+the synchronous full gather on identical per-probe service times
+(counter-based draws, so both runs see the same primaries). Targets:
+quorum p99 >= 2x better than full-gather p99; recall\\@10 overlap vs
+the full gather >= 0.95 (late stripes prior-answered from the stripe
+answer cache, which hot Zipf repeats keep warm); zero drops (every
+query answered, exactly once).
+
+**Parity** — ``quorum_k == n`` with the service model attached is
+bit-identical to the plain synchronous :class:`CorpusSearcher`: same
+doc ids, same (score desc, doc id asc) order, scores ``array_equal``.
+
+**Determinism** — the whole treatment pipeline (quorum + hedges +
+replication maintenance) replayed from fresh state reproduces the same
+answers AND the same simulated gather times, bit for bit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+STRAGGLER_KEY = "s5"          # persistent straggler (degraded disk)
+TOP_K = 10                    # recall@10 per the gate
+
+
+def _build(n_docs: int, n_shards: int, seed: int):
+    from repro.retrieval import CorpusRetrieval, SyntheticCorpus
+    corpus = SyntheticCorpus(n_docs=n_docs, seed=seed)
+    retrieval = CorpusRetrieval(corpus, n_partitions=n_shards)
+    shards = [retrieval.build_shard([p]) for p in range(n_shards)]
+    keys = [f"s{p}" for p in range(n_shards)]
+    return retrieval, shards, keys
+
+
+def _model(seed: int, straggler_mult: float):
+    from repro.fanout import ShardServiceModel
+    m = ShardServiceModel(straggler_p=0.004, seed=seed)
+    m.set_persistent(STRAGGLER_KEY, straggler_mult)
+    return m
+
+
+def _treatment(retrieval, shards, keys, quorum_k: int, seed: int,
+               straggler_mult: float, hedge_ms: float):
+    from repro.fanout import FanoutSearcher
+    return FanoutSearcher(
+        retrieval.corpus, list(shards), keys, quorum_k=quorum_k,
+        service_model=_model(seed, straggler_mult),
+        hedge_after_s=hedge_ms / 1e3, feature_fn=retrieval.feature_fn)
+
+
+def _run(searcher, queries: List[str], maintain: bool = False
+         ) -> List[Tuple[list, np.ndarray]]:
+    out = []
+    for q in queries:
+        docs, scores = searcher.retrieve(q, TOP_K)
+        if maintain:
+            searcher.maintain()
+        out.append((docs.tolist(), scores))
+    return out
+
+
+def _query_log(retrieval, n_queries: int, seed: int) -> List[str]:
+    """Query-level Zipf log: real search traffic repeats a head of hot
+    queries (what the Trust-DB and the stripe answer cache are built
+    around), so the log draws from a pool with Zipf-ranked repeats
+    rather than sampling a fresh query every time."""
+    from repro.retrieval import ZipfQueryModel
+    qm = ZipfQueryModel.for_corpus(retrieval.corpus, seed=seed + 17)
+    pool = [qm.sample() for _ in range(max(n_queries // 3, 8))]
+    rng = np.random.default_rng(seed + 53)
+    idx = np.minimum(rng.zipf(1.3, size=n_queries) - 1, len(pool) - 1)
+    return [pool[i] for i in idx]
+
+
+def run_tail(retrieval, shards, keys, n_queries: int, seed: int,
+             slack: int = 2, hedge_ms: float = 1.0,
+             straggler_mult: float = 12.0) -> Dict:
+    """Quorum + hedged gather vs synchronous full gather, same draws."""
+    n = len(shards)
+    queries = _query_log(retrieval, n_queries, seed)
+
+    # Full gather (quorum off) on the same seeded service model: its
+    # answers are the ground truth (bit-identical to the synchronous
+    # searcher — run_parity certifies that) and its gather time is the
+    # slowest-probe baseline the quorum run is graded against.
+    full = _treatment(retrieval, shards, keys, quorum_k=0, seed=seed,
+                      straggler_mult=straggler_mult, hedge_ms=0.0)
+    truth = _run(full, queries)
+
+    treat = _treatment(retrieval, shards, keys, quorum_k=n - slack,
+                       seed=seed, straggler_mult=straggler_mult,
+                       hedge_ms=hedge_ms)
+    got = _run(treat, queries, maintain=True)
+
+    overlaps = [len(set(d) & set(td)) / max(len(td), 1)
+                for (d, _), (td, _) in zip(got, truth)]
+    p99_full = float(np.percentile(full.full_times, 99))
+    p99_quorum = float(np.percentile(treat.gather_times, 99))
+    speedup = p99_full / max(p99_quorum, 1e-12)
+    return {
+        "n_shards": n, "quorum_k": n - slack, "slack": slack,
+        "hedge_after_ms": hedge_ms,
+        "straggler": {"key": STRAGGLER_KEY, "mult": straggler_mult,
+                      "transient_p": full.service_model.straggler_p},
+        "full_p50_s": float(np.percentile(full.full_times, 50)),
+        "full_p99_s": p99_full,
+        "quorum_p50_s": float(np.percentile(treat.gather_times, 50)),
+        "quorum_p99_s": p99_quorum,
+        "p99_speedup": speedup,
+        "overlap_at_10_mean": float(np.mean(overlaps)),
+        "overlap_at_10_min": float(np.min(overlaps)),
+        "n_late_shards": treat.n_late_shards,
+        "n_cache_fills": treat.n_cache_fills,
+        "n_prior_answered": treat.n_prior_answered,
+        "n_shard_hedges": treat.n_shard_hedges,
+        "n_shard_hedge_wins": treat.n_shard_hedge_wins,
+        "n_mirrors_built": treat.n_mirrors_built,
+        "p99_ok": bool(speedup >= 2.0),
+        "recall_ok": bool(np.mean(overlaps) >= 0.95),
+        "no_drop_ok": bool(treat.n_gathers == n_queries
+                           and all(len(d) > 0 for d, _ in got)),
+    }
+
+
+def run_parity(retrieval, shards, keys, n_queries: int = 32,
+               seed: int = 0) -> Dict:
+    """quorum_k == n + service model vs plain synchronous searcher."""
+    from repro.fanout import FanoutSearcher
+    from repro.retrieval import ZipfQueryModel
+    from repro.retrieval.shard import CorpusSearcher
+    plain = CorpusSearcher(retrieval.corpus, list(shards),
+                           feature_fn=retrieval.feature_fn)
+    fan = _treatment(retrieval, shards, keys, quorum_k=len(shards),
+                     seed=seed, straggler_mult=12.0, hedge_ms=3.0)
+    qm = ZipfQueryModel.for_corpus(retrieval.corpus, seed=seed + 29)
+    n_mismatch = 0
+    for _ in range(n_queries):
+        q = qm.sample()
+        d0, s0 = plain.retrieve(q, TOP_K)
+        d1, s1 = fan.retrieve(q, TOP_K)
+        if d0.tolist() != d1.tolist() or not np.array_equal(s0, s1):
+            n_mismatch += 1
+    return {"n_queries": n_queries, "n_mismatch": n_mismatch,
+            "parity_ok": bool(n_mismatch == 0 and n_queries > 0)}
+
+
+def run_determinism(retrieval, shards, keys, n_queries: int = 48,
+                    seed: int = 0) -> Dict:
+    """Fresh-state replay of the full treatment pipeline is bitwise
+    identical: answers, scores, and simulated gather times."""
+    from repro.retrieval import ZipfQueryModel
+    n = len(shards)
+
+    def once():
+        qm = ZipfQueryModel.for_corpus(retrieval.corpus, seed=seed + 41)
+        tr = _treatment(retrieval, shards, keys, quorum_k=n - 2,
+                        seed=seed, straggler_mult=12.0, hedge_ms=3.0)
+        got = _run(tr, [qm.sample() for _ in range(n_queries)],
+                   maintain=True)
+        return got, list(tr.gather_times), tr.n_shard_hedges
+
+    (g0, t0, h0), (g1, t1, h1) = once(), once()
+    same = (all(d0 == d1 and np.array_equal(s0, s1)
+                for (d0, s0), (d1, s1) in zip(g0, g1))
+            and t0 == t1 and h0 == h1)
+    return {"n_queries": n_queries, "n_hedges": h0,
+            "determinism_ok": bool(same)}
+
+
+def main(n_queries: int = 400, seed: int = 0, n_docs: int = 4096,
+         n_shards: int = 32) -> Dict:
+    if n_queries <= 0:
+        raise SystemExit("bench_fanout: --n-queries must be positive")
+    t0 = time.perf_counter()
+    retrieval, shards, keys = _build(n_docs, n_shards, seed)
+    t_build = time.perf_counter() - t0
+    tail = run_tail(retrieval, shards, keys, n_queries, seed)
+    parity = run_parity(retrieval, shards, keys, seed=seed)
+    det = run_determinism(retrieval, shards, keys, seed=seed)
+    out = {
+        "n_docs": n_docs, "n_shards": n_shards, "n_queries": n_queries,
+        "build_s": t_build,
+        "tail": tail, "parity": parity, "determinism": det,
+        "p99_ok": tail["p99_ok"], "recall_ok": tail["recall_ok"],
+        "no_drop_ok": tail["no_drop_ok"],
+        "parity_ok": parity["parity_ok"],
+        "determinism_ok": det["determinism_ok"],
+    }
+
+    print(f"{n_docs} docs -> {n_shards} shards, {n_queries} Zipf "
+          f"queries; straggler {tail['straggler']['key']} "
+          f"x{tail['straggler']['mult']:.0f} persistent + "
+          f"p={tail['straggler']['transient_p']} transient tail "
+          f"({t_build:.1f}s build)")
+    print(f"  full gather   p50 {tail['full_p50_s']*1e3:6.1f}ms   "
+          f"p99 {tail['full_p99_s']*1e3:6.1f}ms")
+    print(f"  quorum {tail['quorum_k']}/{tail['n_shards']} hedged "
+          f"p50 {tail['quorum_p50_s']*1e3:6.1f}ms   "
+          f"p99 {tail['quorum_p99_s']*1e3:6.1f}ms   -> "
+          f"{tail['p99_speedup']:.1f}x p99 "
+          f"({'PASS' if tail['p99_ok'] else 'FAIL'}: target >= 2x)")
+    print(f"  recall@10 overlap mean {tail['overlap_at_10_mean']:.3f} "
+          f"min {tail['overlap_at_10_min']:.2f} "
+          f"({'PASS' if tail['recall_ok'] else 'FAIL'}: >= 0.95); "
+          f"late stripes {tail['n_late_shards']} -> "
+          f"{tail['n_cache_fills']} cache-answered + "
+          f"{tail['n_prior_answered']} trust-prior")
+    print(f"  hedges {tail['n_shard_hedges']} "
+          f"({tail['n_shard_hedge_wins']} wins), mirrors built "
+          f"{tail['n_mirrors_built']}; no-drop "
+          f"{'PASS' if tail['no_drop_ok'] else 'FAIL'}")
+    print(f"  quorum_k==n parity: {parity['n_queries']} queries, "
+          f"{parity['n_mismatch']} mismatches "
+          f"({'PASS' if parity['parity_ok'] else 'FAIL'})")
+    print(f"  replay determinism: {det['n_queries']} queries incl. "
+          f"{det['n_hedges']} hedges "
+          f"({'PASS' if det['determinism_ok'] else 'FAIL'})")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-queries", type=int, default=400)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced corpus + workload for CI (still 32 "
+                         "shards — the tail gate's fan-out width)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = (main(n_queries=min(args.n_queries, 120), seed=args.seed,
+                 n_docs=768) if args.quick
+            else main(n_queries=args.n_queries, seed=args.seed))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

@@ -3,6 +3,11 @@ harness. Prints ``name,us_per_call,derived`` CSV rows per the repo
 convention, followed by the human-readable sections. ``--quick``
 shrinks the parameterizable workloads (scheduler / cluster / fused
 drain) so a CI run finishes in minutes.
+
+Every ``BENCH_*.json``-writing bench reports boolean ``*_ok`` gates;
+the orchestrator collects them all and exits non-zero if ANY gate
+fails, so a regression fails CI instead of merely flipping a field in
+an artifact nobody reads.
 """
 from __future__ import annotations
 
@@ -19,15 +24,22 @@ def _timed(name, fn):
     return name, dt_us, out
 
 
-def main(quick: bool = False) -> None:
+def _gates(name, rows):
+    """Top-level ``*_ok`` booleans of one bench's row dict."""
+    return {f"{name}:{k}": bool(v) for k, v in rows.items()
+            if k.endswith("_ok") and isinstance(v, bool)}
+
+
+def main(quick: bool = False) -> int:
     from benchmarks import (bench_adaptive, bench_cluster,
-                            bench_elastic, bench_fused_drain,
-                            bench_heavy_load, bench_response_time,
-                            bench_retrieval, bench_roofline,
-                            bench_scheduler, bench_throughput,
-                            bench_very_heavy_load)
+                            bench_elastic, bench_fanout,
+                            bench_fused_drain, bench_heavy_load,
+                            bench_response_time, bench_retrieval,
+                            bench_roofline, bench_scheduler,
+                            bench_throughput, bench_very_heavy_load)
 
     csv_rows = []
+    gates = {}
 
     print("=" * 72)
     print("Fig 3.1(a) — Heavy load (Existing vs RLS-EDA vs Proposed)")
@@ -70,6 +82,7 @@ def main(quick: bool = False) -> None:
         else bench_scheduler.main)
     csv_rows.append((name, us,
                      f"{rows['speedup']:.2f}x req throughput vs sync"))
+    gates.update(_gates("scheduler", rows))
     with open("BENCH_scheduler.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_scheduler.json")
@@ -86,6 +99,7 @@ def main(quick: bool = False) -> None:
     csv_rows.append((name, us,
                      f"{rows['speedup_4v1']:.2f}x items/s 4 vs 1 "
                      f"replicas"))
+    gates.update(_gates("cluster", rows))
     with open("BENCH_cluster.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_cluster.json")
@@ -103,6 +117,7 @@ def main(quick: bool = False) -> None:
                      f"churn no-drop={rows['no_drop_ok']} "
                      f"p99_ok={rows['p99_ok']} gossip "
                      f"{rows['gossip']['dup_eval_cut']:.1f}x dup cut"))
+    gates.update(_gates("elastic", rows))
     with open("BENCH_elastic.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_elastic.json")
@@ -122,9 +137,29 @@ def main(quick: bool = False) -> None:
                      f"regimes={rows['regimes_ok']} "
                      f"parity={rows['parity_ok']} scorer "
                      f"{rows['scorer']['speedup']:.1f}x jit vs py"))
+    gates.update(_gates("retrieval", rows))
     with open("BENCH_retrieval.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_retrieval.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: tail-tolerant scatter-gather — quorum, "
+          "hedging, stripe replication (repro.fanout)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "fanout",
+        (lambda: bench_fanout.main(n_queries=120, n_docs=768)) if quick
+        else bench_fanout.main)
+    csv_rows.append((name, us,
+                     f"{rows['tail']['p99_speedup']:.1f}x p99 quorum "
+                     f"vs full; recall={rows['recall_ok']} "
+                     f"parity={rows['parity_ok']} "
+                     f"det={rows['determinism_ok']}"))
+    gates.update(_gates("fanout", rows))
+    with open("BENCH_fanout.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_fanout.json")
 
     print()
     print("=" * 72)
@@ -141,6 +176,7 @@ def main(quick: bool = False) -> None:
                      f"drain; depth-{rows.get('depth_speedup_best', 1)}"
                      f" {rows.get('depth_speedup', 1.0):.2f}x vs "
                      f"depth-1"))
+    gates.update(_gates("fused_drain", rows))
     with open("BENCH_fused_drain.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_fused_drain.json")
@@ -170,10 +206,16 @@ def main(quick: bool = False) -> None:
     for name, us, derived in csv_rows:
         print(f"{name},{us:.0f},{derived}")
 
+    failed = sorted(k for k, ok in gates.items() if not ok)
+    print()
+    print(f"gates: {len(gates) - len(failed)}/{len(gates)} passed"
+          + (f"; FAILED: {', '.join(failed)}" if failed else ""))
+    return 1 if failed else 0
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads so CI finishes in minutes")
     args = ap.parse_args()
-    main(quick=args.quick)
+    sys.exit(main(quick=args.quick))

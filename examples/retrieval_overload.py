@@ -6,12 +6,16 @@ Default path is the REAL retrieve stage (``repro.retrieval``): query
 strings go parse -> sharded BM25 -> Pallas top-k, and the retrieved
 candidate set (not a synthetic one) flows into the shedder.
 ``--synthetic`` restores the original pre-retrieved 50k-candidate run.
+``--straggler`` adds the tail-win demo: the same fan-out with one
+persistently slow shard, full gather vs first-k-of-n quorum vs
+quorum + per-shard hedging (``repro.fanout``).
 
 The `retrieval_cand` assigned shape is this exact workload at 1M
 candidates on the production mesh; here we run CPU-sized corpora.
 
     PYTHONPATH=src python examples/retrieval_overload.py
     PYTHONPATH=src python examples/retrieval_overload.py --synthetic
+    PYTHONPATH=src python examples/retrieval_overload.py --straggler
 """
 import argparse
 import time
@@ -118,17 +122,66 @@ def main_retrieve(n_docs=8192, n_queries=12, top_k=2048):
           f"{searcher.n_fallback} fallback draws")
 
 
+def main_straggler(n_docs=2048, n_shards=16, n_queries=48):
+    """The straggler tail win: one shard of the fan-out turns
+    persistently x15 slow (a degraded disk). Full gather waits for it
+    every query; a first-(n-2)-of-n quorum answers at the healthy
+    pack's pace with late stripes prior-answered; hedging adds a race
+    against a sibling's mirror so the slow shard's FRESH answer still
+    usually makes the response."""
+    from repro.fanout import FanoutSearcher, ShardServiceModel
+    from repro.retrieval import (CorpusRetrieval, SyntheticCorpus,
+                                 ZipfQueryModel)
+
+    corpus = SyntheticCorpus(n_docs=n_docs, seed=0)
+    retrieval = CorpusRetrieval(corpus, n_partitions=n_shards)
+    shards = [retrieval.build_shard([p]) for p in range(n_shards)]
+    keys = [f"s{p}" for p in range(n_shards)]
+    qm = ZipfQueryModel.for_corpus(corpus, seed=1)
+    queries = [qm.sample() for _ in range(n_queries)]
+
+    def model():
+        m = ShardServiceModel(seed=7, straggler_p=0.0)
+        m.set_persistent("s3", 15.0)
+        return m
+
+    modes = [("full gather", dict(quorum_k=0)),
+             ("quorum n-2", dict(quorum_k=n_shards - 2)),
+             ("quorum n-2 + hedge", dict(quorum_k=n_shards - 2,
+                                         hedge_after_s=0.001))]
+    print(f"{n_docs:,} docs -> {n_shards} shards, shard s3 "
+          f"persistently x15 slow, {n_queries} Zipf queries")
+    print(f"  {'mode':<20} {'p50':>8} {'p99':>8} {'late':>5} "
+          f"{'hedge wins':>11}")
+    for name, kw in modes:
+        fan = FanoutSearcher(corpus, shards, keys,
+                             service_model=model(), **kw)
+        for q in queries:
+            fan.retrieve(q, 64)
+            fan.maintain()               # builds s3's mirror when due
+        ts = np.asarray(fan.gather_times)
+        print(f"  {name:<20} {np.percentile(ts, 50) * 1e3:6.1f}ms "
+              f"{np.percentile(ts, 99) * 1e3:6.1f}ms "
+              f"{fan.n_late_shards:>5} "
+              f"{fan.n_shard_hedge_wins:>4}/{fan.n_shard_hedges:<4}")
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--synthetic", action="store_true",
                    help="original pre-retrieved synthetic candidate "
                         "run (no index, no query strings)")
+    p.add_argument("--straggler", action="store_true",
+                   help="tail-win demo: full vs quorum vs quorum+hedge "
+                        "gather with one persistently slow shard")
     p.add_argument("--n-docs", type=int, default=8192)
     p.add_argument("--n-queries", type=int, default=12)
     p.add_argument("--top-k", type=int, default=2048)
     args = p.parse_args()
     if args.synthetic:
         main_synthetic()
+    elif args.straggler:
+        main_straggler()
     else:
         main_retrieve(n_docs=args.n_docs, n_queries=args.n_queries,
                       top_k=args.top_k)

@@ -38,7 +38,7 @@ live set.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +68,13 @@ class ReplicaHandle:
         # Ownership is about residency + handoff accounting — queries
         # scatter-gather across every live shard via the fleet searcher.
         self.shard = None
+        # Mirror stripes this replica HOSTS for persistently slow
+        # siblings (repro.fanout selective replication): slow replica
+        # id -> its mirrored IndexShard. Hedged shard probes land
+        # here; regular fan-out never queries a mirror (the primary
+        # already answers for those docs — exactly one answer per
+        # shard enters the merge).
+        self.mirrors: Dict[str, object] = {}
         self.clock = (SimClock(sim_rate_items_per_s)
                       if sim_rate_items_per_s is not None else None)
         # drain_mode/evaluate_batch pass straight through: a fused

@@ -149,6 +149,18 @@ class ConsistentHashRing:
         chain = self.route_chain(tenant, 2)
         return chain[1] if len(chain) > 1 else None
 
+    def sibling_for(self, key: str, *,
+                    exclude: Sequence[str] = ()) -> Optional[str]:
+        """First distinct unfenced replica clockwise from ``key`` that
+        is not in ``exclude`` — where selective stripe replication
+        places a slow shard's mirror (the same clockwise walk a
+        removal of the excluded owner would route the key to)."""
+        skip = set(exclude)
+        for rid in self.route_chain(key, len(self.weights)):
+            if rid not in skip:
+                return rid
+        return None
+
     def assignments(self, tenants: Sequence[str]) -> Dict[str, str]:
         """tenant -> replica map for a batch of tenants (observability
         and rebalance planning)."""

@@ -327,6 +327,25 @@ class TrustIRConfig:
     # before the shed ladder sees it. Quantized up to a power of two on
     # the device path, so the jit cache stays O(log k).
     retrieve_top_k: int = 64
+    # Tail-tolerant scatter-gather (repro.fanout): the gather answers
+    # at the first-quorum_k-of-n shard completions instead of waiting
+    # for the slowest shard. 0 = synchronous full gather (pre-fanout
+    # behaviour); quorum_k >= n is bit-identical to it. Late shards
+    # are prior-answered (stripe answer cache / trust prior) — the
+    # no-drop invariant is unchanged.
+    fanout_quorum_k: int = 0
+    # Per-shard probe hedging: a stripe probe slower than this races a
+    # twin on a sibling's mirror (first completion wins, loser
+    # deduplicated), charged to the SAME HedgedDispatch token bucket
+    # as whole-request hedges. 0 disables.
+    fanout_hedge_after_s: float = 0.0
+    # Selective stripe replication: a shard whose service-time EWMA
+    # exceeds slow_factor x the fleet median is mirrored onto a ring
+    # sibling (at most max_mirrors concurrent mirrors); the mirror
+    # drops once the EWMA recovers below recover_factor x median.
+    fanout_slow_factor: float = 2.5
+    fanout_recover_factor: float = 1.4
+    fanout_max_mirrors: int = 2
 
 
 # ---------------------------------------------------------------------------

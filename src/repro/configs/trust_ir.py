@@ -26,6 +26,16 @@ def config() -> TrustIRConfig:
         quality_weights=(0.5, 0.3, 0.2),
         evaluator_arch="smollm-135m",
         trust_scale=5.0,
+        # Tail-tolerant fan-out (repro.fanout), the paper's "answer
+        # from the prior rather than miss the deadline" extended to
+        # stragglers: the gather waits for all shards by default
+        # (quorum_k=0 — full trustworthy answers), but the selective-
+        # replication policy is armed so a deployment that raises
+        # quorum_k/hedging inherits the paper-scale thresholds.
+        fanout_quorum_k=0,
+        fanout_slow_factor=2.5,
+        fanout_recover_factor=1.4,
+        fanout_max_mirrors=2,
     )
 
 

@@ -166,3 +166,41 @@ class HedgedDispatch:
         """Spend budget for issued hedge(s)."""
         self.n_hedges_issued += n
         self._tokens -= n
+
+    def probe_view(self, hedge_after_s: float,
+                   max_hedges: int = 1) -> "HedgeBudgetView":
+        """A view over this SAME token bucket with its own (usually
+        much shorter) hedge latency: per-shard probe hedging
+        (``repro.fanout``) fires earlier than whole-request hedging,
+        but both spend one fleet-wide budget — total hedges stay a
+        bounded fraction of admitted traffic no matter which layer
+        issues them."""
+        return HedgeBudgetView(self, hedge_after_s,
+                               max_hedges=max_hedges)
+
+
+class HedgeBudgetView:
+    """Same bucket, different trigger: delegates every token operation
+    to the base :class:`HedgedDispatch` while applying its own hedge
+    latency and per-item re-issue bound."""
+
+    def __init__(self, base: HedgedDispatch, hedge_after_s: float,
+                 max_hedges: int = 1):
+        self.base = base
+        self.hedge_after_s = float(hedge_after_s)
+        self.max_hedges = int(max_hedges)
+
+    @property
+    def budget_available(self) -> float:
+        return self.base.budget_available
+
+    def note_request(self, n: int = 1) -> None:
+        self.base.note_request(n)
+
+    def should_hedge(self, elapsed_s: float, n_prior_hedges) -> bool:
+        return (int(n_prior_hedges) < self.max_hedges
+                and elapsed_s >= self.hedge_after_s
+                and self.base.budget_available >= 1.0)
+
+    def record_hedge(self, n: int = 1) -> None:
+        self.base.record_hedge(n)

@@ -1,0 +1,63 @@
+"""First-k-of-n quorum over the shard fan-out.
+
+:class:`QuorumGather` decides *when* a scatter-gather may answer: as
+soon as ``quorum_k`` of the ``n`` live shards have completed, instead
+of waiting for the slowest one. The gather time is the ``quorum_k``-th
+order statistic of the per-shard completion times; every shard at or
+under that threshold is **answered** (ties included — answering more
+than ``quorum_k`` is free), everything past it is **late**. With
+``quorum_k >= n`` (or ``<= 0``) the threshold is the maximum, every
+shard is answered, and the merge is bit-identical to the synchronous
+full gather — the parity anchor the property tests pin.
+
+Late shards are never silently dropped: the searcher prior-answers
+them from the stripe answer cache (their last candidates, whose trust
+already sits in the Trust-DB) or, failing that, leaves them to the
+downstream trust prior — the paper's overload answer ("respond from
+the prior rather than miss the deadline") applied to stragglers. The
+merge itself is :func:`repro.retrieval.shard.merge_topk`, the SAME
+(score desc, doc id asc) lexsort the synchronous gather uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+from repro.retrieval.shard import merge_topk  # noqa: F401 (re-export)
+
+
+@dataclass
+class GatherReport:
+    """Per-query gather observability (one per ``retrieve``)."""
+    n_shards: int = 0
+    quorum_k: int = 0                # effective k (clamped to n)
+    t_quorum_s: float = 0.0          # simulated gather completion
+    t_full_s: float = 0.0            # slowest shard (full-gather time)
+    late_keys: List[str] = field(default_factory=list)
+    n_cache_fills: int = 0           # late stripes answered from cache
+    n_prior_answered: int = 0        # late stripes left to the prior
+    n_hedges: int = 0                # shard probes hedged to a mirror
+    n_hedge_wins: int = 0            # mirror answered first
+
+
+class QuorumGather:
+    """First-k-of-n split of per-shard completion times."""
+
+    def __init__(self, quorum_k: int = 0):
+        self.quorum_k = int(quorum_k)
+
+    def effective_k(self, n: int) -> int:
+        """Clamp to the live fan-out: 0 (or >= n) waits for everyone."""
+        return self.quorum_k if 0 < self.quorum_k < n else n
+
+    def split(self, times: Sequence[float]
+              ) -> Tuple[float, List[bool]]:
+        """``(t_quorum, answered_mask)``: the gather completes at the
+        ``effective_k``-th smallest completion time; a shard is
+        answered iff it completed by then (ties answer with it)."""
+        n = len(times)
+        if n == 0:
+            return 0.0, []
+        kq = self.effective_k(n)
+        t_quorum = sorted(times)[kq - 1]
+        return t_quorum, [t <= t_quorum for t in times]

@@ -75,6 +75,19 @@ def main() -> int:
                    help="doc-partition count for the inverted index "
                         "(0 = config default); partitions map to "
                         "replicas through the consistent-hash ring")
+    p.add_argument("--quorum-k", type=int, default=0,
+                   help="tail-tolerant gather (repro.fanout, needs "
+                        "--corpus): answer at the first k of n shard "
+                        "completions, prior-answering late stripes "
+                        "(0 = wait for every shard)")
+    p.add_argument("--shard-hedge-ms", type=float, default=0.0,
+                   help="per-shard probe hedge latency: a stripe "
+                        "probe slower than this races a twin on a "
+                        "sibling's mirror (0 disables)")
+    p.add_argument("--straggle-mult", type=float, default=0.0,
+                   help="pin a persistent service-time multiplier on "
+                        "replica r0's shard (straggler injection demo "
+                        "for --quorum-k/--shard-hedge-ms; 0 = off)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
@@ -113,6 +126,9 @@ def main() -> int:
         cfg_kw["corpus_docs"] = args.corpus
         if args.index_shards > 0:
             cfg_kw["index_partitions"] = args.index_shards
+        cfg_kw["fanout_quorum_k"] = max(args.quorum_k, 0)
+        cfg_kw["fanout_hedge_after_s"] = \
+            max(args.shard_hedge_ms, 0.0) / 1e3
     cfg = TrustIRConfig(**cfg_kw)
     print(f"{args.arch}: {rate:,.0f} items/s -> Ucap={cfg.u_capacity} "
           f"Uthr={cfg.u_threshold} deadline={dl * 1e3:.0f}ms "
@@ -130,7 +146,7 @@ def main() -> int:
     def evaluate_batch(chunk):            # jax-traceable (fused drain)
         return ev(chunk)
 
-    retrieval = queries = None
+    retrieval = queries = fanout_model = None
     if args.corpus > 0:
         from repro.retrieval import (CorpusRetrieval, SyntheticCorpus,
                                      ZipfQueryModel)
@@ -153,6 +169,16 @@ def main() -> int:
               f"{corpus.vocab_size} -> {cfg.index_partitions} "
               f"doc-partitions, top-k={cfg.retrieve_top_k} "
               f"({time.perf_counter() - t0:.2f}s corpus+stats)")
+        fan_on = cfg.fanout_quorum_k > 0 or cfg.fanout_hedge_after_s > 0
+        if fan_on:
+            from repro.fanout import ShardServiceModel
+            fanout_model = ShardServiceModel(seed=args.seed)
+            if args.straggle_mult > 1.0:
+                fanout_model.set_persistent("r0", args.straggle_mult)
+            print(f"fanout: quorum_k={cfg.fanout_quorum_k or 'n'} "
+                  f"shard-hedge={args.shard_hedge_ms:.1f}ms "
+                  + (f"straggler r0 x{args.straggle_mult:.0f}"
+                     if args.straggle_mult > 1.0 else "no straggler"))
 
     if args.sync:
         retriever = None
@@ -177,7 +203,8 @@ def main() -> int:
                 gossip=args.gossip),
             drain_mode=args.drain_mode,
             evaluate_batch=evaluate_batch,
-            retrieval=retrieval)
+            retrieval=retrieval,
+            fanout_model=fanout_model)
         if args.adaptive:
             for rep in eng.replicas:
                 rep.engine.shedder.adaptive = AdaptiveWeightController()
@@ -300,6 +327,20 @@ def main() -> int:
         print(f"retrieval: {sr.n_searches} searches "
               f"({sr.n_fallback} fallback), {len(live)} live "
               f"shard(s), {sum(s.n_docs for s in live)} docs resident")
+        if hasattr(sr, "gather_stats") and sr.n_gathers:
+            fs = sr.gather_stats()
+            print(f"fanout: gather p50/p99 "
+                  f"{fs['gather_p50_s'] * 1e3:.1f}/"
+                  f"{fs['gather_p99_s'] * 1e3:.1f} ms (full "
+                  f"{fs['full_p50_s'] * 1e3:.1f}/"
+                  f"{fs['full_p99_s'] * 1e3:.1f} ms), "
+                  f"{fs['n_late_shards']} late stripes "
+                  f"({fs['n_cache_fills']} cache-filled, "
+                  f"{fs['n_prior_answered']} prior), "
+                  f"{fs['n_shard_hedges']} shard hedges "
+                  f"({fs['n_shard_hedge_wins']} wins), "
+                  f"{fs['n_mirrors_built']} mirrors built / "
+                  f"{fs['n_mirrors_dropped']} dropped")
     board = eng.slo_stats()
     print(f"P50 {board['p50_s'] * 1e3:.1f} ms  P99 "
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "

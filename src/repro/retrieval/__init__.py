@@ -21,7 +21,8 @@ from .corpus import SyntheticCorpus, ZipfQueryModel
 from .index import (BM25_B, BM25_K1, CollectionStats, InvertedIndex,
                     bm25_scores, build_index, collection_stats,
                     index_checksum, merge_indexes, topk_py)
-from .shard import (CorpusRetrieval, CorpusSearcher, IndexShard, Q_MAX)
+from .shard import (CorpusRetrieval, CorpusSearcher, IndexShard, Q_MAX,
+                    merge_topk)
 from .text import STOPWORDS, normalize, stem, tokenize
 
 __all__ = [
@@ -30,5 +31,6 @@ __all__ = [
     "bm25_scores", "build_index", "collection_stats",
     "index_checksum", "merge_indexes", "topk_py",
     "CorpusRetrieval", "CorpusSearcher", "IndexShard", "Q_MAX",
+    "merge_topk",
     "STOPWORDS", "normalize", "stem", "tokenize",
 ]

@@ -269,6 +269,23 @@ class IndexShard:
         return self._slot_doc[idxs], vals
 
 
+def merge_topk(parts: Sequence[Tuple[np.ndarray, np.ndarray]], k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather-merge per-shard top-k lists into one (score desc, doc id
+    asc) top-k. Doc ids are unique across doc-partitioned shards, so
+    the lexsort's total order is independent of shard concat order —
+    the ONE merge both the synchronous gather and the quorum gather
+    (``repro.fanout``) use, which is what makes ``quorum_k == n``
+    bit-identical to the full gather."""
+    parts = [(d, s) for d, s in parts if len(d)]
+    if not parts:
+        return (np.zeros(0, np.int64), np.zeros(0, np.float32))
+    docs = np.concatenate([d for d, _ in parts])
+    scores = np.concatenate([s for _, s in parts])
+    order = np.lexsort((docs, -scores))[:k]
+    return docs[order], scores[order]
+
+
 class CorpusSearcher:
     """``SyntheticSearcher``-compatible front end over real shards.
 
@@ -299,15 +316,8 @@ class CorpusSearcher:
     def retrieve(self, query: str, k: int
                  ) -> Tuple[np.ndarray, np.ndarray]:
         """Scatter to shards, gather + merge top-k."""
-        parts = [sh.retrieve(query, k) for sh in self.shards
-                 if sh.n_docs]
-        parts = [(d, s) for d, s in parts if len(d)]
-        if not parts:
-            return (np.zeros(0, np.int64), np.zeros(0, np.float32))
-        docs = np.concatenate([d for d, _ in parts])
-        scores = np.concatenate([s for _, s in parts])
-        order = np.lexsort((docs, -scores))[:k]
-        return docs[order], scores[order]
+        return merge_topk([sh.retrieve(query, k) for sh in self.shards
+                           if sh.n_docs], k)
 
     def _fallback_docs(self, query: str, k: int) -> np.ndarray:
         h = abs(hash(query)) % (2 ** 31)

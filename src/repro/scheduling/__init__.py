@@ -31,6 +31,28 @@ candidate sets start at *arrive*):
        |                                    WarmupGate rule so
        |                                    Ucapacity reflects the
        |                                    whole pipeline
+    scatter  repro.fanout                   quorum-gather[hedged]
+       |     (FanoutSearcher)               (``TrustIRConfig.
+       |                                    fanout_*``): the fan-out
+       |                                    answers at the first-
+       |                                    ``quorum_k``-of-n shard
+       |                                    completion; late stripes
+       |                                    are prior-answered from
+       |                                    the stripe answer cache
+       |                                    (trust already on file) or
+       |                                    the downstream trust
+       |                                    prior — never dropped; a
+       |                                    straggling shard probe
+       |                                    races a twin on a sibling's
+       |                                    MIRROR stripes (selective
+       |                                    replication of persistently
+       |                                    slow shards, EWMA-picked,
+       |                                    bounded, dropped on
+       |                                    recovery), charged to the
+       |                                    same fleet hedge budget;
+       |                                    ``quorum_k == n`` is
+       |                                    bit-identical to the full
+       |                                    gather
        |
     arrive   ServingEngine.enqueue          stamp arrival + SLO deadline
        |

@@ -287,14 +287,23 @@ class ChurnEvent:
     ``replica_id=None`` lets the driver pick deterministically: a
     graceful ``leave`` drains out the lightest-loaded replica (cheapest
     handoff), a ``crash`` kills the heaviest-loaded one (worst-case
-    journal replay)."""
+    journal replay), and a ``slow``/``recover`` pair degrades (then
+    heals) the lexicographically-first live replica.
+
+    ``slow`` pins a persistent service-time multiplier (``mult``) on
+    the replica's index shard through the coordinator's fanout service
+    model (``set_shard_slowdown``) — the degraded-disk scenario that
+    drives selective stripe replication; ``recover`` clears it. Both
+    are no-ops on fleets without a fanout model."""
     t: float
-    action: str                          # "join" | "leave" | "crash"
+    action: str       # "join" | "leave" | "crash" | "slow" | "recover"
     replica_id: Optional[str] = None
     weight: float = 1.0
+    mult: float = 8.0                    # "slow" service multiplier
 
     def __post_init__(self) -> None:
-        if self.action not in ("join", "leave", "crash"):
+        if self.action not in ("join", "leave", "crash", "slow",
+                               "recover"):
             raise ValueError(f"unknown churn action {self.action!r}")
 
 
@@ -304,6 +313,12 @@ def _apply_churn(coordinator, ev: ChurnEvent) -> Tuple:
                                     replica_id=ev.replica_id,
                                     now_t=ev.t)
         return (ev.t, "join", h.replica_id, coordinator.n_replicas)
+    if ev.action in ("slow", "recover"):
+        rid = ev.replica_id or min(r.replica_id
+                                   for r in coordinator.replicas)
+        coordinator.set_shard_slowdown(
+            rid, ev.mult if ev.action == "slow" else 1.0)
+        return (ev.t, ev.action, rid, coordinator.n_replicas)
     if coordinator.n_replicas <= 1:      # never kill the last replica
         return (ev.t, f"{ev.action}-skipped", None,
                 coordinator.n_replicas)

@@ -1,0 +1,440 @@
+"""Tail-tolerant scatter-gather (repro.fanout, ISSUE 7): deterministic
+seeded service times with heavy-tailed straggler injection, first-k-of-n
+quorum gather with bit-exact ``quorum_k == n`` parity, per-shard hedging
+against selectively replicated mirror stripes, prior-answering of late
+shards from the stripe answer cache, and the cluster integration
+(ring-aware mirror placement, ``slow``/``recover`` churn) under the
+no-drop invariant."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterCoordinator
+from repro.configs.base import reduced
+from repro.configs.trust_ir import smoke_config
+from repro.distribution.fault_tolerance import HedgedDispatch
+from repro.fanout import (FanoutSearcher, QuorumGather, ReplicationPolicy,
+                          ShardServiceModel, StripeReplicator,
+                          clone_stripe, mirror_shard_of)
+from repro.retrieval import (CorpusRetrieval, CorpusSearcher,
+                             SyntheticCorpus, ZipfQueryModel,
+                             index_checksum)
+from repro.serving.simulator import (ChurnEvent, MultiTenantWorkload,
+                                     TenantSpec, run_churn_workload)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return SyntheticCorpus(n_docs=192, vocab_size=256, doc_len=24,
+                           seed=3)
+
+
+@pytest.fixture(scope="module")
+def retrieval(corpus):
+    return CorpusRetrieval(corpus, n_partitions=8, block_docs=48)
+
+
+def _shards(retrieval):
+    return ([retrieval.build_shard([p])
+             for p in range(retrieval.n_partitions)],
+            [f"s{p}" for p in range(retrieval.n_partitions)])
+
+
+def _queries(corpus, n, seed=11):
+    qm = ZipfQueryModel.for_corpus(corpus, seed=seed)
+    return [qm.sample() for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# service-time model
+
+
+def test_service_model_deterministic_per_probe():
+    a = ShardServiceModel(seed=7)
+    b = ShardServiceModel(seed=7)
+    for seq in range(32):
+        assert a.sample_at("s0", seq) == b.sample_at("s0", seq)
+    assert ShardServiceModel(seed=8).sample_at("s0", 0) \
+        != a.sample_at("s0", 0)
+
+
+def test_service_model_interleaving_independent():
+    """Draw order across keys must not matter: probe ``seq`` of a key
+    is the same whether or not other keys were probed in between (a
+    hedge consuming a draw must not perturb anyone else's stream)."""
+    a = ShardServiceModel(seed=3)
+    b = ShardServiceModel(seed=3)
+    seq_a = [a.sample("x") for _ in range(8)]
+    for _ in range(8):
+        b.sample("y")
+        b.sample("z|m|x", mult_key="z")
+    seq_b = [b.sample("x") for _ in range(8)]
+    assert seq_a == seq_b
+
+
+def test_service_model_persistent_mult_and_reset():
+    m = ShardServiceModel(seed=1)
+    base = [m.sample_at("s1", i) for i in range(16)]
+    m.set_persistent("s1", 8.0)
+    assert [m.sample_at("s1", i) for i in range(16)] \
+        == [8.0 * t for t in base]
+    # hedge twins ride the HOST's health, their own stream
+    assert m.sample_at("h|m|s1", 0, mult_key="h") \
+        == ShardServiceModel(seed=1).sample_at("h|m|s1", 0)
+    m.set_persistent("s1", 1.0)          # mult <= 1 clears
+    assert m.persistent_mult("s1") == 1.0
+    m.sample("s1")
+    m.reset()                             # counters rewind, state stays
+    assert m.sample("s1") == base[0]
+
+
+def test_service_model_has_heavy_tail():
+    m = ShardServiceModel(straggler_p=0.2, seed=5)
+    ts = np.array([m.sample_at("s0", i) for i in range(400)])
+    assert ts.max() > 5.0 * np.median(ts)
+    assert (ts > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# quorum split
+
+
+def test_quorum_effective_k_clamps():
+    q = QuorumGather(0)
+    assert q.effective_k(5) == 5
+    assert QuorumGather(3).effective_k(5) == 3
+    assert QuorumGather(5).effective_k(5) == 5
+    assert QuorumGather(9).effective_k(5) == 5
+
+
+def test_quorum_split_order_statistic_and_ties():
+    t, mask = QuorumGather(2).split([0.3, 0.1, 0.2, 0.4])
+    assert t == 0.2 and mask == [False, True, True, False]
+    t, mask = QuorumGather(1).split([0.2, 0.2, 0.5])
+    assert t == 0.2 and mask == [True, True, False]   # ties answer free
+    assert QuorumGather(2).split([]) == (0.0, [])
+
+
+# ---------------------------------------------------------------------------
+# replicator policy
+
+
+def test_replicator_due_after_maturity_and_bounded():
+    r = StripeReplicator(ReplicationPolicy(min_probes=4, max_mirrors=1))
+    for _ in range(4):
+        for k, t in [("a", 0.01), ("b", 0.01), ("e", 0.01), ("f", 0.01),
+                     ("c", 0.2), ("d", 0.3)]:
+            r.observe(k, t)
+    # both c and d are over 2.5x the median, slowest first, capped at 1
+    assert r.due(set()) == ["d"]
+    assert r.due({"d"}) == []             # budget exhausted
+    r2 = StripeReplicator(ReplicationPolicy(min_probes=4, max_mirrors=2))
+    r2._ewma, r2._n = dict(r._ewma), dict(r._n)
+    assert r2.due(set()) == ["d", "c"]
+
+
+def test_replicator_not_due_before_min_probes():
+    r = StripeReplicator(ReplicationPolicy(min_probes=6))
+    for _ in range(5):
+        r.observe("slow", 0.5)
+        r.observe("a", 0.01)
+        r.observe("b", 0.01)
+    assert r.due(set()) == []
+
+
+def test_replicator_recovers():
+    r = StripeReplicator(ReplicationPolicy(min_probes=3))
+    for _ in range(8):
+        r.observe("a", 0.01)
+        r.observe("b", 0.01)
+        r.observe("m", 0.2)
+    assert r.recovered({"m"}) == []
+    for _ in range(30):
+        r.observe("m", 0.01)
+    assert r.recovered({"m"}) == ["m"]
+
+
+# ---------------------------------------------------------------------------
+# mirror stripes
+
+
+def test_mirror_shard_roundtrip_lossless(retrieval, corpus):
+    primary = retrieval.build_shard([0, 1])
+    before = (primary.n_docs, index_checksum(primary.index))
+    mirror = mirror_shard_of(primary)
+    assert (primary.n_docs, index_checksum(primary.index)) == before
+    assert index_checksum(mirror.index) == before[1]
+    for q in _queries(corpus, 12):
+        d0, s0 = primary.retrieve(q, 8)
+        d1, s1 = mirror.retrieve(q, 8)
+        assert d0.tolist() == d1.tolist()
+        assert np.array_equal(s0, s1)     # same global stats, bit-equal
+
+
+def test_clone_stripe_never_aliases(retrieval):
+    primary = retrieval.build_shard([2])
+    sub = primary.export_docs(list(primary.index.doc_len)[:4])
+    clone = clone_stripe(sub)
+    primary.absorb(sub)
+    t = next(iter(clone.postings))
+    clone.postings[t].append((10 ** 6, 1))
+    clone.doc_len[10 ** 6] = 1
+    assert 10 ** 6 not in sub.doc_len
+    assert all(d != 10 ** 6 for d, _ in sub.postings.get(t, []))
+
+
+# ---------------------------------------------------------------------------
+# quorum gather parity + partial gather
+
+
+def test_fanout_without_model_is_plain_gather(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    plain = CorpusSearcher(corpus, shards)
+    fan = FanoutSearcher(corpus, shards, keys)
+    for q in _queries(corpus, 8):
+        d0, s0 = plain.retrieve(q, 16)
+        d1, s1 = fan.retrieve(q, 16)
+        assert d0.tolist() == d1.tolist() and np.array_equal(s0, s1)
+    assert fan.n_gathers == 0             # simulated-gather path unused
+
+
+def test_quorum_k_equals_n_bit_parity(retrieval, corpus):
+    """The parity anchor: full-quorum fan-out with straggler injection
+    and hedging enabled returns EXACTLY the synchronous gather — doc
+    ids, order, scores, and the search() feature mapping."""
+    shards, keys = _shards(retrieval)
+    plain = CorpusSearcher(corpus, shards)
+    model = ShardServiceModel(straggler_p=0.1, seed=2)
+    model.set_persistent("s3", 20.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=len(shards),
+                         service_model=model, hedge_after_s=0.002)
+    for q in _queries(corpus, 16):
+        d0, s0 = plain.retrieve(q, 16)
+        d1, s1 = fan.retrieve(q, 16)
+        assert d0.tolist() == d1.tolist()
+        assert np.array_equal(s0, s1)
+        r0, r1 = plain.search(q, 16), fan.search(q, 16)
+        assert np.array_equal(r0.url_ids, r1.url_ids)
+        for f in r0.features:
+            assert np.array_equal(r0.features[f], r1.features[f])
+        assert np.array_equal(r0.exact_trust, r1.exact_trust)
+    assert fan.n_gathers == 32            # retrieve + search
+    assert fan.n_late_shards == 0
+
+
+def test_partial_quorum_subset_and_latency(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    model = ShardServiceModel(seed=4)
+    model.set_persistent("s2", 50.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=6,
+                         service_model=model)
+    for q in _queries(corpus, 10):
+        fan._answer_cache.clear()         # cold: no prior answers
+        dq, sq = fan.retrieve(q, 16)
+        rep = fan.last_report
+        assert len(rep.late_keys) == len(shards) - 6
+        assert "s2" in rep.late_keys      # the x50 shard never answers
+        assert rep.t_quorum_s < rep.t_full_s
+        assert rep.n_prior_answered == len(rep.late_keys)
+        # cold-cache quorum answers come only from answered shards
+        answered = set()
+        for key, sh in zip(keys, shards):
+            if key not in rep.late_keys:
+                answered.update(sh.retrieve(q, 16)[0].tolist())
+        assert set(dq.tolist()) <= answered
+    assert fan.last_gather_s < fan.last_full_gather_s
+    assert len(fan.gather_times) == fan.n_gathers
+
+
+def test_late_shards_cache_then_prior(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    model = ShardServiceModel(seed=6)
+    model.set_persistent("s0", 50.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=7,
+                         service_model=model)
+    plain = CorpusSearcher(corpus, shards)
+    q = _queries(corpus, 1, seed=23)[0]
+    fan.retrieve(q, 16)
+    assert fan.n_prior_answered >= 1      # cold cache: prior answers
+    fills0 = fan.n_cache_fills
+    dq, sq = fan.retrieve(q, 16)          # hot: late stripes cached
+    assert fan.n_cache_fills > fills0
+    if set(fan.last_report.late_keys) == {"s0"}:
+        df, sf = plain.retrieve(q, 16)    # cache restores full recall
+        assert dq.tolist() == df.tolist() and np.array_equal(sq, sf)
+
+
+# ---------------------------------------------------------------------------
+# per-shard hedging
+
+
+def test_hedge_win_uses_mirror_bit_identically(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    model = ShardServiceModel(seed=9, straggler_p=0.0)
+    model.set_persistent("s1", 40.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0,
+                         service_model=model, hedge_after_s=0.006)
+    i = keys.index("s1")
+    fan.add_mirror("s1", "s4", mirror_shard_of(shards[i]))
+    plain = CorpusSearcher(corpus, shards)
+    for q in _queries(corpus, 10):
+        d0, s0 = plain.retrieve(q, 16)
+        d1, s1 = fan.retrieve(q, 16)
+        assert d0.tolist() == d1.tolist() and np.array_equal(s0, s1)
+    assert fan.n_shard_hedges == 10       # x40 primary always hedges
+    assert fan.n_shard_hedge_wins == 10   # healthy twin always faster
+    assert fan.n_shard_twin_drops == 10   # loser never double-merged
+    assert fan.last_full_gather_s < 0.004 * 40
+
+
+def test_hedge_spends_shared_cluster_budget(retrieval, corpus):
+    """A probe view over the cluster dispatcher shares its token
+    bucket: probe hedges drain it, and an empty bucket blocks hedging
+    until admitted traffic re-earns (per-shard hedges are charged to
+    the SAME fleet budget as whole-request twins)."""
+    shards, keys = _shards(retrieval)
+    base = HedgedDispatch(hedge_after_s=0.5, budget_frac=0.05,
+                          budget_burst=2.0)
+    model = ShardServiceModel(seed=9, straggler_p=0.0)
+    model.set_persistent("s1", 40.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0,
+                         service_model=model,
+                         hedge=base.probe_view(0.006),
+                         hedge_after_s=0.006)
+    fan.add_mirror("s1", "s4", mirror_shard_of(shards[keys.index("s1")]))
+    qs = _queries(corpus, 6)
+    for q in qs:
+        fan.retrieve(q, 8)
+    assert fan.n_shard_hedges == 2        # burst spent, never re-earned
+    assert base.budget_available < 1.0
+    base.note_request(40)                 # admitted traffic refills
+    for q in qs:
+        fan.retrieve(q, 8)
+    assert fan.n_shard_hedges == 4
+    assert base.n_hedges_issued == fan.n_shard_hedges
+
+
+def test_standalone_maintain_builds_and_drops_mirror(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    model = ShardServiceModel(seed=12, straggler_p=0.0)
+    model.set_persistent("s3", 30.0)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0,
+                         service_model=model, hedge_after_s=0.004,
+                         replicator=StripeReplicator(
+                             ReplicationPolicy(max_mirrors=1)))
+    qs = _queries(corpus, 30)
+    for q in qs[:10]:
+        fan.retrieve(q, 8)
+        fan.maintain()
+    assert list(fan.mirrors) == ["s3"]
+    host, _ = fan.mirrors["s3"]
+    assert host != "s3"
+    assert fan.n_shard_hedge_wins > 0
+    model.clear_persistent("s3")          # the disk got swapped
+    for q in qs[10:]:
+        fan.retrieve(q, 8)
+        fan.maintain()
+    assert fan.mirrors == {} and fan.n_mirrors_dropped == 1
+
+
+def test_set_fleet_drops_dead_mirrors_and_cache(retrieval, corpus):
+    shards, keys = _shards(retrieval)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=4,
+                         service_model=ShardServiceModel(seed=1))
+    fan.retrieve(_queries(corpus, 1)[0], 8)
+    fan.add_mirror("s1", "s4", mirror_shard_of(shards[1]))
+    fan.add_mirror("s2", "s5", mirror_shard_of(shards[2]))
+    assert len(fan._answer_cache) > 0
+    keep = [(k, s) for k, s in zip(keys, shards) if k != "s4"]
+    fan.set_fleet(keep)                   # s1's mirror HOST left
+    assert list(fan.mirrors) == ["s2"]
+    assert len(fan._answer_cache) == 0    # ownership moved: invalidate
+
+
+# ---------------------------------------------------------------------------
+# end-to-end determinism
+
+
+def test_fanout_replay_is_bit_reproducible(retrieval, corpus):
+    def run():
+        shards, keys = _shards(retrieval)
+        model = ShardServiceModel(seed=21, straggler_p=0.05)
+        model.set_persistent("s5", 12.0)
+        fan = FanoutSearcher(corpus, shards, keys,
+                             quorum_k=len(shards) - 2,
+                             service_model=model, hedge_after_s=0.002)
+        out = []
+        for q in _queries(corpus, 24, seed=31):
+            docs, scores = fan.retrieve(q, 10)
+            fan.maintain()
+            out.append((docs.tolist(), scores.tolist()))
+        return out, fan.gather_times, fan.n_shard_hedges, \
+            fan.n_mirrors_built
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: ring-aware mirrors + slow/recover churn
+
+
+def test_churn_event_validates_action():
+    with pytest.raises(ValueError):
+        ChurnEvent(t=0.1, action="explode")
+    assert ChurnEvent(t=0.1, action="slow", mult=4.0).mult == 4.0
+
+
+def _zero_eval(chunk):
+    return np.zeros(len(next(iter(chunk.values()))), np.float32)
+
+
+def test_cluster_fanout_slow_recover_churn():
+    corpus = SyntheticCorpus(n_docs=384, vocab_size=256, seed=3)
+    ret = CorpusRetrieval(corpus, n_partitions=24, block_docs=16)
+    cfg = reduced(smoke_config(), n_replicas=3, fanout_quorum_k=2,
+                  fanout_hedge_after_s=0.006, fanout_max_mirrors=1)
+    model = ShardServiceModel(seed=5)
+    coord = ClusterCoordinator(
+        cfg, _zero_eval,
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s,
+        retrieval=ret, fanout_model=model)
+    assert isinstance(coord.searcher, FanoutSearcher)
+    assert all(sh.n_docs for sh in coord.searcher.shards)
+    wl = MultiTenantWorkload(
+        tenants=[TenantSpec("t0", qps=40.0, min_results=8,
+                            max_results=16)],
+        n_queries=60, seed=0,
+        query_model=ZipfQueryModel.for_corpus(corpus, seed=9))
+    sched = [ChurnEvent(t=0.2, action="slow", replica_id="r1",
+                        mult=12.0),
+             ChurnEvent(t=1.0, action="recover", replica_id="r1")]
+    rep = run_churn_workload(coord, coord.searcher, wl, sched)
+
+    rids = [r.request_id for r in rep.responses]
+    assert len(rids) == 60 == len(set(rids))      # no-drop, exactly-one
+    assert (0.2, "slow", "r1", 3) in rep.churn_log
+    assert (1.0, "recover", "r1", 3) in rep.churn_log
+    st = coord.scheduler_stats()
+    fan = st["fanout"]
+    assert fan["n_gathers"] >= 60
+    assert fan["n_late_shards"] > 0               # quorum 2-of-3
+    assert fan["n_cache_fills"] + fan["n_prior_answered"] \
+        == fan["n_late_shards"]
+    # the slow window built a mirror on a ring sibling; recovery
+    # dropped it again (and the hedges actually won through it)
+    assert st["cluster"]["n_stripe_replications"] == 1
+    assert st["cluster"]["n_mirror_drops"] == 1
+    assert fan["n_shard_hedge_wins"] > 0
+    assert fan["n_mirrors_live"] == 0
+    assert all(not r.mirrors for r in coord.replicas)
+
+
+def test_cluster_without_fanout_keeps_legacy_searcher():
+    corpus = SyntheticCorpus(n_docs=96, vocab_size=128, seed=3)
+    ret = CorpusRetrieval(corpus, n_partitions=4, block_docs=24)
+    cfg = reduced(smoke_config(), n_replicas=2)
+    coord = ClusterCoordinator(
+        cfg, _zero_eval,
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s,
+        retrieval=ret)
+    assert not isinstance(coord.searcher, FanoutSearcher)
+    coord.set_shard_slowdown("r0", 4.0)           # guarded no-op
+    assert "fanout" not in coord.scheduler_stats()
