@@ -1,0 +1,274 @@
+"""Fleet hardening acceptance under a chaos trace (repro.chaos).
+
+Scenario A — **48-replica chaos trace**: one seeded trace combining a
+diurnal rate curve, a flash-crowd window (4x), Zipf tenant skew,
+correlated hot-URL floods, a query-of-death poison window, a correlated
+regional failure (4 replicas crash the same tick), and a coordinated
+rolling-restart sweep — replayed against a hedging, stealing,
+epidemic-gossiping, quarantine-armed fleet on simulated clocks. Twice.
+
+Gates:
+
+  * ``no_drop_ok`` — exactly one Response per submitted request id,
+    fleet-wide, through the poison window, the crashes, and the
+    restarts (the paper's no-drop invariant under chaos);
+  * ``p99_ok`` — admitted p99 stays within ``P99_BOUND_S`` (an absolute
+    wall on tail latency while the fleet is being actively damaged);
+  * ``gossip_ok`` — epidemic gossip's busiest round carries at most
+    ``2 * n * ceil(log2 n)`` messages (push fanout + anti-entropy pull,
+    measured at n=48) AND total messages undercut the O(n^2) broadcast
+    equivalent for the same deltas;
+  * ``determinism_ok`` — the two replays produce bit-identical response
+    sets (md5 over sorted (rid, admitted, reason, latency, trust)).
+
+Scenario B — **poison containment pair** (8 replicas, no membership
+churn, so breaker state survives to be inspected): the same poison
+flood with the quarantine armed (k=3) and disarmed (k=0).
+
+  * ``quarantine_ok`` — with the breaker armed, no (replica, signature)
+    pair exceeds ``k + QUARANTINE_SLACK`` evaluator errors (k strikes
+    to open + in-flight stragglers + timed half-open probes), and the
+    unquarantined baseline suffers at least 2x the total evaluator
+    errors — the O(k)-per-signature containment claim with its
+    contrast.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from typing import Dict
+
+import numpy as np
+
+N_FLEET = 48                       # scenario A fleet size (gate is AT 48)
+N_POISON_FLEET = 8                 # scenario B fleet size
+QUARANTINE_K = 3
+QUARANTINE_SLACK = 3               # stragglers + probes on top of k
+P99_BOUND_S = 2.0                  # == the trace SLO
+
+
+def _fleet(n_replicas: int, quarantine_k: int, seed: int,
+           gossip_mode: str = "epidemic"):
+    from repro.chaos import poisonable
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.configs.base import TrustIRConfig
+    from repro.core.pipeline import SyntheticSearcher, exact_oracle_evaluator
+
+    cfg = TrustIRConfig(u_capacity=64, u_threshold=32,
+                        deadline_s=0.05, overload_deadline_s=0.1,
+                        chunk_size=32, cache_slots=4096,
+                        n_replicas=n_replicas,
+                        quarantine_k=quarantine_k,
+                        quarantine_probe_after_s=5.0)
+    cc = ClusterConfig(hedge_after_s=0.5, max_hedges=1,
+                       hedge_budget_frac=0.05,
+                       gossip=True, gossip_mode=gossip_mode,
+                       gossip_budget_items=512)
+    searcher = SyntheticSearcher(corpus_size=20_000, seed=seed)
+    coord = ClusterCoordinator(
+        cfg, poisonable(exact_oracle_evaluator(searcher)),
+        cluster_cfg=cc,
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    return coord, searcher
+
+
+def _chaos_trace(duration_s: float, base_qps: float, seed: int):
+    from repro.chaos import (FlashCrowd, PoisonSpec, RegionalFailure,
+                             RollingRestartEvent, TraceConfig)
+    d = duration_s
+    return TraceConfig(
+        duration_s=d, base_qps=base_qps, seed=seed,
+        diurnal_amplitude=0.5, diurnal_period_s=d,
+        n_tenants=16, tenant_zipf_a=1.4,
+        hot_url_frac=0.3, n_hot_queries=4,
+        min_results=50, max_results=1500, slo_s=P99_BOUND_S,
+        flash_crowds=[FlashCrowd(0.35 * d, 0.5 * d, 4.0)],
+        poison=[PoisonSpec(0.15 * d, 0.55 * d, qps=4.0,
+                           n_signatures=2)],
+        failures=[RegionalFailure(t=0.7 * d, n_crash=4)],
+        restarts=[RollingRestartEvent(t=0.85 * d)])
+
+
+def _summarize(rep, coord) -> Dict:
+    admitted = [r for r in rep.responses if r.admitted]
+    rids = [r.request_id for r in rep.responses]
+    lat = np.asarray([r.latency_s for r in admitted])
+    st = rep.scheduler_stats
+    return {
+        "n_responses": len(rep.responses),
+        "n_admitted": len(admitted),
+        "n_rejected": len(rep.responses) - len(admitted),
+        "n_quarantined": st["n_quarantined"],
+        "n_executor_errors": st["n_executor_errors"],
+        "p50_s": float(np.percentile(lat, 50)) if len(lat) else None,
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else None,
+        "n_replicas_final": coord.n_replicas,
+        "cluster": st["cluster"],
+        "gossip": st.get("gossip"),
+        "no_drop_ok": bool(len(rids) == len(set(rids))
+                           and len(rids) == st["n_submitted"]
+                           and len(rids) == st["cluster"]["n_enqueued"]),
+    }
+
+
+def run_chaos(duration_s: float, base_qps: float, seed: int = 0) -> Dict:
+    from repro.chaos import response_fingerprint, run_fleet_trace
+
+    tc = _chaos_trace(duration_s, base_qps, seed)
+
+    def replay() -> Dict:
+        coord, searcher = _fleet(N_FLEET, QUARANTINE_K, seed)
+        rep = run_fleet_trace(coord, searcher, tc)
+        out = _summarize(rep, coord)
+        out["fingerprint"] = response_fingerprint(rep.responses)
+        out["churn_log"] = [list(r) for r in rep.churn_log]
+        return out
+
+    first, second = replay(), replay()
+
+    g = first["gossip"]
+    round_bound = 2 * N_FLEET * math.ceil(math.log2(N_FLEET))
+    out = {
+        "n_replicas": N_FLEET,
+        "duration_s": duration_s,
+        "base_qps": base_qps,
+        "run": first,
+        "replay_fingerprint": second["fingerprint"],
+        "gossip_round_bound": round_bound,
+        "no_drop_ok": bool(first["no_drop_ok"]
+                           and second["no_drop_ok"]),
+        "p99_ok": bool(first["p99_s"] is not None
+                       and first["p99_s"] <= P99_BOUND_S),
+        # O(n log n) per round, asserted AT n=48 — and strictly cheaper
+        # than broadcasting the same deltas to every sibling.
+        "gossip_ok": bool(g["max_round_messages"] <= round_bound
+                          and g["n_messages"] > 0
+                          and g["n_messages"] < g["n_broadcast_equiv"]),
+        "determinism_ok": bool(first["fingerprint"]
+                               == second["fingerprint"]),
+    }
+    return out
+
+
+def run_poison_pair(duration_s: float, base_qps: float,
+                    seed: int = 0) -> Dict:
+    """Quarantined (k=3) vs unquarantined (k=0) under the same poison
+    flood, NO membership churn — breaker state survives for the
+    per-(replica, signature) error-cap assertion."""
+    from repro.chaos import PoisonSpec, TraceConfig, run_fleet_trace
+    d = duration_s
+    tc = TraceConfig(
+        duration_s=d, base_qps=base_qps, seed=seed + 1,
+        diurnal_amplitude=0.3, diurnal_period_s=d, n_tenants=8,
+        min_results=50, max_results=800, slo_s=P99_BOUND_S,
+        poison=[PoisonSpec(0.1 * d, 0.9 * d, qps=16.0,
+                           n_signatures=2)])
+
+    def flood(k: int) -> Dict:
+        coord, searcher = _fleet(N_POISON_FLEET, k, seed,
+                                 gossip_mode="broadcast")
+        rep = run_fleet_trace(coord, searcher, tc)
+        row = _summarize(rep, coord)
+        per_sig = {}
+        for r in coord.replicas:
+            q = r.scheduler.quarantine
+            if q is not None:
+                for sig, st in q.per_signature().items():
+                    per_sig[f"{r.replica_id}:{sig}"] = st
+        row["per_signature"] = per_sig
+        return row
+
+    armed = flood(QUARANTINE_K)
+    baseline = flood(0)
+    max_sig_errors = max(
+        (st["n_errors"] for st in armed["per_signature"].values()),
+        default=0)
+    out = {
+        "n_replicas": N_POISON_FLEET,
+        "quarantine_k": QUARANTINE_K,
+        "armed": armed,
+        "baseline": baseline,
+        "max_errors_per_signature": max_sig_errors,
+        "error_cap": QUARANTINE_K + QUARANTINE_SLACK,
+        "no_drop_ok": bool(armed["no_drop_ok"]
+                           and baseline["no_drop_ok"]),
+        "quarantine_ok": bool(
+            armed["n_quarantined"] > 0
+            and max_sig_errors <= QUARANTINE_K + QUARANTINE_SLACK
+            and baseline["n_executor_errors"]
+            >= 2 * max(armed["n_executor_errors"], 1)),
+    }
+    return out
+
+
+def main(duration_s: float = 6.0, base_qps: float = 70.0,
+         poison_duration_s: float = 5.0, seed: int = 0) -> Dict:
+    chaos = run_chaos(duration_s, base_qps, seed)
+    poison = run_poison_pair(poison_duration_s, 30.0, seed)
+    out = {
+        "chaos": chaos,
+        "poison": poison,
+        "no_drop_ok": bool(chaos["no_drop_ok"]
+                           and poison["no_drop_ok"]),
+        "p99_ok": chaos["p99_ok"],
+        "gossip_ok": chaos["gossip_ok"],
+        "determinism_ok": chaos["determinism_ok"],
+        "quarantine_ok": poison["quarantine_ok"],
+    }
+
+    r = chaos["run"]
+
+    def _ms(v):
+        return f"{v * 1e3:.1f}ms" if v is not None else "-"
+
+    print(f"chaos trace: {N_FLEET} replicas, {duration_s:.0f}s, "
+          f"~{base_qps:.0f}qps base (flash x4, poison, 4-replica "
+          f"regional crash, rolling restart)")
+    print(f"  {r['n_responses']} responses ({r['n_admitted']} admitted,"
+          f" {r['n_quarantined']} quarantined, "
+          f"{r['n_executor_errors']} executor errors); final fleet "
+          f"{r['n_replicas_final']}; p50 {_ms(r['p50_s'])} "
+          f"p99 {_ms(r['p99_s'])}")
+    print(f"  no-drop {'PASS' if chaos['no_drop_ok'] else 'FAIL'}; "
+          f"p99 {'PASS' if chaos['p99_ok'] else 'FAIL'} "
+          f"(<= {P99_BOUND_S:.1f}s)")
+    g = r["gossip"]
+    print(f"  gossip[epidemic]: busiest round {g['max_round_messages']}"
+          f" msgs vs bound {chaos['gossip_round_bound']} "
+          f"(2n log2 n at n={N_FLEET}); total {g['n_messages']} vs "
+          f"broadcast-equivalent {g['n_broadcast_equiv']}: "
+          f"{'PASS' if chaos['gossip_ok'] else 'FAIL'}")
+    print(f"  replay fingerprint {r['fingerprint'][:12]}.. == "
+          f"{chaos['replay_fingerprint'][:12]}..: "
+          f"{'PASS' if chaos['determinism_ok'] else 'FAIL'}")
+    a, b = poison["armed"], poison["baseline"]
+    print(f"poison pair: {N_POISON_FLEET} replicas, "
+          f"{poison_duration_s:.0f}s flood -> armed k={QUARANTINE_K}: "
+          f"{a['n_executor_errors']} errors "
+          f"({a['n_quarantined']} quarantined, max/sig "
+          f"{poison['max_errors_per_signature']} <= cap "
+          f"{poison['error_cap']}); baseline k=0: "
+          f"{b['n_executor_errors']} errors: "
+          f"{'PASS' if poison['quarantine_ok'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="chaos trace length (simulated seconds)")
+    ap.add_argument("--base-qps", type=float, default=70.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter trace (same 48-replica fleet — the "
+                         "gossip gate is AT n=48)")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = (main(duration_s=3.0, base_qps=60.0, poison_duration_s=3.0)
+            if args.quick and args.duration == 6.0
+            else main(duration_s=args.duration,
+                      base_qps=args.base_qps))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

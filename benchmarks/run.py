@@ -32,7 +32,7 @@ def _gates(name, rows):
 
 def main(quick: bool = False) -> int:
     from benchmarks import (bench_adaptive, bench_cluster,
-                            bench_elastic, bench_fanout,
+                            bench_elastic, bench_fanout, bench_fleet,
                             bench_fused_drain, bench_heavy_load,
                             bench_response_time, bench_retrieval,
                             bench_roofline, bench_scheduler,
@@ -121,6 +121,26 @@ def main(quick: bool = False) -> int:
     with open("BENCH_elastic.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_elastic.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: 48-replica chaos trace — quarantine, epidemic "
+          "gossip, rolling restarts (repro.chaos)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "fleet",
+        (lambda: bench_fleet.main(duration_s=3.0, base_qps=60.0,
+                                  poison_duration_s=3.0)) if quick
+        else bench_fleet.main)
+    csv_rows.append((name, us,
+                     f"no_drop={rows['no_drop_ok']} "
+                     f"p99={rows['p99_ok']} gossip={rows['gossip_ok']} "
+                     f"det={rows['determinism_ok']} "
+                     f"quarantine={rows['quarantine_ok']}"))
+    gates.update(_gates("fleet", rows))
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_fleet.json")
 
     print()
     print("=" * 72)

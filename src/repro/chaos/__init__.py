@@ -1,0 +1,46 @@
+"""repro.chaos — trace-driven chaos engineering for the trust fleet.
+
+Two halves, one seed:
+
+* ``trace`` — the deterministic workload engine. A :class:`TraceConfig`
+  materializes (via :func:`make_trace`) into a concrete arrival list —
+  diurnal rate curve, flash-crowd windows, Zipf tenant skew, correlated
+  hot-URL floods — plus a scripted fault timeline: query-of-death
+  poison windows (:func:`poisonable` evaluator wrapper), correlated
+  regional failures, coordinated rolling restarts, shard slowdowns.
+* ``driver`` — :func:`run_fleet_trace` replays a trace against a live
+  ``ClusterCoordinator`` and :func:`response_fingerprint` hashes the
+  result set for the bit-determinism gate.
+
+The chaos gates themselves live in ``benchmarks/bench_fleet.py``:
+zero-drop / exactly-one-response under the full trace, p99 within
+bound, O(k)-per-signature quarantine containment, O(n log n) gossip,
+and bit-identical replay.
+"""
+from repro.chaos.driver import (response_fingerprint, run_fleet_trace)
+from repro.chaos.trace import (EvaluatorHangError, FlashCrowd,
+                               POISON_FEATURE, POISON_HANG,
+                               POISON_RAISE, PoisonPillError,
+                               PoisonSpec, RegionalFailure,
+                               RollingRestartEvent, SlowShardEvent,
+                               TraceArrival, TraceConfig, make_trace,
+                               poisonable)
+
+__all__ = [
+    "EvaluatorHangError",
+    "FlashCrowd",
+    "POISON_FEATURE",
+    "POISON_HANG",
+    "POISON_RAISE",
+    "PoisonPillError",
+    "PoisonSpec",
+    "RegionalFailure",
+    "RollingRestartEvent",
+    "SlowShardEvent",
+    "TraceArrival",
+    "TraceConfig",
+    "make_trace",
+    "poisonable",
+    "response_fingerprint",
+    "run_fleet_trace",
+]

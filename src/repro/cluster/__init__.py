@@ -21,13 +21,28 @@ Fleet request lifecycle (who owns each hop):
        |                                      first completion wins,
        |                                      loser deduplicated
     gossip     cluster.gossip                 fresh Trust-DB cache fills
-       |                                      broadcast to siblings on a
-       |                                      bounded per-round budget
-       |                                      (hot URLs evaluated once
-       |                                      fleet-wide)
+       |                                      reach siblings on a bounded
+       |                                      per-round budget (hot URLs
+       |                                      evaluated once fleet-wide):
+       |                                      O(n^2) broadcast, or
+       |                                      epidemic peer-sampling push
+       |                                      (O(log n) fanout, relayed)
+       |                                      + anti-entropy pull —
+       |                                      O(n log n) per round
     adapt      cluster.autoscale_watermarks   fleet LoadMonitor EWMA ->
        |                                      adaptive AdmissionPolicy
-       |                                      watermarks + tenant quotas
+       |                                      watermarks + tenant quotas;
+       |                                      steal/hedge/autoscale scans
+       |                                      read hot/cold replicas from
+       |                                      one per-round
+       |                                      ``ReplicaLoadHeap``
+       |                                      (O(log n) per steal, not a
+       |                                      full re-sort)
+    restart    cluster.coordinator            coordinated rolling
+       |                                      restarts in ring-disjoint
+       |                                      waves: fence + handoff,
+       |                                      engine rebuilt in place,
+       |                                      membership held steady
     join/leave cluster.coordinator            runtime membership: joins
                                               rebalance minimally; a
                                               leave fences + drains its
@@ -48,15 +63,16 @@ from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
 from repro.cluster.coordinator import (ClusterConfig, ClusterCoordinator,
                                        ClusterStats)
-from repro.cluster.gossip import (GossipStats, TrustDelta,
+from repro.cluster.gossip import (GOSSIP_MODES, GossipStats, TrustDelta,
                                   TrustGossipBus)
+from repro.cluster.loadindex import ReplicaLoadHeap
 from repro.cluster.replica import ReplicaHandle
 from repro.cluster.routing import ConsistentHashRing, stable_hash
 
 __all__ = [
     "ConsistentHashRing", "stable_hash",
-    "ReplicaHandle",
+    "ReplicaHandle", "ReplicaLoadHeap",
     "ClusterConfig", "ClusterCoordinator", "ClusterStats",
     "WatermarkAutoscaler", "ClusterLoadSnapshot",
-    "TrustGossipBus", "TrustDelta", "GossipStats",
+    "TrustGossipBus", "TrustDelta", "GossipStats", "GOSSIP_MODES",
 ]

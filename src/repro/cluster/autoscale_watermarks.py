@@ -42,6 +42,18 @@ membership never flaps:
   ``scale_cooldown_ticks`` updates (joins need a tick to absorb load
   before the backlog statistics mean anything).
 
+Both hysteresis knobs are operator-tunable without constructing the
+autoscaler by hand: ``TrustIRConfig.autoscale_up_pressure`` (default
+0.75 — scale up when smoothed backlog fills 3/4 of the fleet's
+extended-deadline budget), ``autoscale_down_pressure`` (default 0.15 —
+scale down only when the n-1 fleet would still sit below 15%), and
+``autoscale_cooldown_ticks`` (default 2 autoscale updates) thread
+through ``ClusterCoordinator``'s default-autoscaler construction. The
+defaults keep the dead band wide relative to per-round backlog noise
+(0.15 vs 0.75 is a 5x span) so diurnal traffic crosses it slowly and
+flash crowds cross it immediately — the asymmetry chaos traces rely
+on.
+
 The static single-host behaviour is the degenerate case: one replica,
 ``update`` never called.
 """

@@ -99,6 +99,7 @@ from repro.serving.engine import slo_stats_of
 from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
 from repro.cluster.gossip import TrustGossipBus
+from repro.cluster.loadindex import ReplicaLoadHeap
 from repro.cluster.replica import ReplicaHandle
 from repro.cluster.routing import ConsistentHashRing
 
@@ -121,9 +122,13 @@ class ClusterConfig:
     min_replicas: int = 0
     max_replicas: int = 0
     # Cross-replica Trust-DB gossip (cache-fill delta broadcast on a
-    # bounded per-round budget).
+    # bounded per-round budget). "broadcast" delivers every kept delta
+    # to every sibling (O(n^2) messages/round); "epidemic" pushes each
+    # delta to ceil(log2 n) sampled peers with a per-round
+    # anti-entropy pull — O(n log n), the 48+ replica mode.
     gossip: bool = False
     gossip_budget_items: int = 256
+    gossip_mode: str = "broadcast"
     # Warm Trust-DB handoff on graceful leave: the leaving replica's
     # top-K freshest (url, trust) cache entries ship to the ring's new
     # owners via apply_trust_deltas (0 disables — the cache then
@@ -157,6 +162,9 @@ class ClusterStats:
     # tail-tolerant fan-out (repro.fanout)
     n_stripe_replications: int = 0      # slow shards mirrored to a sib
     n_mirror_drops: int = 0             # mirrors dropped on recovery
+    # coordinated rolling restarts
+    n_restarts: int = 0                 # replicas restarted in place
+    n_restart_waves: int = 0            # ring-disjoint waves executed
     # fleet-wide evaluation accounting (gossip's measured quantity)
     n_eval_items: int = 0               # fresh evaluations, fleet-wide
     n_duplicate_evals: int = 0          # same key evaluated again
@@ -214,7 +222,8 @@ class ClusterCoordinator:
                 min_replicas=getattr(cfg, "min_replicas", 0),
                 max_replicas=getattr(cfg, "max_replicas", 0),
                 autoscale=getattr(cfg, "max_replicas", 0) > 0,
-                gossip=getattr(cfg, "gossip", False))
+                gossip=getattr(cfg, "gossip", False),
+                gossip_mode=getattr(cfg, "gossip_mode", "broadcast"))
         self.cluster_cfg = cluster_cfg
         n = max(1, int(cfg.n_replicas))
         weights = (tuple(cfg.replica_weights) if cfg.replica_weights
@@ -269,9 +278,21 @@ class ClusterCoordinator:
         self.by_id: Dict[str, ReplicaHandle] = {
             r.replica_id: r for r in self.replicas}
 
-        self.autoscaler = autoscaler or (WatermarkAutoscaler()
-                                         if cc.autoscale else None)
-        self.gossip = (TrustGossipBus(cc.gossip_budget_items)
+        # Default autoscaler construction threads the hysteresis knobs
+        # through TrustIRConfig (autoscale_*: documented defaults match
+        # the previously hard-coded values) so chaos traces can
+        # exercise tight vs loose dead-band/cooldown without a
+        # hand-built autoscaler.
+        self.autoscaler = autoscaler or (WatermarkAutoscaler(
+            scale_up_pressure=getattr(cfg, "autoscale_up_pressure",
+                                      0.75),
+            scale_down_pressure=getattr(cfg, "autoscale_down_pressure",
+                                        0.15),
+            scale_cooldown_ticks=getattr(cfg, "autoscale_cooldown_ticks",
+                                         2))
+            if cc.autoscale else None)
+        self.gossip = (TrustGossipBus(cc.gossip_budget_items,
+                                      mode=cc.gossip_mode)
                        if cc.gossip else None)
         self.last_snapshot: Optional[ClusterLoadSnapshot] = None
         self.tenants_seen: set = set()
@@ -290,6 +311,13 @@ class ClusterCoordinator:
         # membership churn — the control plane scrapes them
         # continuously, so a leave/crash does not erase history.
         self._departed_sched: Dict[str, Dict] = {}
+        # Pre-restart scheduler counters of LIVE replicas (a rolling
+        # restart rebuilds the engine, zeroing its stats, but the id
+        # stays in the fleet — the lifetime aggregate must not dip).
+        self._restart_sched_base: Dict[str, Dict] = {}
+        # While a rolling restart executes, the autoscaler's membership
+        # vote is suppressed: restart waves must not race joins/leaves.
+        self._restart_hold = False
         # key -> fleet-wide fresh-evaluation count (duplicate-eval
         # accounting: the quantity gossip exists to reduce).
         self._eval_counts: Dict[int, int] = {}
@@ -806,21 +834,156 @@ class ClusterCoordinator:
                 self._reject_overflow(owner, qreq)
         return recovered
 
-    def _autoscale_membership(self) -> None:
+    def _autoscale_membership(
+            self, heap: Optional[ReplicaLoadHeap] = None) -> None:
         """Let the autoscaler's fleet-pressure vote change membership
         (bounded by [min_replicas, max_replicas], hysteresis inside the
-        policy). Scale-down drains the lightest-loaded replica out."""
+        policy). Scale-down drains the lightest-loaded replica out —
+        picked from the round's load heap in O(1) when one is live.
+        Held steady while a rolling restart executes (fencing waves
+        must not race membership changes)."""
         cc = self.cluster_cfg
-        if self.autoscaler is None or cc.max_replicas <= 0:
+        if self.autoscaler is None or cc.max_replicas <= 0 \
+                or self._restart_hold:
             return
         vote = self.autoscaler.membership_decision(
             self.n_replicas, cc.min_replicas, cc.max_replicas)
         if vote > 0:
             self.add_replica()
         elif vote < 0:
-            victim = min(self.replicas,
-                         key=lambda r: (r.queued_items, r.replica_id))
-            self.remove_replica(victim.replica_id, drain=True)
+            victim_id = None
+            if heap is not None and len(heap) == self.n_replicas:
+                cold = heap.coldest()
+                if cold is not None and cold[0] in self.by_id:
+                    victim_id = cold[0]
+            if victim_id is None:
+                victim_id = min(
+                    self.replicas,
+                    key=lambda r: (r.queued_items, r.replica_id)
+                ).replica_id
+            self.remove_replica(victim_id, drain=True)
+
+    # -- coordinated rolling restarts -----------------------------------------
+    def plan_restart_waves(self, max_wave_frac: float = 0.25
+                           ) -> List[List[str]]:
+        """Pack the fleet into ring-disjoint restart waves.
+
+        No replica shares a wave with one of its ring *inheritors*
+        (the replicas its tenants and doc-partitions would route to
+        while it is fenced): fencing a replica together with its
+        successor would bounce the handed-off backlog twice and leave
+        a tenant's whole route chain dark. Waves are additionally
+        capped at ``max_wave_frac`` of the fleet (at least 1, at most
+        n-1 — someone must stay up to serve)."""
+        rids = sorted(self.by_id)
+        n = len(rids)
+        if n <= 1:
+            raise ValueError(
+                "rolling restart needs at least 2 replicas")
+        cap = min(max(1, int(n * max_wave_frac)), n - 1)
+        tenants = sorted(self.tenants_seen)
+        succ: Dict[str, set] = {}
+        for rid in rids:
+            inheritors: set = set()
+            if tenants:
+                diff = self.ring.remap_diff(tenants, remove=rid)
+                inheritors |= {new for old, new in diff.values()
+                               if old == rid}
+            if self.retrieval is not None:
+                pdiff = self.ring.remap_diff(
+                    self.retrieval.partition_keys(), remove=rid)
+                inheritors |= {new for old, new in pdiff.values()
+                               if old == rid}
+            if not inheritors:
+                # Owns no known tenant/partition: still keep its ring
+                # sibling out of the wave (whoever WOULD inherit).
+                sib = self.ring.sibling_for(rid, exclude=(rid,))
+                if sib is not None:
+                    inheritors.add(sib)
+            succ[rid] = inheritors
+        waves: List[List[str]] = []
+        for rid in rids:
+            placed = False
+            for wave in waves:
+                if len(wave) >= cap:
+                    continue
+                if all(rid not in succ[w] and w not in succ[rid]
+                       for w in wave):
+                    wave.append(rid)
+                    placed = True
+                    break
+            if not placed:
+                waves.append([rid])
+        return waves
+
+    def rolling_restart(self, downtime_s: float = 0.0,
+                        max_wave_frac: float = 0.25
+                        ) -> List[List[str]]:
+        """Restart every replica in ring-disjoint waves without losing
+        a request or a membership slot.
+
+        Per wave: fence all members -> flush + collect their in-flight
+        work -> hand the queued backlog off to the (unfenced) ring
+        owners -> rebuild each member's engine in place (fresh
+        scheduler/shedder/cache/prior — the index shard survives, it
+        lives on durable storage; the warm cache does not, which is
+        what a real process restart costs) -> unfence. The autoscaler
+        holds membership steady for the whole plan
+        (``_autoscale_membership`` is suppressed), and each member's
+        pre-restart scheduler counters fold into the fleet-lifetime
+        aggregate so ``scheduler_stats`` never dips. Returns the
+        executed waves."""
+        waves = self.plan_restart_waves(max_wave_frac)
+        self._restart_hold = True
+        try:
+            for wave in waves:
+                members = [self.by_id[r] for r in wave
+                           if r in self.by_id]
+                for rep in members:
+                    self.ring.fence(rep.replica_id)
+                for rep in members:
+                    rep.engine.flush()
+                self._collect()
+                self._harvest_cache_deltas()
+                for rep in members:
+                    # Fenced => the ring routes every handed-off
+                    # request to a surviving (unfenced) replica; hedge
+                    # twins dedup exactly as on a graceful leave.
+                    self._handoff_queue(rep)
+                for rep in members:
+                    self._bank_restart_stats(rep)
+                    rep.restart(now_t=self._now_hint,
+                                downtime_s=downtime_s)
+                    if self.autoscaler is not None:
+                        self.autoscaler.forget(rep.replica_id)
+                    self.stats.n_restarts += 1
+                for rep in members:
+                    self.ring.unfence(rep.replica_id)
+                self._attach_searcher()
+                self.stats.n_restart_waves += 1
+        finally:
+            self._restart_hold = False
+        return waves
+
+    _SCHED_INT_KEYS = ("n_submitted", "n_admitted", "n_rejected",
+                       "n_batches", "n_batched_items", "n_hedges",
+                       "n_executor_errors", "n_quarantined")
+
+    @classmethod
+    def _merge_sched_stats(cls, dst: Dict, src: Dict) -> None:
+        for k in cls._SCHED_INT_KEYS:
+            dst[k] = dst.get(k, 0) + src.get(k, 0)
+        rbr = dst.setdefault("rejected_by_reason", {})
+        for reason, c in src.get("rejected_by_reason", {}).items():
+            rbr[reason] = rbr.get(reason, 0) + c
+
+    def _bank_restart_stats(self, rep: ReplicaHandle) -> None:
+        """Fold a replica's pre-restart scheduler counters into its
+        lifetime base (the rebuilt engine starts from zero, the fleet
+        aggregate must not)."""
+        base = self._restart_sched_base.setdefault(
+            rep.replica_id, {"rejected_by_reason": {}})
+        self._merge_sched_stats(base, rep.scheduler.stats.as_dict())
 
     # -- Trust-DB gossip -----------------------------------------------------
     def _harvest_cache_deltas(self) -> None:
@@ -839,7 +1002,8 @@ class ClusterCoordinator:
                     self.gossip.publish(rep.replica_id, keys, vals)
 
     # -- steal ---------------------------------------------------------------
-    def _steal_rebalance(self) -> None:
+    def _steal_rebalance(self,
+                         heap: Optional[ReplicaLoadHeap] = None) -> None:
         """Migrate work from the hottest bank to the idlest while the
         imbalance exceeds the threshold. Steals come off the BACK of the
         victim's lowest-importance non-empty class and a class is never
@@ -848,9 +1012,19 @@ class ClusterCoordinator:
         estimated eval cost on the victim (items x Trust-DB miss
         probability) leaves — a stolen chunk of cache-hot requests
         would displace cache-cold work only to re-evaluate warm items
-        on the thief's cold cache."""
+        on the thief's cold cache.
+
+        Hot/cold picks read the round's :class:`ReplicaLoadHeap` (each
+        steal touches exactly two replicas, updated in O(log n))
+        instead of re-sorting the fleet per iteration — the former
+        O(steals x n log n) per-round scan cost, which is what capped
+        the rebalancer at 32-64 replicas. Tie-breaks match the old
+        ``sorted`` order exactly, so only the complexity changed."""
         if self.n_replicas < 2:
             return
+        if heap is None:
+            heap = ReplicaLoadHeap({r.replica_id: r.queued_items
+                                    for r in self.replicas})
         # Per-scan cost memo: a candidate scored but left behind this
         # round keeps its score on the next steal_back call (a victim's
         # cache only changes when a batch lands, not mid-scan) —
@@ -868,11 +1042,11 @@ class ClusterCoordinator:
             return fn
 
         for _ in range(self.cluster_cfg.max_steals_per_round):
-            by_load = sorted(self.replicas,
-                             key=lambda r: (r.queued_items,
-                                            r.replica_id))
-            idle, hot = by_load[0], by_load[-1]
-            gap = hot.queued_items - idle.queued_items
+            cold, hot_top = heap.coldest(), heap.hottest()
+            if cold is None or hot_top is None:
+                break
+            idle, hot = self.by_id[cold[0]], self.by_id[hot_top[0]]
+            gap = hot_top[1] - cold[1]
             if gap < self.cluster_cfg.steal_threshold_items:
                 break
             qreq = hot.bank.steal_back(
@@ -895,6 +1069,8 @@ class ClusterCoordinator:
                 hot.bank.push(qreq)     # thief full: undo, stop trying
                 break
             self.stats.n_steals += 1
+            heap.update(hot.replica_id, hot.queued_items)
+            heap.update(idle.replica_id, idle.queued_items)
 
     # -- hedge ---------------------------------------------------------------
     def _backup_for(self, tenant: str, current: ReplicaHandle,
@@ -922,6 +1098,8 @@ class ClusterCoordinator:
         if self.hedge is None or self.hedge.budget_available < 1.0:
             return          # tokens only refill on enqueue, not mid-scan
         for rep in self.replicas:
+            if rep.queued_items == 0:
+                continue    # nothing waiting: skip the class walk
             now = rep.now()
             for p in Priority:
                 for qreq in rep.bank.queues[p].entries():
@@ -969,7 +1147,13 @@ class ClusterCoordinator:
             # anything: steal/hedge/autoscale read fresh stats.
             for rep in self.replicas:
                 rep.engine.poll()
-            self._steal_rebalance()
+            # ONE load index per round (O(n) heapify over the polled
+            # queue depths): the steal loop updates it per steal and
+            # the autoscale victim pick reads it, instead of each scan
+            # re-sorting the fleet.
+            heap = ReplicaLoadHeap({r.replica_id: r.queued_items
+                                    for r in self.replicas})
+            self._steal_rebalance(heap)
             self._hedge_scan()
             self._fanout_maintenance()
             any_batch = False
@@ -981,6 +1165,8 @@ class ClusterCoordinator:
                 rep.engine.drain(max_batches=1, flush=False)
                 any_batch |= \
                     rep.scheduler.executor.n_submitted > before
+                if rep.replica_id in heap:
+                    heap.update(rep.replica_id, rep.queued_items)
             # Gossip: harvest this round's cache fills (duplicate-eval
             # accounting either way), then broadcast the freshest
             # deltas to siblings under the per-round budget.
@@ -995,7 +1181,7 @@ class ClusterCoordinator:
                     % max(self.cluster_cfg.autoscale_every, 1) == 0:
                 self.last_snapshot = self.autoscaler.update(
                     self.replicas, self.tenants_seen)
-                self._autoscale_membership()
+                self._autoscale_membership(heap)
             if not any_batch:
                 # Queues are empty; land whatever is still in flight
                 # (their fold-backs may gossip) and finish.
@@ -1052,25 +1238,26 @@ class ClusterCoordinator:
     def scheduler_stats(self) -> Dict:
         """Fleet aggregate in the single-engine stats shape (drivers and
         reports consume both interchangeably), plus cluster extras."""
-        agg: Dict = {"n_submitted": 0, "n_admitted": 0, "n_rejected": 0,
-                     "rejected_by_reason": {}, "n_batches": 0,
-                     "n_batched_items": 0, "n_hedges": 0,
-                     "n_executor_errors": 0}
+        agg: Dict = {k: 0 for k in self._SCHED_INT_KEYS}
+        agg["rejected_by_reason"] = {}
         per_replica: Dict[str, Dict] = {}
         live = {rep.replica_id: rep.scheduler.stats.as_dict()
                 for rep in self.replicas}
         # Departed replicas' final counters stay in the fleet aggregate
-        # (membership churn must not erase submission history).
+        # (membership churn must not erase submission history), and a
+        # restarted replica's pre-restart base folds back under its
+        # still-live id (the rebuilt engine counts from zero).
         for rid, s in list(self._departed_sched.items()) \
                 + list(live.items()):
-            per_replica[rid] = s
-            for k in ("n_submitted", "n_admitted", "n_rejected",
-                      "n_batches", "n_batched_items", "n_hedges",
-                      "n_executor_errors"):
-                agg[k] += s.get(k, 0)
-            for reason, c in s["rejected_by_reason"].items():
-                agg["rejected_by_reason"][reason] = \
-                    agg["rejected_by_reason"].get(reason, 0) + c
+            entry: Dict = {"rejected_by_reason": {}}
+            self._merge_sched_stats(entry, s)
+            base = self._restart_sched_base.get(rid)
+            if base is not None:
+                self._merge_sched_stats(entry, base)
+            entry["mean_batch_fill"] = (entry["n_batched_items"]
+                                        / max(entry["n_batches"], 1))
+            per_replica[rid] = entry
+            self._merge_sched_stats(agg, entry)
         agg["n_hedges"] += self.stats.n_hedges
         agg["mean_batch_fill"] = (agg["n_batched_items"]
                                   / max(agg["n_batches"], 1))

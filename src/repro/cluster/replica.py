@@ -52,6 +52,19 @@ from repro.scheduling import (PriorityQueueBank, QueuedRequest, Scheduler,
 from repro.serving.engine import ServingEngine
 
 
+def _pow2_pad(a: np.ndarray) -> np.ndarray:
+    """Zero-pad a 1-D array to the next power-of-two length (>= 1), so
+    shape-specialized jit caches see O(log max_len) distinct shapes
+    instead of one per observed length."""
+    n = max(int(len(a)), 1)
+    target = 1 << (n - 1).bit_length()
+    if target == len(a):
+        return a
+    out = np.zeros(target, a.dtype)
+    out[:len(a)] = a
+    return out
+
+
 class ReplicaHandle:
     def __init__(self, replica_id: str, cfg: TrustIRConfig,
                  evaluate_chunk: Callable, weight: float = 1.0,
@@ -77,6 +90,14 @@ class ReplicaHandle:
         self.mirrors: Dict[str, object] = {}
         self.clock = (SimClock(sim_rate_items_per_s)
                       if sim_rate_items_per_s is not None else None)
+        # Construction state kept for in-place restarts (rolling
+        # restarts rebuild the engine under the same id/weight/shard).
+        self._ctor = dict(cfg=cfg, evaluate_chunk=evaluate_chunk,
+                          sched_cfg=sched_cfg,
+                          sim_rate_items_per_s=sim_rate_items_per_s,
+                          kv_pool=kv_pool, request_ids=request_ids,
+                          drain_mode=drain_mode,
+                          evaluate_batch=evaluate_batch)
         # drain_mode/evaluate_batch pass straight through: a fused
         # replica runs ONE jitted device step per micro-batch
         # (``core.fused_shedder``) instead of the host chunk loop.
@@ -161,8 +182,14 @@ class ReplicaHandle:
         keys = np.asarray(qreq.request.item_keys)
         if len(keys) == 0:
             return 0.0
+        # Pad to the next power of two: steal scans probe with every
+        # request's (Zipf-distributed) candidate count, and each fresh
+        # length would otherwise trace+compile a new lookup — O(log)
+        # distinct shapes keeps the jit cache warm. Key 0 is the cache
+        # sentinel, so padding can never hit.
+        padded = _pow2_pad(keys.astype(np.uint32))
         _, hit = TC.lookup(self.engine.shedder.cache,
-                           jnp.asarray(keys, jnp.uint32))
+                           jnp.asarray(padded, jnp.uint32))
         return float(len(keys) - int(np.asarray(hit).sum()))
 
     # -- warm-state handoff (graceful leave) ---------------------------------
@@ -190,14 +217,50 @@ class ReplicaHandle:
                            values: np.ndarray) -> None:
         """Fold a sibling's gossiped (key, trust) pairs into this
         replica's Trust-DB cache. Inserts only — the average-trust
-        prior stays strictly local."""
+        prior stays strictly local.
+
+        Padded to the next power of two before the device insert:
+        gossip deltas arrive in arbitrary lengths, and at fleet scale
+        (48+ replicas x one apply per sibling per round) compiling a
+        fresh insert per length dominated the drain loop. ``insert``
+        masks key 0 itself, so zero padding is dropped in-kernel."""
         if len(keys) == 0:
             return
+        pk = _pow2_pad(np.asarray(keys, np.uint32))
+        pv = _pow2_pad(np.asarray(values, np.float32))
         sh = self.engine.shedder
         sh.cache = TC.insert(sh.cache,
-                             jnp.asarray(keys, jnp.uint32),
-                             jnp.asarray(values, jnp.float32),
-                             jnp.ones((len(keys),), bool))
+                             jnp.asarray(pk, jnp.uint32),
+                             jnp.asarray(pv, jnp.float32),
+                             jnp.ones((len(pk),), bool))
+
+    # -- rolling restart -----------------------------------------------------
+    def restart(self, *, now_t: float, downtime_s: float = 0.0) -> None:
+        """Rebuild the serving stack in place (coordinated rolling
+        restart). The handle keeps its identity — ``replica_id``,
+        ``weight``, its ring-owned ``shard`` and hosted ``mirrors`` —
+        but the engine comes back cold: fresh scheduler/bank/shedder/
+        monitor state, empty Trust-DB cache, reset local prior, and a
+        clean completed-responses log (the coordinator banks the old
+        scheduler counters BEFORE calling this). The fresh simulated
+        clock lands at ``now_t + downtime_s`` so post-restart work is
+        stamped after the outage window, never before it."""
+        c = self._ctor
+        rate = c["sim_rate_items_per_s"]
+        self.clock = SimClock(rate) if rate is not None else None
+        retriever = getattr(self.engine, "retriever", None)
+        self.engine = ServingEngine(c["cfg"], c["evaluate_chunk"],
+                                    sim_clock=self.clock,
+                                    sched_cfg=c["sched_cfg"],
+                                    kv_pool=c["kv_pool"],
+                                    request_ids=c["request_ids"],
+                                    drain_mode=c["drain_mode"],
+                                    evaluate_batch=c["evaluate_batch"],
+                                    retriever=retriever)
+        self.n_collected = 0
+        self._cache_deltas = []
+        self.engine.shedder.on_shed = self._tap_shed
+        self.advance_to(float(now_t) + float(downtime_s))
 
     # -- time -----------------------------------------------------------------
     def now(self) -> float:

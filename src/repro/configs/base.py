@@ -305,6 +305,42 @@ class TrustIRConfig:
     # sibling replicas (bounded per-round budget) so correlated hot-URL
     # floods are evaluated once fleet-wide.
     gossip: bool = False
+    # Gossip delivery mode:
+    #   "broadcast" — every kept delta reaches EVERY sibling in the
+    #                 same round (O(n^2) messages/round; exact, the
+    #                 pre-chaos behaviour and the default).
+    #   "epidemic"  — each delta is pushed to ceil(log2 n) sampled
+    #                 peers per round and the rest catch up through a
+    #                 per-round anti-entropy pull (one sampled peer
+    #                 each), bounding messages/round at O(n log n) so
+    #                 48+ replica fleets do not hit the broadcast wall.
+    gossip_mode: str = "broadcast"
+    # Poison-pill quarantine (repro.scheduling.quarantine): a circuit
+    # breaker in front of the evaluator. After quarantine_k executor
+    # errors sharing one work signature (a hash of the candidate-set
+    # prefix — a query-of-death retrieves the same candidates every
+    # time), matching requests are prior-answered instead of
+    # re-poisoning the DrainExecutor window; after
+    # quarantine_probe_after_s one half-open probe re-tests the
+    # signature (success closes the breaker, failure re-opens it).
+    # 0 = disabled (the pre-chaos behaviour).
+    quarantine_k: int = 0
+    quarantine_probe_after_s: float = 2.0
+    # WatermarkAutoscaler hysteresis (cluster.autoscale_watermarks).
+    # Documented defaults, previously hard-coded in the autoscaler:
+    #   up_pressure 0.75   — fleet queue-fill above which the
+    #                        membership vote is scale-UP,
+    #   down_pressure 0.15 — projected post-shrink fill below which
+    #                        the vote is scale-DOWN (the dead band is
+    #                        everything in between),
+    #   cooldown_ticks 2   — autoscaler updates to wait after any
+    #                        membership change before voting again.
+    # Tight hysteresis (small dead band / cooldown) tracks flash
+    # crowds faster at the cost of membership churn; loose values lag
+    # the spike but keep the fleet steady.
+    autoscale_up_pressure: float = 0.75
+    autoscale_down_pressure: float = 0.15
+    autoscale_cooldown_ticks: int = 2
     # Retrieval front end (repro.retrieval): the sharded inverted-index
     # stage ahead of the trust pipeline. The synthetic corpus is fully
     # determined by (corpus_docs, corpus_vocab, corpus_zipf_a,

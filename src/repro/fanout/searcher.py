@@ -119,7 +119,20 @@ class FanoutSearcher(CorpusSearcher):
     # -- mirrors -------------------------------------------------------------
 
     def add_mirror(self, key: str, host_key: str,
-                   shard: IndexShard) -> None:
+                   shard: IndexShard, warm: bool = True) -> None:
+        """Register a mirror stripe for ``key`` hosted on ``host_key``.
+
+        ``warm`` fires one scoring probe at build time, forcing the
+        mirror's dense form (and the jitted score path) to build NOW —
+        replication is the slow path already, so the cost lands there.
+        Without it, the first hedged probe against a fresh mirror paid
+        the whole dense build inside its measured service time, which
+        both inflated the hedge's latency and fed the replicator's EWMA
+        a cold-start outlier for the very shard it was rescuing."""
+        if warm and shard.n_docs > 0:
+            term = next(iter(shard.index.postings), None)
+            if term is not None:
+                shard.retrieve(term, 1)
         self.mirrors[key] = (host_key, shard)
         self.n_mirrors_built += 1
 

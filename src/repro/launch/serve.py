@@ -27,8 +27,43 @@ import time
 import numpy as np
 
 
+_EPILOG = """\
+chaos trace replay (--trace)
+----------------------------
+--trace SECONDS replays a deterministic chaos trace (repro.chaos)
+against the fleet instead of the synthetic request loop: diurnal +
+flash-crowd arrivals with Zipf tenant skew and hot-URL floods, driven
+on simulated per-replica clocks calibrated to the measured evaluator
+throughput of --arch. The fault timeline is scripted by the
+--chaos-* flags; everything derives from --seed, so the same command
+line replays bit-identically within a process.
+
+  --trace 6 --replicas 8                  clean diurnal trace
+  --trace 6 --chaos-flash 5               + flash crowd x5 mid-trace
+  --trace 6 --chaos-poison 4 \\
+           --quarantine-k 3               + query-of-death flood; the
+                                          per-signature breaker
+                                          prior-answers repeats after
+                                          3 evaluator crashes
+  --trace 6 --chaos-crash 3               + 3 replicas crash the same
+                                          tick at 70% of the trace
+                                          (journal replay re-homes
+                                          their admitted work)
+  --trace 6 --chaos-restart               + coordinated rolling
+                                          restart sweep at 85%
+  --gossip --gossip-mode epidemic         O(log n)-fanout epidemic
+                                          push + anti-entropy pull
+                                          instead of O(n^2) broadcast
+
+The chaos gates themselves (no-drop, p99, O(k) quarantine containment,
+O(n log n) gossip, bit-determinism) run in benchmarks/bench_fleet.py.
+"""
+
+
 def main() -> int:
-    p = argparse.ArgumentParser(description=__doc__)
+    p = argparse.ArgumentParser(
+        description=__doc__, epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--arch", default="smollm-135m")
     p.add_argument("--n-requests", type=int, default=10)
     p.add_argument("--deadline-ms", type=float, default=50.0)
@@ -61,6 +96,34 @@ def main() -> int:
                    help="cross-replica Trust-DB gossip: broadcast "
                         "fresh cache fills to sibling replicas so hot "
                         "URLs are evaluated once fleet-wide")
+    p.add_argument("--gossip-mode", choices=("broadcast", "epidemic"),
+                   default="broadcast",
+                   help="delta dissemination: every-sibling broadcast "
+                        "(O(n^2) messages/round) or epidemic "
+                        "peer-sampling push + anti-entropy pull "
+                        "(O(n log n))")
+    p.add_argument("--quarantine-k", type=int, default=0,
+                   help="poison-pill circuit breaker: quarantine a "
+                        "work signature after this many executor "
+                        "errors (0 disables; see --trace epilog)")
+    p.add_argument("--trace", type=float, default=0.0,
+                   help="replay a chaos trace of this many simulated "
+                        "seconds instead of the request loop (see "
+                        "epilog)")
+    p.add_argument("--chaos-qps", type=float, default=60.0,
+                   help="chaos trace base arrival rate")
+    p.add_argument("--chaos-flash", type=float, default=0.0,
+                   help="flash-crowd rate multiplier over the middle "
+                        "of the trace (0 = no flash crowd)")
+    p.add_argument("--chaos-poison", type=float, default=0.0,
+                   help="query-of-death arrivals/s during the poison "
+                        "window (0 = no poison)")
+    p.add_argument("--chaos-crash", type=int, default=0,
+                   help="replicas crashing on the same tick at 70%% of "
+                        "the trace (0 = no regional failure)")
+    p.add_argument("--chaos-restart", action="store_true",
+                   help="coordinated rolling-restart sweep at 85%% of "
+                        "the trace")
     p.add_argument("--hedge-after-ms", type=float, default=0.0,
                    help="cluster hedge latency (0 disables; needs "
                         "--replicas >= 2)")
@@ -121,6 +184,8 @@ def main() -> int:
                   min_replicas=args.min_replicas,
                   max_replicas=args.max_replicas,
                   gossip=args.gossip,
+                  gossip_mode=args.gossip_mode,
+                  quarantine_k=max(args.quarantine_k, 0),
                   pipeline_depth=max(args.pipeline_depth, 1))
     if args.corpus > 0:
         cfg_kw["corpus_docs"] = args.corpus
@@ -145,6 +210,11 @@ def main() -> int:
 
     def evaluate_batch(chunk):            # jax-traceable (fused drain)
         return ev(chunk)
+
+    if args.trace > 0:
+        if args.sync:
+            raise SystemExit("--trace drives a fleet; drop --sync")
+        return _run_trace(args, cfg, rate)
 
     retrieval = queries = fanout_model = None
     if args.corpus > 0:
@@ -346,6 +416,62 @@ def main() -> int:
           f"{board['p99_s'] * 1e3:.1f} ms  SLO met "
           f"{100 * board['slo_met_frac']:.0f}%")
     return 0
+
+
+def _run_trace(args, cfg, rate: float) -> int:
+    """Replay a chaos trace against a simulated fleet calibrated to the
+    measured evaluator rate (the trace needs deterministic per-replica
+    clocks; the oracle evaluator stands in for the backbone so the
+    poison feature column can detonate it)."""
+    from repro.chaos import (FlashCrowd, PoisonSpec, RegionalFailure,
+                             RollingRestartEvent, TraceConfig,
+                             poisonable, run_fleet_trace)
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.core.pipeline import (SyntheticSearcher,
+                                     exact_oracle_evaluator)
+
+    searcher = SyntheticSearcher(corpus_size=20_000, seed=args.seed)
+    coord = ClusterCoordinator(
+        cfg, poisonable(exact_oracle_evaluator(searcher)),
+        cluster_cfg=ClusterConfig(
+            hedge_after_s=args.hedge_after_ms / 1e3,
+            gossip=args.gossip, gossip_mode=args.gossip_mode),
+        sim_rate_items_per_s=rate)
+    d = args.trace
+    tc = TraceConfig(
+        duration_s=d, base_qps=args.chaos_qps,
+        diurnal_period_s=d, seed=args.seed,
+        flash_crowds=([FlashCrowd(0.35 * d, 0.5 * d, args.chaos_flash)]
+                      if args.chaos_flash > 1.0 else []),
+        poison=([PoisonSpec(0.15 * d, 0.55 * d, qps=args.chaos_poison)]
+                if args.chaos_poison > 0 else []),
+        failures=([RegionalFailure(t=0.7 * d, n_crash=args.chaos_crash)]
+                  if args.chaos_crash > 0 else []),
+        restarts=([RollingRestartEvent(t=0.85 * d)]
+                  if args.chaos_restart else []))
+    rep = run_fleet_trace(coord, searcher, tc)
+    st = rep.scheduler_stats
+    rids = [r.request_id for r in rep.responses]
+    adm = [r for r in rep.responses if r.admitted]
+    lat = np.asarray([r.latency_s for r in adm])
+    no_drop = (len(rids) == len(set(rids)) == st["n_submitted"])
+    print(f"trace: {d:.0f}s, {len(rids)} responses "
+          f"({len(adm)} admitted, {st['n_quarantined']} quarantined, "
+          f"{st['n_executor_errors']} executor errors), fleet "
+          f"{coord.n_replicas} final; "
+          f"no-drop {'OK' if no_drop else 'VIOLATED'}")
+    for row in rep.churn_log:
+        print(f"  event t={row[0]:.2f}s {row[1]}"
+              + (f" {row[2]}" if row[2] else "")
+              + f" -> {row[3]} replicas")
+    if len(lat):
+        print(f"P50 {np.percentile(lat, 50) * 1e3:.1f} ms  "
+              f"P99 {np.percentile(lat, 99) * 1e3:.1f} ms")
+    if "gossip" in st:
+        g = st["gossip"]
+        print(f"gossip[{args.gossip_mode}]: {g['n_messages']} messages"
+              f" ({g['max_round_messages']} busiest round)")
+    return 0 if no_drop else 1
 
 
 if __name__ == "__main__":

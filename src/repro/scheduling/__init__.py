@@ -57,10 +57,36 @@ candidate sets start at *arrive*):
     arrive   ServingEngine.enqueue          stamp arrival + SLO deadline
        |
     admit    scheduling.priorities          per-regime priority ladder
-             scheduling.ratelimit           per-tenant token buckets
+       |     scheduling.ratelimit           per-tenant token buckets
        |                                    (reject => explicit Response
        |                                     from the average-trust
        |                                     prior, admitted=False)
+    quarantine scheduling.quarantine        per-WORK-SIGNATURE circuit
+       |     (PoisonQuarantine)             breaker in front of the
+       |                                    ladder: after ``k`` executor
+       |                                    errors on batches containing
+       |                                    a signature (md5 of the
+       |                                    candidate-key prefix), new
+       |                                    matching requests are
+       |                                    prior-answered
+       |                                    (REASON_QUARANTINED) instead
+       |                                    of queued — a query of death
+       |                                    costs O(k) evaluator crashes
+       |                                    per replica, not one per
+       |                                    arrival; after
+       |                                    ``quarantine_probe_after_s``
+       |                                    a HALF-OPEN timed probe
+       |                                    admits ONE matching request,
+       |                                    and a clean completion
+       |                                    closes the breaker (a
+       |                                    deployed evaluator fix
+       |                                    un-quarantines itself);
+       |                                    innocent signatures struck
+       |                                    by sharing a failed batch
+       |                                    decay back to zero on any
+       |                                    clean completion
+       |                                    (``TrustIRConfig.
+       |                                    quarantine_k`` — 0 disables)
     queue    scheduling.queues              EDF within class, strict
        |                                    priority across classes,
        |                                    static-capacity backpressure
@@ -149,9 +175,29 @@ gossip -> join/leave``:
        |                                    loser is deduplicated
        |                                    fleet-wide
     gossip   cluster.gossip                 fresh Trust-DB cache fills
-       |                                    broadcast to siblings on a
-       |                                    bounded budget (hot URLs
-       |                                    evaluated once fleet-wide)
+       |                                    reach siblings on a bounded
+       |                                    budget (hot URLs evaluated
+       |                                    once fleet-wide) — either
+       |                                    O(n^2) broadcast (default)
+       |                                    or epidemic peer-sampling
+       |                                    push (O(log n) fanout per
+       |                                    delta, relayed) + one
+       |                                    anti-entropy digest pull per
+       |                                    round, O(n log n) messages
+       |                                    total (``TrustIRConfig.
+       |                                    gossip_mode``)
+    restart  cluster.coordinator            coordinated rolling
+       |                                    restarts: ring-disjoint
+       |                                    waves (no replica restarts
+       |                                    alongside the sibling that
+       |                                    would inherit its keys),
+       |                                    fence + queue handoff +
+       |                                    warm-cache export per wave,
+       |                                    autoscaler membership votes
+       |                                    held for the sweep, restart
+       |                                    counters banked so fleet
+       |                                    stats survive the engine
+       |                                    rebuild
     join/    cluster.coordinator            runtime membership: fence +
     leave                                   drain-and-handoff (EDF
                                             order) on leave — queued
@@ -180,11 +226,15 @@ from repro.scheduling.batcher import (MicroBatch, MicroBatcher,
                                       to_fused_inputs)
 from repro.scheduling.executor import DrainExecutor
 from repro.scheduling.priorities import (AdmissionPolicy, Priority,
+                                         REASON_QUARANTINED,
                                          REASON_QUEUE_FULL,
                                          REASON_RATE_LIMITED,
                                          REASON_SHED_LOW_HEAVY,
                                          REASON_SHED_LOW_VERY_HEAVY,
                                          REASON_SHED_NORMAL_VERY_HEAVY)
+from repro.scheduling.quarantine import (PoisonQuarantine,
+                                         QuarantineStats,
+                                         work_signature)
 from repro.scheduling.queues import (EDFQueue, PriorityQueueBank,
                                      QueuedRequest)
 from repro.scheduling.ratelimit import TenantRateLimiter, TokenBucket
@@ -193,12 +243,14 @@ from repro.scheduling.scheduler import (Request, Response, Scheduler,
 
 __all__ = [
     "AdmissionPolicy", "Priority",
-    "REASON_QUEUE_FULL", "REASON_RATE_LIMITED", "REASON_SHED_LOW_HEAVY",
-    "REASON_SHED_LOW_VERY_HEAVY", "REASON_SHED_NORMAL_VERY_HEAVY",
+    "REASON_QUARANTINED", "REASON_QUEUE_FULL", "REASON_RATE_LIMITED",
+    "REASON_SHED_LOW_HEAVY", "REASON_SHED_LOW_VERY_HEAVY",
+    "REASON_SHED_NORMAL_VERY_HEAVY",
     "EDFQueue", "PriorityQueueBank", "QueuedRequest",
     "TenantRateLimiter", "TokenBucket",
     "DrainExecutor",
     "MicroBatch", "MicroBatcher", "to_fused_inputs",
+    "PoisonQuarantine", "QuarantineStats", "work_signature",
     "Request", "Response", "Scheduler", "SchedulerConfig",
     "SchedulerStats",
 ]

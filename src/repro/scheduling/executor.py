@@ -53,15 +53,19 @@ class DrainExecutor:
     back into responses (and whatever per-batch state the caller
     owns); ``rescue(batch, exc) -> list`` answers a batch whose
     dispatch or finalize raised. Both are supplied by the scheduler —
-    the executor owns *sequencing only*.
+    the executor owns *sequencing only*. An optional ``on_error(batch,
+    exc)`` observer fires before ``rescue`` so the owner can key
+    defences (the poison quarantine) off the failing work's signature.
     """
 
     def __init__(self, shedder, finalize: Callable[[Any, Any], List],
                  depth: int = 1,
-                 rescue: Optional[Callable[[Any, Exception], List]] = None):
+                 rescue: Optional[Callable[[Any, Exception], List]] = None,
+                 on_error: Optional[Callable[[Any, Exception], None]] = None):
         self.shedder = shedder
         self._finalize = finalize
         self._rescue = rescue
+        self._on_error = on_error
         self.depth = max(1, int(depth))
         self._window: Deque[Tuple[Any, Any]] = deque()
         self.n_dispatched = 0
@@ -152,6 +156,12 @@ class DrainExecutor:
 
     def _do_rescue(self, batch, exc: Exception) -> List:
         self.n_rescued += 1
+        if self._on_error is not None:
+            # Error-signature surfacing: the owner sees WHICH work blew
+            # up (the poison quarantine keys circuit breakers off it)
+            # before the batch is rescue-answered. Observational only —
+            # the rescue path below is unchanged.
+            self._on_error(batch, exc)
         if self._rescue is None:
             raise exc
         return self._rescue(batch, exc)

@@ -46,6 +46,7 @@ REASON_SHED_LOW_HEAVY = "shed_low_heavy"      # LOW over watermark, HEAVY
 REASON_SHED_LOW_VERY_HEAVY = "shed_low_very_heavy"
 REASON_SHED_NORMAL_VERY_HEAVY = "shed_normal_very_heavy"
 REASON_QUEUE_FULL = "queue_full"              # static-capacity backpressure
+REASON_QUARANTINED = "quarantined"            # poison-pill circuit breaker open
 
 
 @dataclass(frozen=True)

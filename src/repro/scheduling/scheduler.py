@@ -41,8 +41,10 @@ from repro.distribution.fault_tolerance import HedgedDispatch
 from repro.scheduling.batcher import MicroBatch, MicroBatcher
 from repro.scheduling.executor import DrainExecutor
 from repro.scheduling.priorities import (AdmissionPolicy, Priority,
+                                         REASON_QUARANTINED,
                                          REASON_QUEUE_FULL,
                                          REASON_RATE_LIMITED)
+from repro.scheduling.quarantine import PoisonQuarantine, work_signature
 from repro.scheduling.queues import PriorityQueueBank, QueuedRequest
 from repro.scheduling.ratelimit import TenantRateLimiter
 
@@ -103,6 +105,7 @@ class SchedulerStats:
     n_batched_items: int = 0
     n_hedges: int = 0
     n_executor_errors: int = 0      # batches rescued from the prior
+    n_quarantined: int = 0          # requests blocked by an open breaker
 
     def as_dict(self) -> Dict:
         return {"n_submitted": self.n_submitted,
@@ -113,6 +116,7 @@ class SchedulerStats:
                 "n_batched_items": self.n_batched_items,
                 "n_hedges": self.n_hedges,
                 "n_executor_errors": self.n_executor_errors,
+                "n_quarantined": self.n_quarantined,
                 "mean_batch_fill": (self.n_batched_items
                                     / max(self.n_batches, 1))}
 
@@ -150,6 +154,15 @@ class Scheduler:
                       if self.sched_cfg.hedge_after_s > 0 else None)
         self.stats = SchedulerStats()
         self._answered: set = set()   # rids whose hedged twin is queued
+        # Poison-pill circuit breakers in front of the evaluator
+        # (quarantine.PoisonQuarantine): quarantine_k = 0 disables and
+        # keeps the pre-chaos submit path untouched.
+        qk = getattr(cfg, "quarantine_k", 0)
+        self.quarantine = (
+            PoisonQuarantine(qk,
+                             getattr(cfg, "quarantine_probe_after_s", 2.0),
+                             self._now)
+            if qk > 0 else None)
         # ONE execution pipeline for every drain path (host chunk loop,
         # fused device step, cluster round-robin): the executor owns
         # the depth-k in-flight window, per-batch completion, and
@@ -157,7 +170,9 @@ class Scheduler:
         self.executor = DrainExecutor(
             shedder, self._split_responses,
             depth=getattr(cfg, "pipeline_depth", 1),
-            rescue=self._rescue_responses)
+            rescue=self._rescue_responses,
+            on_error=(self._note_executor_error
+                      if self.quarantine is not None else None))
 
     # The executor runs whatever shedder the scheduler carries; keeping
     # the reference in ONE place lets baseline drivers swap shedders
@@ -189,8 +204,18 @@ class Scheduler:
         now = self._now()
         n = len(request.item_keys)
         regime = self.offered_regime(n)
-        reason = self.policy.decide(priority, regime,
-                                    self.bank.fill_frac(priority))
+        reason = None
+        # Poison quarantine runs FIRST (even CRITICAL traffic: a query
+        # of death is toxic regardless of who asks) — but only once a
+        # breaker exists, so un-struck traffic never pays the hash.
+        if self.quarantine is not None and self.quarantine.any_tracked \
+                and not self.quarantine.check(
+                    work_signature(request.item_keys)):
+            reason = REASON_QUARANTINED
+            self.stats.n_quarantined += 1
+        if reason is None:
+            reason = self.policy.decide(priority, regime,
+                                        self.bank.fill_frac(priority))
         if reason is None and \
                 len(self.bank.queues[priority]) >= \
                 self.bank.queues[priority].capacity:
@@ -329,6 +354,19 @@ class Scheduler:
         """Block until every in-flight batch has landed."""
         return self.executor.flush()
 
+    def _note_executor_error(self, batch: MicroBatch,
+                             exc: Exception) -> None:
+        """Executor ``on_error`` observer: strike every distinct work
+        signature in the failed batch. Innocent requests co-batched
+        with a poison pill collect strikes too, but their signatures
+        decay back to zero the next time they complete cleanly
+        (``record_success``) — only work that fails persistently
+        crosses the k-strike threshold."""
+        sigs = {work_signature(qreq.request.item_keys)
+                for qreq, _, _ in batch.slices}
+        for sig in sorted(sigs):
+            self.quarantine.record_failure(sig)
+
     def _rescue_responses(self, batch: MicroBatch,
                           exc: Exception) -> List[Response]:
         """Exception-mid-window recovery: a batch whose dispatch or
@@ -366,6 +404,12 @@ class Scheduler:
         batch_start = end - shed.response_time_s
         self.stats.n_batches += 1
         self.stats.n_batched_items += nv
+        if self.quarantine is not None and self.quarantine.any_tracked:
+            # Clean completion: decay strikes / close half-open probes
+            # for every signature this batch carried.
+            for sig in sorted({work_signature(qreq.request.item_keys)
+                               for qreq, _, _ in batch.slices}):
+                self.quarantine.record_success(sig)
         responses: List[Response] = []
         for qreq, s, ln in batch.slices:
             rid = qreq.request.request_id

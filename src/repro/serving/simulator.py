@@ -307,7 +307,11 @@ class ChurnEvent:
             raise ValueError(f"unknown churn action {self.action!r}")
 
 
-def _apply_churn(coordinator, ev: ChurnEvent) -> Tuple:
+def apply_churn_event(coordinator, ev: ChurnEvent) -> Tuple:
+    """Fire one :class:`ChurnEvent` against a live coordinator and
+    return a ``(t, action, replica_id, n_replicas)`` log row. Public so
+    scripted fault timelines (``repro.chaos``) reuse the exact same
+    deterministic victim picks as the churn driver."""
     if ev.action == "join":
         h = coordinator.add_replica(weight=ev.weight,
                                     replica_id=ev.replica_id,
@@ -330,6 +334,9 @@ def _apply_churn(coordinator, ev: ChurnEvent) -> Tuple:
                   ).replica_id
     coordinator.remove_replica(rid, drain=(ev.action == "leave"))
     return (ev.t, ev.action, rid, coordinator.n_replicas)
+
+
+_apply_churn = apply_churn_event                      # back-compat alias
 
 
 def run_churn_workload(coordinator, searcher: SyntheticSearcher,

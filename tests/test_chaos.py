@@ -1,0 +1,322 @@
+"""Chaos workload engine + fleet hardening (repro.chaos, ISSUE 8):
+seeded trace generation (diurnal curve, flash crowds, Zipf tenants,
+hot-URL floods, poison windows) is bit-deterministic; the fleet driver
+holds the no-drop invariant through correlated regional failures and
+coordinated rolling restarts; epidemic gossip stays under its
+O(n log n) round bound; restart waves are ring-disjoint; and the
+heap-indexed replica load tracker matches the full-sort reference."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.chaos import (EvaluatorHangError, FlashCrowd, POISON_HANG,
+                         POISON_RAISE, PoisonSpec, RegionalFailure,
+                         RollingRestartEvent, SlowShardEvent,
+                         TraceConfig, make_trace, poisonable,
+                         response_fingerprint, run_fleet_trace)
+from repro.cluster import (ClusterConfig, ClusterCoordinator,
+                           ReplicaLoadHeap)
+from repro.configs.base import TrustIRConfig
+from repro.core.pipeline import SyntheticSearcher, exact_oracle_evaluator
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+
+
+def _trace_cfg(**kw):
+    kw.setdefault("duration_s", 4.0)
+    kw.setdefault("base_qps", 30.0)
+    kw.setdefault("seed", 5)
+    return TraceConfig(**kw)
+
+
+def test_make_trace_bit_deterministic():
+    cfg = _trace_cfg(flash_crowds=[FlashCrowd(1.0, 2.0, 4.0)],
+                     poison=[PoisonSpec(0.5, 3.0, qps=3.0)])
+    a1, e1 = make_trace(cfg)
+    a2, e2 = make_trace(cfg)
+    assert a1 == a2 and e1 == e2
+    assert len(a1) > 0
+    # ...and actually seed-sensitive.
+    a3, _ = make_trace(_trace_cfg(seed=6,
+                                  flash_crowds=[FlashCrowd(1.0, 2.0,
+                                                           4.0)]))
+    assert a3 != [a for a in a1 if a.poison == 0.0]
+
+
+def test_flash_crowd_multiplies_arrival_rate():
+    cfg = _trace_cfg(duration_s=8.0, base_qps=60.0,
+                     diurnal_amplitude=0.0,
+                     flash_crowds=[FlashCrowd(2.0, 4.0, 5.0)])
+    assert cfg.rate_at(3.0) == pytest.approx(300.0)
+    assert cfg.rate_at(5.0) == pytest.approx(60.0)
+    arrivals, _ = make_trace(cfg)
+    inside = sum(2.0 <= a.t < 4.0 for a in arrivals)
+    outside = sum(a.t < 2.0 or a.t >= 4.0 for a in arrivals)
+    # 2s of 5x vs 6s of 1x: expected ratio 10/6; demand at least 2x.
+    assert inside > 2 * outside / 3 * 2
+
+
+def test_tenant_skew_and_hot_urls():
+    arrivals, _ = make_trace(_trace_cfg(duration_s=10.0, base_qps=80.0,
+                                        n_tenants=8, hot_url_frac=0.4,
+                                        n_hot_queries=3))
+    by_tenant = {}
+    for a in arrivals:
+        by_tenant[a.tenant] = by_tenant.get(a.tenant, 0) + 1
+    # Zipf skew: a couple of tenants carry most of the traffic while
+    # the tail is thin (zipf=1 -> tenant0; the >= n tail collapses
+    # onto the last tenant, so those two are the heavy hitters).
+    counts = sorted(by_tenant.values(), reverse=True)
+    assert counts[0] + counts[1] > len(arrivals) / 2
+    assert counts[-1] < len(arrivals) / 20
+    assert by_tenant["tenant0"] > len(arrivals) / 4
+    hot = [a for a in arrivals if a.query.startswith("hot_")]
+    assert {a.query for a in hot} <= {f"hot_{i}" for i in range(3)}
+    assert 0.2 < len(hot) / len(arrivals) < 0.6
+
+
+def test_poison_substream_does_not_perturb_clean_traffic():
+    clean, _ = make_trace(_trace_cfg())
+    mixed, _ = make_trace(_trace_cfg(
+        poison=[PoisonSpec(1.0, 3.0, qps=4.0, n_signatures=2)]))
+    assert [a for a in mixed if a.poison == 0.0] == clean
+    deaths = [a for a in mixed if a.poison == POISON_RAISE]
+    assert len(deaths) > 0
+    assert {a.query for a in deaths} <= {"death_query_0",
+                                         "death_query_1"}
+    assert all(1.0 <= a.t < 3.0 for a in deaths)
+
+
+def test_trace_events_time_sorted_and_validated():
+    _, events = make_trace(_trace_cfg(
+        failures=[RegionalFailure(t=3.0, n_crash=2)],
+        restarts=[RollingRestartEvent(t=1.0)],
+        slow_events=[SlowShardEvent(t=2.0, action="slow")]))
+    assert [e.t for e in events] == [1.0, 2.0, 3.0]
+    with pytest.raises(ValueError):
+        SlowShardEvent(t=0.0, action="sideways")
+
+
+def test_poisonable_hang_mode():
+    ev = poisonable(lambda ch: np.asarray(ch["x"]))
+    with pytest.raises(EvaluatorHangError):
+        ev({"x": np.ones(2, np.float32),
+            "poison": np.array([0.0, POISON_HANG], np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# fleet trace replay
+
+
+def _fleet(n=6, quarantine_k=3, seed=0, gossip_mode="epidemic"):
+    cfg = TrustIRConfig(u_capacity=64, u_threshold=32,
+                        deadline_s=0.05, overload_deadline_s=0.1,
+                        chunk_size=32, cache_slots=1024,
+                        n_replicas=n, quarantine_k=quarantine_k,
+                        quarantine_probe_after_s=5.0)
+    cc = ClusterConfig(hedge_after_s=0.5, max_hedges=1,
+                       gossip=True, gossip_mode=gossip_mode,
+                       gossip_budget_items=256)
+    searcher = SyntheticSearcher(corpus_size=5_000, seed=seed)
+    coord = ClusterCoordinator(
+        cfg, poisonable(exact_oracle_evaluator(searcher)),
+        cluster_cfg=cc,
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    return coord, searcher
+
+
+def _chaos_cfg(d=1.5, qps=40.0):
+    return _trace_cfg(
+        duration_s=d, base_qps=qps, n_tenants=8,
+        max_results=400, hot_url_frac=0.4,
+        flash_crowds=[FlashCrowd(0.3 * d, 0.5 * d, 3.0)],
+        poison=[PoisonSpec(0.2 * d, 0.6 * d, qps=3.0,
+                           n_signatures=2)],
+        failures=[RegionalFailure(t=0.7 * d, n_crash=2)],
+        restarts=[RollingRestartEvent(t=0.85 * d)])
+
+
+def _assert_no_drop(rep):
+    rids = [r.request_id for r in rep.responses]
+    st = rep.scheduler_stats
+    assert len(rids) == len(set(rids))
+    assert len(rids) == st["n_submitted"]
+    assert len(rids) == st["cluster"]["n_enqueued"]
+
+
+def test_fleet_trace_no_drop_under_crash_and_restart():
+    coord, searcher = _fleet(n=6)
+    rep = run_fleet_trace(coord, searcher, _chaos_cfg())
+    _assert_no_drop(rep)
+    assert len(rep.responses) > 20
+    # The regional failure actually fired (2 crashes, no backfill:
+    # rolling restart holds membership rather than rescaling it).
+    crashes = [row for row in rep.churn_log if row[1] == "crash"]
+    assert len(crashes) == 2
+    assert coord.n_replicas == 4
+    assert any(row[1] == "rolling_restart" for row in rep.churn_log)
+    assert coord.stats.n_restarts == 4          # every survivor swept
+    assert coord.stats.n_restart_waves >= 2     # ring-disjoint packing
+
+
+def test_fleet_trace_replay_bit_identical():
+    cfg = _chaos_cfg(d=1.0)
+    reps = []
+    for _ in range(2):
+        coord, searcher = _fleet(n=4)
+        reps.append(run_fleet_trace(coord, searcher, cfg))
+    f1, f2 = (response_fingerprint(r.responses) for r in reps)
+    assert f1 == f2
+    # The fingerprint is sensitive, not vacuous.
+    assert response_fingerprint(reps[0].responses[:-1]) != f1
+
+
+def test_epidemic_gossip_round_bound():
+    n = 8
+    coord, searcher = _fleet(n=n, gossip_mode="epidemic")
+    rep = run_fleet_trace(
+        coord, searcher,
+        _trace_cfg(duration_s=1.5, base_qps=40.0, hot_url_frac=0.5,
+                   max_results=400))
+    g = rep.scheduler_stats["gossip"]
+    assert g["n_messages"] > 0
+    bound = 2 * n * math.ceil(math.log2(n))
+    assert g["max_round_messages"] <= bound
+    # The strict total-savings-vs-broadcast claim only holds past the
+    # O(log n) crossover and is gated AT n=48 in bench_fleet; here the
+    # accounting just has to be coherent.
+    assert g["n_broadcast_equiv"] > 0
+    _assert_no_drop(rep)
+
+
+# ---------------------------------------------------------------------------
+# rolling restarts
+
+
+def _drive(coord, searcher, n_queries=24, seed=3):
+    for i in range(n_queries):
+        res = searcher.search(f"q{seed}_{i}", 64)
+        feats = dict(res.features)
+        feats["trust"] = res.exact_trust
+        feats["poison"] = np.zeros(len(res.url_ids), np.float32)
+        coord.enqueue(res.url_ids, res.buckets, feats, slo_s=2.0,
+                      tenant=f"tenant{i % 4}")
+    coord.drain()
+
+
+def test_restart_waves_partition_and_cap():
+    coord, searcher = _fleet(n=8)
+    _drive(coord, searcher)
+    waves = coord.plan_restart_waves(max_wave_frac=0.25)
+    flat = [r for w in waves for r in w]
+    assert sorted(flat) == sorted(coord.by_id)   # everyone, exactly once
+    assert max(len(w) for w in waves) <= 2       # 25% of 8
+    assert len(waves) >= 4
+
+
+def test_restart_waves_ring_disjoint_siblings():
+    """With no tenants seen, a replica's inheritor is its ring sibling;
+    no wave may contain both (fencing a replica with its successor
+    leaves the handed-off backlog dark)."""
+    coord, _ = _fleet(n=6)
+    waves = coord.plan_restart_waves(max_wave_frac=0.5)
+    for wave in waves:
+        for rid in wave:
+            sib = coord.ring.sibling_for(rid, exclude=(rid,))
+            assert sib not in wave
+
+
+def test_rolling_restart_holds_membership_and_banks_stats():
+    coord, searcher = _fleet(n=6)
+    _drive(coord, searcher)
+    before = coord.scheduler_stats()
+    assert before["n_submitted"] == 24
+    n_before = coord.n_replicas
+    coord.rolling_restart()
+    after = coord.scheduler_stats()
+    assert coord.n_replicas == n_before
+    # Pre-restart counters folded into the fleet aggregate, not lost
+    # with the rebuilt engines.
+    assert after["n_submitted"] == before["n_submitted"]
+    assert after["n_batches"] >= before["n_batches"]
+    # The fleet still serves.
+    _drive(coord, searcher, n_queries=8, seed=4)
+    final = coord.scheduler_stats()
+    assert final["n_submitted"] == 32
+    rids = [r.request_id for r in coord.completed]
+    assert len(rids) == len(set(rids)) == 32
+
+
+def test_rolling_restart_needs_a_fleet():
+    coord, _ = _fleet(n=1)
+    with pytest.raises(ValueError):
+        coord.plan_restart_waves()
+
+
+def test_replica_restart_rebuilds_cold_keeps_identity():
+    coord, searcher = _fleet(n=2)
+    _drive(coord, searcher)
+    rep = coord.replicas[0]
+    old_engine = rep.engine
+    rep.restart(now_t=10.0, downtime_s=0.5)
+    assert rep.engine is not old_engine
+    assert rep.n_collected == 0
+    assert rep.take_cache_deltas() == []
+    assert rep.clock.t == pytest.approx(10.5)   # after the outage
+    assert rep.replica_id == coord.replicas[0].replica_id
+
+
+# ---------------------------------------------------------------------------
+# heap-indexed hot/cold replica tracking
+
+
+def _reference(load):
+    order = sorted(load.items(), key=lambda kv: (kv[1], kv[0]))
+    return order[0], order[-1]
+
+
+def test_load_heap_matches_full_sort_reference():
+    rng = np.random.default_rng(17)
+    load = {f"r{i}": int(rng.integers(0, 50)) for i in range(12)}
+    heap = ReplicaLoadHeap(dict(load))
+    for step in range(300):
+        op = rng.integers(3)
+        if op == 0 and load:                    # update
+            rid = f"r{int(rng.integers(12))}"
+            if rid in load:
+                load[rid] = int(rng.integers(0, 50))
+                heap.update(rid, load[rid])
+        elif op == 1 and len(load) > 2:         # remove
+            rid = sorted(load)[int(rng.integers(len(load)))]
+            del load[rid]
+            heap.remove(rid)
+        else:                                   # (re-)insert
+            rid = f"r{int(rng.integers(12))}"
+            load[rid] = int(rng.integers(0, 50))
+            heap.update(rid, load[rid])
+        (cmin, lmin), (cmax, lmax) = _reference(load)
+        assert heap.coldest() == (cmin, lmin)
+        assert heap.hottest() == (cmax, lmax)
+        assert heap.gap() == lmax - lmin
+        assert len(heap) == len(load)
+
+
+def test_load_heap_tie_breaks_match_sorted_pick():
+    """Equal loads: coldest() is the smallest rid, hottest() the
+    largest — the exact picks the old sorted()-per-scan code made."""
+    heap = ReplicaLoadHeap({"r2": 5, "r0": 5, "r1": 5})
+    assert heap.coldest() == ("r0", 5)
+    assert heap.hottest() == ("r2", 5)
+    heap.remove("r2")
+    assert heap.hottest() == ("r1", 5)
+    assert "r2" not in heap
+
+
+def test_load_heap_empty():
+    heap = ReplicaLoadHeap()
+    assert heap.coldest() is None
+    assert heap.hottest() is None
+    assert heap.gap() == 0

@@ -438,3 +438,54 @@ def test_cluster_without_fanout_keeps_legacy_searcher():
     assert not isinstance(coord.searcher, FanoutSearcher)
     coord.set_shard_slowdown("r0", 4.0)           # guarded no-op
     assert "fanout" not in coord.scheduler_stats()
+
+
+def test_add_mirror_warm_builds_dense_form(retrieval, corpus):
+    """Mirror cold-start fix (ISSUE 8): ``add_mirror`` fires one probe
+    at build time, so the dense scoring form (and the jitted score
+    path) exists BEFORE the first hedged probe — replication already is
+    the slow path, the rescue probe must not pay the build (which both
+    inflated the hedge's measured latency and fed the replicator's
+    EWMA a cold-start outlier for the shard being rescued)."""
+    shards, keys = _shards(retrieval)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0)
+    warm = mirror_shard_of(shards[2])
+    assert not warm._dense_ok                 # fresh mirror is lazy
+    fan.add_mirror("s2", "s5", warm)          # default warms
+    assert warm._dense_ok
+    cold = mirror_shard_of(shards[1])
+    fan.add_mirror("s1", "s4", cold, warm=False)
+    assert not cold._dense_ok                 # opt-out stays lazy
+
+
+def test_request_and_shard_hedges_contend_without_starving(retrieval,
+                                                           corpus):
+    """Budget contention (ISSUE 8): whole-request hedge twins (the
+    cluster dispatcher) and per-shard fan-out probes spend ONE token
+    bucket. Interleaved under a budget tighter than the combined
+    demand, each side hedges only when it holds a full token — the
+    books balance, neither layer starves the other, and every shard
+    hedge still dedups its twin."""
+    shards, keys = _shards(retrieval)
+    base = HedgedDispatch(hedge_after_s=0.5, budget_frac=0.5,
+                          budget_burst=1.0)
+    model = ShardServiceModel(seed=9, straggler_p=0.0)
+    model.set_persistent("s1", 40.0)          # every probe wants a hedge
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0,
+                         service_model=model,
+                         hedge=base.probe_view(0.006),
+                         hedge_after_s=0.006)
+    fan.add_mirror("s1", "s4", mirror_shard_of(shards[keys.index("s1")]))
+    req_hedges = shard_hedges = 0
+    for i, q in enumerate(_queries(corpus, 9)):
+        if i % 3 == 0 and base.should_hedge(0.6, 0):
+            base.record_hedge()               # request-level twin issued
+            req_hedges += 1
+        before = fan.n_shard_hedges
+        fan.retrieve(q, 8)                    # shard probes, same bucket
+        shard_hedges += fan.n_shard_hedges - before
+        base.note_request(1)                  # admitted traffic earns
+    assert req_hedges > 0 and shard_hedges > 0        # neither starves
+    assert base.n_hedges_issued == req_hedges + shard_hedges
+    assert fan.n_shard_twin_drops == shard_hedges     # dedup holds
+    assert base.budget_available >= 0.0               # never overdrawn

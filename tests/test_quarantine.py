@@ -1,0 +1,235 @@
+"""Poison-pill quarantine (repro.scheduling.quarantine, ISSUE 8): the
+per-signature circuit breaker unit behaviour (k strikes -> OPEN, timed
+half-open probe, recovery, innocent-signature strike decay) and its
+scheduler integration — quarantined requests get explicit
+``"quarantined"`` responses, never silent drops, and evaluator errors
+stay O(k) per signature while the breaker holds."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.chaos import POISON_FEATURE, PoisonPillError, poisonable
+from repro.configs.trust_ir import smoke_config
+from repro.core import SimClock
+from repro.scheduling import REASON_QUARANTINED, SchedulerConfig
+from repro.scheduling.quarantine import (CLOSED, HALF_OPEN, OPEN,
+                                         PoisonQuarantine,
+                                         work_signature)
+from repro.serving.engine import ServingEngine
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _breaker(k=3, probe_after_s=1.0):
+    clk = _Clock()
+    return PoisonQuarantine(k, probe_after_s, clk), clk
+
+
+# ---------------------------------------------------------------------------
+# work_signature: stable content hash of the candidate-set prefix
+
+
+def test_signature_stable_and_content_keyed():
+    keys = np.arange(1, 101, dtype=np.uint32)
+    assert work_signature(keys) == work_signature(keys.copy())
+    assert work_signature(keys) != work_signature(keys + 1)
+    # Only the prefix feeds the hash: O(1) per request.
+    long = np.arange(1, 10_001, dtype=np.uint32)
+    assert work_signature(long) == work_signature(long[:64])
+    assert len(work_signature(keys)) == 12
+
+
+def test_signature_tenant_and_replica_agnostic():
+    """The same query of death retrieves the same candidates no matter
+    who asks — one signature fleet-wide is the whole point."""
+    keys = np.array([7, 8, 9], dtype=np.uint32)
+    assert work_signature(keys) == work_signature(list(keys))
+    assert work_signature(keys) == work_signature(keys.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# breaker state machine
+
+
+def test_opens_after_k_strikes_blocks_matching_work():
+    q, _ = _breaker(k=3)
+    sig = "deadbeef0123"
+    for i in range(3):
+        assert q.state_of(sig) == (CLOSED if i < 3 else OPEN)
+        assert q.check(sig)              # flows while CLOSED
+        q.record_failure(sig)
+    assert q.state_of(sig) == OPEN
+    assert not q.check(sig)              # blocked inside the timer
+    assert not q.check(sig)
+    assert q.stats.n_blocked == 2
+    assert q.stats.n_opens == 1
+    # An unrelated signature is untouched.
+    assert q.check("aaaaaaaaaaaa")
+
+
+def test_half_open_admits_exactly_one_probe():
+    q, clk = _breaker(k=2, probe_after_s=1.0)
+    sig = "deadbeef0123"
+    for _ in range(2):
+        q.record_failure(sig)
+    assert not q.check(sig)              # OPEN, timer running
+    clk.t = 1.5                          # past probe_after_s
+    assert q.check(sig)                  # THE probe
+    assert q.state_of(sig) == HALF_OPEN
+    assert not q.check(sig)              # second ask: probe already out
+    assert q.stats.n_probes == 1
+
+
+def test_probe_failure_reopens_success_closes():
+    q, clk = _breaker(k=2, probe_after_s=1.0)
+    sig = "deadbeef0123"
+    for _ in range(2):
+        q.record_failure(sig)
+    clk.t = 1.0
+    assert q.check(sig)
+    q.record_failure(sig)                # probe failed
+    assert q.state_of(sig) == OPEN
+    assert not q.check(sig)              # timer restarted at t=1.0
+    clk.t = 2.0
+    assert q.check(sig)                  # next probe
+    q.record_success(sig)                # probe succeeded
+    assert q.state_of(sig) == CLOSED
+    assert q.stats.n_recoveries == 1
+    # Fully recovered: strikes reset, needs k FRESH failures to reopen.
+    q.record_failure(sig)
+    assert q.state_of(sig) == CLOSED
+
+
+def test_innocent_cobatched_signature_decays():
+    """A clean signature co-batched with poison collects strikes but
+    never accumulates to k as long as it also completes cleanly."""
+    q, _ = _breaker(k=3)
+    sig = "c0ffee000000"
+    for _ in range(10):
+        q.record_failure(sig)            # shared a window with poison
+        q.record_failure(sig)
+        q.record_success(sig)            # ...then evaluated cleanly
+        assert q.state_of(sig) == CLOSED
+    assert q.check(sig)
+
+
+def test_breaker_rejects_bad_config():
+    clk = _Clock()
+    with pytest.raises(ValueError):
+        PoisonQuarantine(0, 1.0, clk)
+    with pytest.raises(ValueError):
+        PoisonQuarantine(3, 0.0, clk)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: explicit responses + the O(k) error bound
+
+
+def _poison_engine(k=3, probe_after_s=100.0):
+    cfg = dataclasses.replace(smoke_config(), quarantine_k=k,
+                              quarantine_probe_after_s=probe_after_s)
+    clock = SimClock(rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    evaluate = poisonable(lambda ch: np.asarray(ch["x"]))
+    eng = ServingEngine(cfg, evaluate, sim_clock=clock,
+                        sched_cfg=SchedulerConfig())
+    return eng, clock
+
+
+def _poison_arrays(n=8, poison=1.0):
+    # SAME keys every call: a query of death retrieves the same
+    # candidate set every time it is asked.
+    return (np.arange(1, n + 1, dtype=np.uint32),
+            np.zeros(n, np.int32),
+            {"x": np.linspace(0, 5, n, dtype=np.float32),
+             POISON_FEATURE: np.full(n, poison, np.float32)})
+
+
+def test_scheduler_quarantines_after_k_and_caps_errors():
+    k = 3
+    eng, _ = _poison_engine(k=k)
+    n_submits = 12
+    for _ in range(n_submits):
+        eng.enqueue(*_poison_arrays())
+        eng.drain()
+    stats = eng.scheduler_stats()
+    # k strikes opened the breaker; everything after is prior-answered
+    # at admission — the evaluator never sees it again.
+    assert stats["n_executor_errors"] == k
+    assert stats["n_quarantined"] == n_submits - k
+    blocked = [r for r in eng.completed
+               if r.reason == REASON_QUARANTINED]
+    assert len(blocked) == n_submits - k
+    for r in blocked:                    # explicit response, never a drop
+        assert not r.admitted
+        assert np.isfinite(r.trust).all()
+    # No-drop: every submit produced exactly one response.
+    rids = [r.request_id for r in eng.completed]
+    assert len(rids) == n_submits and len(set(rids)) == n_submits
+    q = eng.scheduler.quarantine
+    assert q.max_errors_per_signature() == k
+    (sig_row,) = q.per_signature().values()
+    assert sig_row["state"] == OPEN
+
+
+def test_scheduler_probe_recovers_cured_signature():
+    eng, clock = _poison_engine(k=2, probe_after_s=1.0)
+    for _ in range(2):                   # strike the breaker open
+        eng.enqueue(*_poison_arrays())
+        eng.drain()
+    eng.enqueue(*_poison_arrays())       # blocked
+    assert eng.completed[-1].reason == REASON_QUARANTINED
+    clock.t += 5.0                       # past the probe timer
+    # The "cure": same candidate set, poison flag cleared (e.g. the
+    # toxic document was purged upstream). Admitted as the half-open
+    # probe, completes cleanly, closes the breaker.
+    eng.enqueue(*_poison_arrays(poison=0.0))
+    eng.drain()
+    probe = eng.completed[-1]
+    assert probe.admitted
+    q = eng.scheduler.quarantine
+    sig = work_signature(_poison_arrays()[0])
+    assert q.state_of(sig) == CLOSED
+    # Flow restored.
+    eng.enqueue(*_poison_arrays(poison=0.0))
+    assert eng.scheduler_stats()["n_quarantined"] == 1
+
+
+def test_clean_traffic_never_pays_for_the_breaker():
+    eng, _ = _poison_engine(k=3)
+    for i in range(6):
+        r = np.random.default_rng(i)
+        eng.enqueue(np.arange(i * 100 + 1, i * 100 + 9, dtype=np.uint32),
+                    np.zeros(8, np.int32),
+                    {"x": r.uniform(0, 5, 8).astype(np.float32),
+                     POISON_FEATURE: np.zeros(8, np.float32)})
+        eng.drain()
+    stats = eng.scheduler_stats()
+    assert stats["n_executor_errors"] == 0
+    assert stats["n_quarantined"] == 0
+    assert all(r.admitted for r in eng.completed)
+
+
+def test_quarantine_disabled_by_default():
+    eng = ServingEngine(smoke_config(),
+                        lambda ch: np.asarray(ch["x"]))
+    assert eng.scheduler.quarantine is None
+
+
+def test_poisonable_wrapper_raises_only_on_flag():
+    ev = poisonable(lambda ch: np.asarray(ch["x"]) * 2)
+    clean = {"x": np.ones(4, np.float32),
+             POISON_FEATURE: np.zeros(4, np.float32)}
+    assert np.allclose(ev(clean), 2.0)
+    bad = dict(clean, **{POISON_FEATURE: np.array([0, 0, 1, 0],
+                                                  np.float32)})
+    with pytest.raises(PoisonPillError):
+        ev(bad)
+    no_col = {"x": np.ones(4, np.float32)}
+    assert np.allclose(ev(no_col), 2.0)  # column absent: pass-through
