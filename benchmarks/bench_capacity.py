@@ -1,0 +1,308 @@
+"""Feedforward capacity planner acceptance (repro.cluster.capacity).
+
+Phase 1 — **fit**: a clean trace (no chaos events) replayed against a
+2-replica sim-clocked fleet populates the coordinator's always-on
+``ServiceTimeModel`` (per-stage service times, device rate, Trust-DB
+hit fraction — warmup-gated batches excluded).
+
+Phase 2 — **what-if validation**: the fitted model's ``predict()`` is
+asked for throughput and p99 on held-out workload configs it never saw
+(different seed, rate, fleet size), and each prediction is checked
+against a real simulated fleet replaying the same arrival curve.
+
+  * ``predict_ok`` — |predicted - measured| / measured stays within
+    ``PREDICT_TOL`` (25%) for BOTH p99 and throughput on every held-out
+    config (>= 3 configs), with nothing rejected (the model predicts
+    admitted work, so a lossy run would make the comparison vacuous).
+
+Phase 3 — **feedforward vs reactive**: the same diurnal-ramp trace
+replayed against two elastic fleets (min 2, max 6 replicas). The
+reactive fleet scales on measured pressure only — it notices the ramp
+after queues already built. The feedforward fleet runs the
+``ForecastPlanner``: joins fire ``warmup_lead_s`` before the predicted
+breach and arrive jit-prewarmed at production shapes.
+
+  * ``feedforward_ok`` — the feedforward fleet's admitted p99 beats the
+    reactive fleet's, BOTH runs drop nothing, every planner join was
+    prewarmed before serving (``n_prewarm_joins >= 1``) and none of
+    them hit an unseen jit shape on its first real batch
+    (``n_cold_joins == 0``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+PREDICT_TOL = 0.25                 # phase-2 relative-error wall
+# (n_replicas, base_qps) pairs the model never saw during fit.
+HELD_OUT = ((1, 5.0), (2, 8.0), (4, 14.0))
+SLO_S = 2.0
+
+
+def _base_cfg(n_replicas: int):
+    from repro.configs.base import TrustIRConfig
+    return TrustIRConfig(u_capacity=64, u_threshold=32,
+                         deadline_s=0.05, overload_deadline_s=0.1,
+                         chunk_size=32, cache_slots=4096,
+                         n_replicas=n_replicas)
+
+
+def _fleet(n_replicas: int, seed: int, steal: bool = False,
+           autoscaler=None, **cluster_kw):
+    """Sim-clocked fleet, hedging off. Phase 1/2 fleets also disable
+    stealing so they match ``predict()``'s mechanics (pure ring
+    routing); the phase-3 elastic fleets turn it back on — stealing is
+    what migrates queued backlog onto a freshly joined replica."""
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    from repro.core.pipeline import (SyntheticSearcher,
+                                     exact_oracle_evaluator)
+    cfg = _base_cfg(n_replicas)
+    cc = ClusterConfig(
+        steal_threshold_items=1 if steal else 10**9,
+        hedge_after_s=0.0, **cluster_kw)
+    searcher = SyntheticSearcher(corpus_size=200_000, seed=seed)
+    coord = ClusterCoordinator(
+        cfg, exact_oracle_evaluator(searcher), cluster_cfg=cc,
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s,
+        autoscaler=autoscaler)
+    return coord, searcher
+
+
+def _clean_trace(duration_s: float, base_qps: float, seed: int,
+                 amplitude: float = 0.3, period_s: float = 0.0):
+    """Chaos-free trace: rate curve + tenant/result-size skew only."""
+    from repro.chaos import TraceConfig
+    return TraceConfig(
+        duration_s=duration_s, base_qps=base_qps, seed=seed,
+        diurnal_amplitude=amplitude,
+        diurnal_period_s=period_s or duration_s,
+        # Mild tenant skew + no hot-URL floods: the capacity claim is
+        # about rate, not about skew routing, and a stable Trust-DB
+        # miss fraction is what makes the fitted eval_frac transfer
+        # from the fit run to the held-out runs.
+        n_tenants=16, tenant_zipf_a=1.1, hot_url_frac=0.0,
+        min_results=50, max_results=600, slo_s=SLO_S)
+
+
+def _workload(tc, searcher) -> List[Tuple[float, int, str]]:
+    """The exact arrival curve ``run_fleet_trace`` will enqueue, in the
+    ``(t, n_items, tenant)`` rows ``predict()`` consumes — the searcher
+    is deterministic, so sizing candidates here costs nothing."""
+    from repro.chaos import make_trace
+    arrivals, _ = make_trace(tc)
+    return [(a.t, len(searcher.search(a.query, a.n_results).url_ids),
+             a.tenant) for a in arrivals]
+
+
+def _measured(rep, coord) -> Dict:
+    """Measured counterpart of ``CapacityPrediction``: same definitions
+    (throughput = admitted items / makespan, p99 over admitted
+    latency), so the phase-2 comparison is apples to apples."""
+    admitted = [r for r in rep.responses if r.admitted]
+    lat = np.asarray([r.latency_s for r in admitted])
+    n_items = int(sum(len(r.trust) for r in admitted))
+    makespan = max((r.clock.t for r in coord.replicas
+                    if r.clock is not None), default=0.0)
+    rids = [r.request_id for r in rep.responses]
+    st = rep.scheduler_stats
+    return {
+        "n_responses": len(rep.responses),
+        "n_rejected": len(rep.responses) - len(admitted),
+        "n_items": n_items,
+        "makespan_s": float(makespan),
+        "throughput_items_per_s": (n_items / makespan
+                                   if makespan > 0 else 0.0),
+        "p50_s": float(np.percentile(lat, 50)) if len(lat) else None,
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else None,
+        "no_drop_ok": bool(len(rids) == len(set(rids))
+                           and len(rids) == st["n_submitted"]
+                           and len(rids) == st["cluster"]["n_enqueued"]),
+    }
+
+
+def run_fit(duration_s: float, base_qps: float, seed: int = 101) -> Dict:
+    """Phase 1: populate a ServiceTimeModel from a clean fleet run."""
+    from repro.chaos import run_fleet_trace
+    coord, searcher = _fleet(2, seed=seed)
+    tc = _clean_trace(duration_s, base_qps, seed)
+    rep = run_fleet_trace(coord, searcher, tc)
+    out = _measured(rep, coord)
+    out["model"] = coord.capacity.fitted()
+    return out, coord.capacity, coord.max_batch_items
+
+
+def run_predict_validation(model, batch_items: int, duration_s: float,
+                           seed: int = 202) -> Dict:
+    """Phase 2: predict() vs a real fleet on held-out configs."""
+    from repro.chaos import run_fleet_trace
+    from repro.cluster import predict
+    rate = model.device_rate_items_per_s()
+    round_s = batch_items / max(rate, 1e-9)
+    configs = []
+    for n_replicas, qps in HELD_OUT:
+        coord, searcher = _fleet(n_replicas, seed=seed + n_replicas)
+        tc = _clean_trace(duration_s, qps, seed + n_replicas,
+                          amplitude=0.4)
+        workload = _workload(tc, searcher)
+        pred = predict(model, n_replicas, 1, batch_items, workload,
+                       round_s=round_s)
+        rep = run_fleet_trace(coord, searcher, tc, round_s=round_s)
+        meas = _measured(rep, coord)
+        err_p99 = (abs(pred.p99_s - meas["p99_s"]) / meas["p99_s"]
+                   if meas["p99_s"] else float("inf"))
+        err_thr = (abs(pred.throughput_items_per_s
+                       - meas["throughput_items_per_s"])
+                   / meas["throughput_items_per_s"]
+                   if meas["throughput_items_per_s"] else float("inf"))
+        configs.append({
+            "n_replicas": n_replicas, "base_qps": qps,
+            "predicted_p99_s": pred.p99_s,
+            "measured_p99_s": meas["p99_s"],
+            "p99_rel_err": err_p99,
+            "predicted_items_per_s": pred.throughput_items_per_s,
+            "measured_items_per_s": meas["throughput_items_per_s"],
+            "throughput_rel_err": err_thr,
+            "n_rejected": meas["n_rejected"],
+            "config_ok": bool(err_p99 <= PREDICT_TOL
+                              and err_thr <= PREDICT_TOL
+                              and meas["n_rejected"] == 0
+                              and meas["no_drop_ok"]),
+        })
+    return {
+        "tolerance": PREDICT_TOL,
+        "configs": configs,
+        "predict_ok": bool(len(configs) >= 3
+                           and all(c["config_ok"] for c in configs)),
+    }
+
+
+def run_feedforward_contrast(duration_s: float, base_qps: float,
+                             seed: int = 303) -> Dict:
+    """Phase 3: same diurnal ramp, reactive vs feedforward elastic
+    fleet. The ramp starts BELOW the reactive scale-up watermark and
+    climbs 4x (quarter-period sinusoid, amplitude 3): the reactive
+    fleet only notices once queues have already built, which is
+    exactly the lag the forecast planner is meant to erase. Per-tenant
+    quotas are disabled (tenant_capacity_frac=0) — quota shedding is a
+    fairness mechanism orthogonal to membership policy, and it would
+    mask the p99 contrast by silently dropping the hot tenant."""
+    from repro.chaos import run_fleet_trace
+    from repro.cluster.autoscale_watermarks import WatermarkAutoscaler
+
+    def elastic(forecast: bool):
+        coord, searcher = _fleet(
+            2, seed=seed, steal=True,
+            autoscaler=WatermarkAutoscaler(tenant_capacity_frac=0.0),
+            autoscale=True, autoscale_every=2,
+            min_replicas=2, max_replicas=6,
+            forecast=forecast, warmup_lead_s=0.75,
+            forecast_window_s=1.0)
+        tc = _clean_trace(duration_s, base_qps, seed,
+                          amplitude=3.0, period_s=4.0 * duration_s)
+        rep = run_fleet_trace(coord, searcher, tc)
+        out = _measured(rep, coord)
+        cl = rep.scheduler_stats["cluster"]
+        out["n_joins"] = cl["n_joins"]
+        out["n_prewarm_joins"] = cl["n_prewarm_joins"]
+        out["n_cold_joins"] = cl["n_cold_joins"]
+        out["n_replicas_final"] = coord.n_replicas
+        if forecast:
+            out["forecast"] = {
+                k: v for k, v in
+                rep.scheduler_stats["forecast"].items() if k != "log"}
+            out["prewarm_log"] = [
+                (row[0], row[2]) for row in rep.churn_log
+                if row[1] == "prewarm_join"]
+        return out
+
+    reactive = elastic(forecast=False)
+    feedforward = elastic(forecast=True)
+    ok = bool(
+        feedforward["p99_s"] is not None
+        and reactive["p99_s"] is not None
+        and feedforward["p99_s"] < reactive["p99_s"]
+        and reactive["n_rejected"] == 0 and reactive["no_drop_ok"]
+        and feedforward["n_rejected"] == 0
+        and feedforward["no_drop_ok"]
+        and feedforward["n_prewarm_joins"] >= 1
+        and feedforward["n_cold_joins"] == 0)
+    return {"reactive": reactive, "feedforward": feedforward,
+            "feedforward_ok": ok}
+
+
+def main(fit_duration_s: float = 6.0, fit_qps: float = 10.0,
+         valid_duration_s: float = 5.0, ramp_duration_s: float = 8.0,
+         ramp_qps: float = 7.0) -> Dict:
+    print("== phase 1: fit ServiceTimeModel from a clean fleet run ==")
+    fit, model, batch_items = run_fit(fit_duration_s, fit_qps)
+    m = fit["model"]
+    print(f"  device rate {model.device_rate_items_per_s():.0f} "
+          f"items/s, eval_frac {model.eval_frac():.2f}, "
+          f"warmup-excluded batches {m['n_warmup_excluded']}")
+
+    print("== phase 2: predict() vs simulator on held-out configs ==")
+    pv = run_predict_validation(model, batch_items, valid_duration_s)
+    for c in pv["configs"]:
+        print(f"  n={c['n_replicas']} qps={c['base_qps']:.0f}: "
+              f"p99 {c['predicted_p99_s']*1e3:.1f}ms pred vs "
+              f"{c['measured_p99_s']*1e3:.1f}ms meas "
+              f"(err {c['p99_rel_err']*100:.0f}%), throughput "
+              f"{c['predicted_items_per_s']:.0f} vs "
+              f"{c['measured_items_per_s']:.0f} items/s "
+              f"(err {c['throughput_rel_err']*100:.0f}%)")
+    print(f"  predict_ok={pv['predict_ok']} "
+          f"(tolerance {PREDICT_TOL:.0%}, "
+          f"{len(pv['configs'])} held-out configs)")
+
+    print("== phase 3: feedforward vs reactive on a diurnal ramp ==")
+    ff = run_feedforward_contrast(ramp_duration_s, ramp_qps)
+    r, f = ff["reactive"], ff["feedforward"]
+    print(f"  reactive:    p99 {r['p99_s']*1e3:.1f}ms, "
+          f"{r['n_joins']} joins, {r['n_rejected']} rejected")
+    print(f"  feedforward: p99 {f['p99_s']*1e3:.1f}ms, "
+          f"{f['n_joins']} joins ({f['n_prewarm_joins']} prewarmed, "
+          f"{f['n_cold_joins']} jit-cold), "
+          f"{f['n_rejected']} rejected")
+    print(f"  feedforward_ok={ff['feedforward_ok']}")
+
+    rows = {
+        "fit": fit,
+        "predict": pv,
+        "contrast": ff,
+        "predict_ok": pv["predict_ok"],
+        "feedforward_ok": ff["feedforward_ok"],
+        "no_drop_ok": bool(fit["no_drop_ok"]
+                           and r["no_drop_ok"] and f["no_drop_ok"]),
+    }
+    for gate in ("predict_ok", "feedforward_ok", "no_drop_ok"):
+        print(f"{'PASS' if rows[gate] else 'FAIL'}: {gate}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fit-duration", type=float, default=6.0)
+    ap.add_argument("--ramp-duration", type=float, default=8.0)
+    ap.add_argument("--ramp-qps", type=float, default=7.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="short traces (CI)")
+    ap.add_argument("--json", type=str, default="",
+                    help="write gate/report JSON here")
+    args = ap.parse_args()
+    if args.quick:
+        rows = main(fit_duration_s=4.0, valid_duration_s=3.0,
+                    ramp_duration_s=6.0)
+    else:
+        rows = main(fit_duration_s=args.fit_duration,
+                    ramp_duration_s=args.ramp_duration,
+                    ramp_qps=args.ramp_qps)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+        print(f"wrote {args.json}")
+    ok = all(rows[k] for k in ("predict_ok", "feedforward_ok",
+                               "no_drop_ok"))
+    raise SystemExit(0 if ok else 1)

@@ -31,12 +31,13 @@ def _gates(name, rows):
 
 
 def main(quick: bool = False) -> int:
-    from benchmarks import (bench_adaptive, bench_cluster,
-                            bench_elastic, bench_fanout, bench_fleet,
-                            bench_fused_drain, bench_heavy_load,
-                            bench_response_time, bench_retrieval,
-                            bench_roofline, bench_scheduler,
-                            bench_throughput, bench_very_heavy_load)
+    from benchmarks import (bench_adaptive, bench_capacity,
+                            bench_cluster, bench_elastic, bench_fanout,
+                            bench_fleet, bench_fused_drain,
+                            bench_heavy_load, bench_response_time,
+                            bench_retrieval, bench_roofline,
+                            bench_scheduler, bench_throughput,
+                            bench_very_heavy_load)
 
     csv_rows = []
     gates = {}
@@ -141,6 +142,29 @@ def main(quick: bool = False) -> int:
     with open("BENCH_fleet.json", "w") as f:
         json.dump(rows, f, indent=2)
     print("wrote BENCH_fleet.json")
+
+    print()
+    print("=" * 72)
+    print("Beyond-paper: feedforward capacity planner — what-if "
+          "prediction + forecast scaling (repro.cluster.capacity)")
+    print("=" * 72)
+    name, us, rows = _timed(
+        "capacity",
+        (lambda: bench_capacity.main(fit_duration_s=4.0,
+                                     valid_duration_s=3.0,
+                                     ramp_duration_s=6.0)) if quick
+        else bench_capacity.main)
+    ff = rows["contrast"]
+    csv_rows.append((name, us,
+                     f"predict={rows['predict_ok']} "
+                     f"ff p99 {ff['feedforward']['p99_s']*1e3:.0f}ms "
+                     f"vs reactive {ff['reactive']['p99_s']*1e3:.0f}ms "
+                     f"({ff['feedforward']['n_prewarm_joins']} prewarmed "
+                     f"joins, {ff['feedforward']['n_cold_joins']} cold)"))
+    gates.update(_gates("capacity", rows))
+    with open("BENCH_capacity.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote BENCH_capacity.json")
 
     print()
     print("=" * 72)

@@ -90,6 +90,14 @@ def run_fleet_trace(coordinator, searcher, cfg: TraceConfig,
         _fire(coordinator, events[ei], log)
         ei += 1
     coordinator.drain()
+    # Feedforward joins are fleet events too: fold the planner's
+    # prewarm-join log into the churn timeline (same 4-tuple shape the
+    # scripted events use) so trace reports show WHEN capacity arrived
+    # relative to the wave that needed it.
+    for entry in getattr(coordinator, "planner_log", []):
+        log.append((entry["t"], "prewarm_join", entry["replica"],
+                    entry["n_replicas"]))
+    log.sort(key=lambda row: row[0])
     return SchedSimReport(responses=list(coordinator.completed[n0:]),
                           scheduler_stats=coordinator.scheduler_stats(),
                           churn_log=log)

@@ -29,6 +29,23 @@ Fleet request lifecycle (who owns each hop):
        |                                      (O(log n) fanout, relayed)
        |                                      + anti-entropy pull —
        |                                      O(n log n) per round
+    forecast   cluster.capacity               feedforward planner: NHPP
+       |                                      arrival-rate extrapolation
+       |                                      warmup_lead_s ahead ->
+       |                                      forecast pressure folded
+       |                                      into the SAME autoscaler
+       |                                      vote (shared cooldown);
+       |                                      per-stage ServiceTimeModel
+       |                                      fitted from live drain
+       |                                      stats feeds what-if
+       |                                      predict(n, depth, batch)
+    prewarm    cluster.replica                planner-triggered joins
+       |                                      jit-compile the batch
+       |                                      shape on synthetic keys
+       |                                      BEFORE the ring unfences
+       |                                      them (cache/prior/clock
+       |                                      snapshot-restored, so
+       |                                      prewarm leaves no state)
     adapt      cluster.autoscale_watermarks   fleet LoadMonitor EWMA ->
        |                                      adaptive AdmissionPolicy
        |                                      watermarks + tenant quotas;
@@ -61,6 +78,9 @@ the single-host PR-1 behaviour exactly.
 """
 from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
+from repro.cluster.capacity import (CapacityPrediction, ForecastPlanner,
+                                    ForecastSnapshot, ServiceTimeModel,
+                                    StageStats, predict)
 from repro.cluster.coordinator import (ClusterConfig, ClusterCoordinator,
                                        ClusterStats)
 from repro.cluster.gossip import (GOSSIP_MODES, GossipStats, TrustDelta,
@@ -74,5 +94,7 @@ __all__ = [
     "ReplicaHandle", "ReplicaLoadHeap",
     "ClusterConfig", "ClusterCoordinator", "ClusterStats",
     "WatermarkAutoscaler", "ClusterLoadSnapshot",
+    "ServiceTimeModel", "StageStats", "CapacityPrediction", "predict",
+    "ForecastPlanner", "ForecastSnapshot",
     "TrustGossipBus", "TrustDelta", "GossipStats", "GOSSIP_MODES",
 ]

@@ -143,7 +143,8 @@ class WatermarkAutoscaler:
 
     # -- elastic membership policy -------------------------------------------
     def membership_decision(self, n_replicas: int, min_replicas: int,
-                            max_replicas: int) -> int:
+                            max_replicas: int,
+                            forecast_pressure: float = None) -> int:
         """Vote on fleet size from the last update's smoothed pressure:
         ``+1`` (join a replica), ``-1`` (gracefully drain one out), or
         ``0``. Call after :meth:`update` each autoscale tick.
@@ -154,6 +155,18 @@ class WatermarkAutoscaler:
         pressure toward the up threshold), and any decision starts a
         ``scale_cooldown_ticks``-update cooldown — so consecutive ticks
         can never alternate join/leave on a noisy boundary.
+
+        ``forecast_pressure`` is the feedforward signal (the
+        ``ForecastPlanner``'s predicted utilization ``warmup_lead_s``
+        ahead, on the same scale as the reactive pressure). It is
+        deliberately folded into THIS vote rather than voting on its
+        own: a planner-initiated pre-warm join takes the same branch,
+        sets the same ``_last_scale_tick``, and therefore consumes the
+        same cooldown as a reactive join — reactive and feedforward can
+        never produce two membership changes inside one cooldown
+        window. The forecast also vetoes scale-down (shedding capacity
+        right before a predicted wave is the one unforced error the
+        planner exists to prevent).
         """
         if max_replicas <= 0:               # membership fixed
             return 0
@@ -162,12 +175,15 @@ class WatermarkAutoscaler:
                 < self.scale_cooldown_ticks:
             return 0
         p = self._pressure
-        if p >= self.scale_up_pressure and n_replicas < max_replicas:
+        f = forecast_pressure if forecast_pressure is not None else 0.0
+        if max(p, f) >= self.scale_up_pressure \
+                and n_replicas < max_replicas:
             self._last_scale_tick = self.n_updates
             return 1
         survivors = max(n_replicas - 1, 1)
         if n_replicas > min_replicas and \
-                p * n_replicas / survivors <= self.scale_down_pressure:
+                max(p, f) * n_replicas / survivors \
+                <= self.scale_down_pressure:
             self._last_scale_tick = self.n_updates
             return -1
         return 0

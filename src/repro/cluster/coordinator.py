@@ -98,6 +98,7 @@ from repro.serving.engine import slo_stats_of
 
 from repro.cluster.autoscale_watermarks import (ClusterLoadSnapshot,
                                                 WatermarkAutoscaler)
+from repro.cluster.capacity import ForecastPlanner, ServiceTimeModel
 from repro.cluster.gossip import TrustGossipBus
 from repro.cluster.loadindex import ReplicaLoadHeap
 from repro.cluster.replica import ReplicaHandle
@@ -138,6 +139,13 @@ class ClusterConfig:
     # cost on the victim (items x Trust-DB miss probability), so
     # cache-cold work migrates and cache-hot work stays warm.
     cost_aware_steal: bool = True
+    # Feedforward capacity planning (repro.cluster.capacity): forecast
+    # the arrival curve, feed predicted utilization into the
+    # autoscaler's membership vote, and jit-prewarm planner-initiated
+    # joins at production shapes before the ring routes to them.
+    forecast: bool = False
+    warmup_lead_s: float = 0.5
+    forecast_window_s: float = 2.0
 
 
 @dataclass
@@ -168,6 +176,11 @@ class ClusterStats:
     # fleet-wide evaluation accounting (gossip's measured quantity)
     n_eval_items: int = 0               # fresh evaluations, fleet-wide
     n_duplicate_evals: int = 0          # same key evaluated again
+    # feedforward capacity planning (repro.cluster.capacity)
+    n_prewarm_joins: int = 0            # joins primed before unfencing
+    n_cold_joins: int = 0               # prewarmed joins whose FIRST
+                                        # real batch still hit a fresh
+                                        # jit shape (should stay 0)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -223,7 +236,10 @@ class ClusterCoordinator:
                 max_replicas=getattr(cfg, "max_replicas", 0),
                 autoscale=getattr(cfg, "max_replicas", 0) > 0,
                 gossip=getattr(cfg, "gossip", False),
-                gossip_mode=getattr(cfg, "gossip_mode", "broadcast"))
+                gossip_mode=getattr(cfg, "gossip_mode", "broadcast"),
+                forecast=getattr(cfg, "forecast", False),
+                warmup_lead_s=getattr(cfg, "warmup_lead_s", 0.5),
+                forecast_window_s=getattr(cfg, "forecast_window_s", 2.0))
         self.cluster_cfg = cluster_cfg
         n = max(1, int(cfg.n_replicas))
         weights = (tuple(cfg.replica_weights) if cfg.replica_weights
@@ -294,6 +310,34 @@ class ClusterCoordinator:
         self.gossip = (TrustGossipBus(cc.gossip_budget_items,
                                       mode=cc.gossip_mode)
                        if cc.gossip else None)
+        # Capacity planning: the ServiceTimeModel is always on (its
+        # taps are O(1) appends on paths that already fire) so any run
+        # — reactive or feedforward — yields a fit the what-if
+        # `capacity.predict` can consume. The ForecastPlanner (and with
+        # it pre-warmed, feedforward-voted joins) only activates with
+        # cc.forecast.
+        self.capacity = ServiceTimeModel(
+            cfg,
+            drain_mode=(drain_mode or getattr(cfg, "drain_mode", "host")),
+            pipeline_depth=getattr(cfg, "pipeline_depth", 1),
+            batch_items=self.max_batch_items)
+        self.planner = (ForecastPlanner(
+            warmup_lead_s=cc.warmup_lead_s,
+            window_s=cc.forecast_window_s,
+            model=self.capacity) if cc.forecast else None)
+        # (t, replica_id, forecast_pressure) per planner-initiated join
+        # — surfaced through scheduler_stats()["forecast"]["log"] and
+        # merged into chaos churn timelines by the trace driver.
+        self.planner_log: List[Dict] = []
+        # Feature schema of live traffic (leaf trailing-shapes+dtypes),
+        # captured at first enqueue: what a prewarm batch must look
+        # like for the jit signatures to match production.
+        self._feature_schema: Optional[Dict] = None
+        # replica_id -> warmup-exclusion count right after its prewarm;
+        # consumed when its first real batch lands (cold-join gate).
+        self._prewarm_watch: Dict[str, int] = {}
+        for rep in self.replicas:
+            self._attach_capacity(rep)
         self.last_snapshot: Optional[ClusterLoadSnapshot] = None
         self.tenants_seen: set = set()
         # Latest arrival timestamp observed: the fleet's notion of
@@ -387,6 +431,19 @@ class ClusterCoordinator:
         return max((r.clock.t for r in self.replicas
                     if r.clock is not None), default=0.0)
 
+    # -- capacity-model taps -------------------------------------------------
+    def _attach_capacity(self, rep: ReplicaHandle) -> None:
+        """Wire one replica's measurement taps into the fleet
+        ServiceTimeModel. Re-run after a restart — the rebuilt engine
+        carries a fresh monitor and shedder."""
+        rep.monitor.on_observe = self.capacity.observe_device
+        rep.stats_tap = self._capacity_shed_tap
+
+    def _capacity_shed_tap(self, result, warm: bool) -> None:
+        self.capacity.observe_batch(result.uload, result.n_evaluated,
+                                    result.response_time_s,
+                                    n_cached=result.n_cached, warm=warm)
+
     # -- route + admit -------------------------------------------------------
     def route(self, tenant: str) -> ReplicaHandle:
         return self.by_id[self.ring.route(tenant)]
@@ -410,6 +467,17 @@ class ClusterCoordinator:
         self._now_hint = max(self._now_hint,
                              t_arrival if t_arrival is not None
                              else arrival)
+        if self.planner is not None:
+            self.planner.observe_arrival(
+                t_arrival if t_arrival is not None else arrival,
+                len(item_keys))
+        if self._feature_schema is None:
+            # Remember what a work batch looks like, so a prewarm pass
+            # can jit-compile the exact serving shapes later.
+            self._feature_schema = {
+                k: (tuple(np.asarray(v).shape[1:]),
+                    str(np.asarray(v).dtype))
+                for k, v in features.items()}
         rid = rep.engine.enqueue(item_keys, buckets, features,
                                  slo_s=slo_s, priority=priority,
                                  tenant=tenant,
@@ -597,7 +665,8 @@ class ClusterCoordinator:
     def add_replica(self, handle: Optional[ReplicaHandle] = None, *,
                     weight: float = 1.0,
                     replica_id: Optional[str] = None,
-                    now_t: Optional[float] = None) -> ReplicaHandle:
+                    now_t: Optional[float] = None,
+                    prewarm: bool = False) -> ReplicaHandle:
         """Join a replica at runtime. With no ``handle`` a fresh one is
         built from the coordinator's own factory state (same config,
         evaluator, scheduler policy, and simulated rate as the seed
@@ -610,7 +679,14 @@ class ClusterCoordinator:
         fast-forwards to ``now_t`` (default: the latest arrival
         timestamp the fleet has seen) — a replica joining now cannot
         complete work in the past, but it also does not inherit a busy
-        sibling's backlog-inflated clock."""
+        sibling's backlog-inflated clock.
+
+        ``prewarm=True`` (the feedforward-join path) primes the
+        newcomer's evaluator at the live fleet's production shapes
+        BEFORE the ring can route a tenant to it, so its first real
+        batch runs jit-warm. Skipped silently when no traffic has been
+        seen yet (there is no schema to warm against — and nothing to
+        be slow for either)."""
         if handle is None:
             rid = replica_id or self._next_replica_id()
             handle = ReplicaHandle(
@@ -633,6 +709,15 @@ class ClusterCoordinator:
         moved = self._partition_diff(
             add=(handle.replica_id, handle.weight))
         handle.advance_to(self._now_hint if now_t is None else now_t)
+        self._attach_capacity(handle)
+        if prewarm and self._feature_schema is not None:
+            # Warm BEFORE ring.add: once the id is on the ring a tenant
+            # can route here, and the whole point is that no real
+            # request ever meets a cold jit cache.
+            handle.prewarm(self._feature_schema, self.max_batch_items)
+            self.stats.n_prewarm_joins += 1
+            self._prewarm_watch[handle.replica_id] = \
+                handle.warmup_exclusions()
         self.ring.add(handle.replica_id, handle.weight)
         self.replicas.append(handle)
         self.by_id[handle.replica_id] = handle
@@ -835,21 +920,37 @@ class ClusterCoordinator:
         return recovered
 
     def _autoscale_membership(
-            self, heap: Optional[ReplicaLoadHeap] = None) -> None:
+            self, heap: Optional[ReplicaLoadHeap] = None,
+            forecast_pressure: Optional[float] = None) -> None:
         """Let the autoscaler's fleet-pressure vote change membership
         (bounded by [min_replicas, max_replicas], hysteresis inside the
         policy). Scale-down drains the lightest-loaded replica out —
         picked from the round's load heap in O(1) when one is live.
         Held steady while a rolling restart executes (fencing waves
-        must not race membership changes)."""
+        must not race membership changes).
+
+        ``forecast_pressure`` (the planner's predicted utilization) is
+        folded into the SAME vote, so a feedforward join shares the
+        reactive cooldown window instead of bypassing it. A join voted
+        while the planner is active is pre-warmed before it can serve
+        and logged with the forecast that triggered it."""
         cc = self.cluster_cfg
         if self.autoscaler is None or cc.max_replicas <= 0 \
                 or self._restart_hold:
             return
         vote = self.autoscaler.membership_decision(
-            self.n_replicas, cc.min_replicas, cc.max_replicas)
+            self.n_replicas, cc.min_replicas, cc.max_replicas,
+            forecast_pressure=forecast_pressure)
         if vote > 0:
-            self.add_replica()
+            rep = self.add_replica(prewarm=self.planner is not None)
+            if self.planner is not None:
+                self.planner_log.append({
+                    "t": self._now_hint,
+                    "event": "prewarm_join",
+                    "replica": rep.replica_id,
+                    "forecast_pressure": float(forecast_pressure or 0.0),
+                    "pressure": float(self.autoscaler.pressure),
+                    "n_replicas": self.n_replicas})
         elif vote < 0:
             victim_id = None
             if heap is not None and len(heap) == self.n_replicas:
@@ -954,6 +1055,7 @@ class ClusterCoordinator:
                     self._bank_restart_stats(rep)
                     rep.restart(now_t=self._now_hint,
                                 downtime_s=downtime_s)
+                    self._attach_capacity(rep)
                     if self.autoscaler is not None:
                         self.autoscaler.forget(rep.replica_id)
                     self.stats.n_restarts += 1
@@ -1167,6 +1269,14 @@ class ClusterCoordinator:
                     rep.scheduler.executor.n_submitted > before
                 if rep.replica_id in heap:
                     heap.update(rep.replica_id, rep.queued_items)
+                if rep.replica_id in self._prewarm_watch \
+                        and rep.scheduler.stats.n_batches > 0:
+                    # First real batch after a pre-warmed join: any NEW
+                    # warmup exclusion means a jit shape the prewarm
+                    # missed — the join was cold after all.
+                    if rep.warmup_exclusions() > \
+                            self._prewarm_watch.pop(rep.replica_id):
+                        self.stats.n_cold_joins += 1
             # Gossip: harvest this round's cache fills (duplicate-eval
             # accounting either way), then broadcast the freshest
             # deltas to siblings under the per-round budget.
@@ -1181,7 +1291,13 @@ class ClusterCoordinator:
                     % max(self.cluster_cfg.autoscale_every, 1) == 0:
                 self.last_snapshot = self.autoscaler.update(
                     self.replicas, self.tenants_seen)
-                self._autoscale_membership(heap)
+                fp = None
+                if self.planner is not None:
+                    fp = self.planner.forecast_pressure(
+                        self._now_hint,
+                        rate_items_per_s=(
+                            self.last_snapshot.rate_items_per_s))
+                self._autoscale_membership(heap, forecast_pressure=fp)
             if not any_batch:
                 # Queues are empty; land whatever is still in flight
                 # (their fold-backs may gossip) and finish.
@@ -1229,6 +1345,8 @@ class ClusterCoordinator:
             self._responded.add(resp.request_id)
             self.completed.append(resp)
             self._journal.pop(resp.request_id, None)    # answered
+            if resp.admitted:
+                self.capacity.observe_queue(resp.queue_delay_s)
         return fresh
 
     # -- observability -------------------------------------------------------
@@ -1269,4 +1387,11 @@ class ClusterCoordinator:
             agg["gossip"] = self.gossip.stats.as_dict()
         if hasattr(self.searcher, "gather_stats"):
             agg["fanout"] = self.searcher.gather_stats()
+        agg["capacity"] = self.capacity.fitted()
+        if self.planner is not None:
+            agg["forecast"] = {
+                **self.planner.stats(),
+                "n_prewarm_joins": self.stats.n_prewarm_joins,
+                "n_cold_joins": self.stats.n_cold_joins,
+                "log": list(self.planner_log)}
         return agg

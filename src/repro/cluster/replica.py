@@ -114,6 +114,12 @@ class ReplicaHandle:
         self.n_collected = 0
         # Fresh-evaluation (key, trust) batches awaiting gossip pickup.
         self._cache_deltas: List[Tuple[np.ndarray, np.ndarray]] = []
+        # Optional per-batch measurement tap (the coordinator's
+        # ServiceTimeModel): called with (shed_result, warm) where warm
+        # is False when the batch tripped a fresh jit compile — the
+        # same exclusion rule the LoadMonitor applies.
+        self.stats_tap: Optional[Callable[[ShedResult, bool], None]] = None
+        self._excl_seen = self.warmup_exclusions()
         self.engine.shedder.on_shed = self._tap_shed
 
     # -- forwarding accessors ------------------------------------------------
@@ -159,12 +165,19 @@ class ReplicaHandle:
     def _tap_shed(self, item_keys: np.ndarray, result: ShedResult
                   ) -> None:
         """``on_shed`` hook: record the cache fills (freshly EVALuated
-        keys and their trust) this shed produced."""
+        keys and their trust) this shed produced, and feed the batch's
+        service measurement to the capacity tap (warmup-flagged by
+        whether the WarmupGate excluded a fresh signature during it)."""
         evald = result.tier == TIER_EVAL
         if evald.any():
             self._cache_deltas.append(
                 (np.asarray(item_keys)[evald].astype(np.uint32),
                  result.trust[evald].astype(np.float32)))
+        if self.stats_tap is not None:
+            excl = self.warmup_exclusions()
+            warm = excl == self._excl_seen
+            self._excl_seen = excl
+            self.stats_tap(result, warm)
 
     def take_cache_deltas(self) -> List[Tuple[np.ndarray, np.ndarray]]:
         """Drain the pending cache-fill deltas (coordinator-side gossip
@@ -244,9 +257,17 @@ class ReplicaHandle:
         clean completed-responses log (the coordinator banks the old
         scheduler counters BEFORE calling this). The fresh simulated
         clock lands at ``now_t + downtime_s`` so post-restart work is
-        stamped after the outage window, never before it."""
+        stamped after the outage window, never before it.
+
+        One thing deliberately SURVIVES the rebuild: the poison
+        quarantine's breaker state. Forgetting it would make every
+        rolling-restart wave re-eat ``k`` poison strikes per known-bad
+        signature, so the old breakers are banked across the rebuild
+        (next to the coordinator's scheduler-counter banking) and
+        adopted by the fresh quarantine."""
         c = self._ctor
         rate = c["sim_rate_items_per_s"]
+        old_quarantine = self.engine.scheduler.quarantine
         self.clock = SimClock(rate) if rate is not None else None
         retriever = getattr(self.engine, "retriever", None)
         self.engine = ServingEngine(c["cfg"], c["evaluate_chunk"],
@@ -257,10 +278,58 @@ class ReplicaHandle:
                                     drain_mode=c["drain_mode"],
                                     evaluate_batch=c["evaluate_batch"],
                                     retriever=retriever)
+        new_quarantine = self.engine.scheduler.quarantine
+        if old_quarantine is not None and new_quarantine is not None:
+            new_quarantine.adopt(old_quarantine)
         self.n_collected = 0
         self._cache_deltas = []
+        self._excl_seen = self.warmup_exclusions()
         self.engine.shedder.on_shed = self._tap_shed
         self.advance_to(float(now_t) + float(downtime_s))
+
+    # -- jit prewarm (feedforward joins) --------------------------------------
+    def warmup_exclusions(self) -> int:
+        """Lifetime count of WarmupGate first-sight exclusions on this
+        replica's shedder — zero NEW exclusions across a batch means the
+        batch ran entirely jit-warm."""
+        gate = getattr(self.engine.shedder, "_warmup", None)
+        return int(gate.n_excluded) if gate is not None else 0
+
+    def prewarm(self, feature_schema: Dict[str, Tuple[Tuple[int, ...], str]],
+                n_items: int) -> None:
+        """Prime the evaluator at production shapes BEFORE the ring
+        routes real traffic here, so a feedforward join never lands
+        jit-cold mid-wave.
+
+        Runs one synthetic full batch (``n_items`` at the live fleet's
+        feature schema) straight through the shedder — deliberately NOT
+        via the scheduler, so submit/enqueue counters and the no-drop
+        accounting never see it. Serving state the synthetic batch
+        would dirty is snapshotted and restored: Trust-DB cache, local
+        prior, gossip delta tap, and the simulated clock (prewarm work
+        is not real work). What survives is exactly the point — the jit
+        caches and the WarmupGate's seen-signature set."""
+        sh = self.engine.shedder
+        n = max(int(n_items), 1)
+        # Key range far above organic url_ids, so the synthetic lookup/
+        # insert can never alias a real entry mid-call (the cache
+        # snapshot is restored afterwards regardless).
+        keys = (np.arange(n, dtype=np.int64) % 0x0FFFFFFF
+                + 0xF0000000).astype(np.uint32)
+        buckets = np.zeros(n, np.int32)
+        feats = {k: np.zeros((n,) + tuple(shape), dtype=dtype)
+                 for k, (shape, dtype) in feature_schema.items()}
+        cache_snap, prior_snap = sh.cache, sh.prior
+        deltas_snap, self._cache_deltas = self._cache_deltas, []
+        t_snap = self.clock.t if self.clock is not None else None
+        try:
+            sh.process(keys, buckets, feats)
+        finally:
+            sh.cache, sh.prior = cache_snap, prior_snap
+            self._cache_deltas = deltas_snap
+            if self.clock is not None and t_snap is not None:
+                self.clock.t = t_snap
+            self._excl_seen = self.warmup_exclusions()
 
     # -- time -----------------------------------------------------------------
     def now(self) -> float:

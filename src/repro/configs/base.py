@@ -341,6 +341,18 @@ class TrustIRConfig:
     autoscale_up_pressure: float = 0.75
     autoscale_down_pressure: float = 0.15
     autoscale_cooldown_ticks: int = 2
+    # Feedforward capacity planning (repro.cluster.capacity): when
+    # enabled, the coordinator fits a ServiceTimeModel from drain
+    # measurements, extrapolates the arrival curve over a sliding
+    # window (NHPP rate estimate), and feeds the predicted utilization
+    # into the autoscaler's membership vote — so a join triggers
+    # warmup_lead_s BEFORE the predicted watermark breach and the new
+    # replica is jit-prewarmed at production shapes before the ring
+    # routes traffic to it. Purely additive: forecast=False keeps the
+    # PR-5 reactive-only behaviour bit-for-bit.
+    forecast: bool = False
+    warmup_lead_s: float = 0.5          # provision lead (jit prewarm time)
+    forecast_window_s: float = 2.0      # sliding NHPP estimation window
     # Retrieval front end (repro.retrieval): the sharded inverted-index
     # stage ahead of the trust pipeline. The synthetic corpus is fully
     # determined by (corpus_docs, corpus_vocab, corpus_zipf_a,

@@ -14,7 +14,7 @@ seed the estimate before any measurement exists.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Hashable, Optional, Tuple
+from typing import Callable, Hashable, Optional, Tuple
 
 from repro.configs.base import TrustIRConfig
 
@@ -33,6 +33,11 @@ class WarmupGate:
 
     def __init__(self) -> None:
         self._seen: set = set()
+        # Count of first-sight exclusions. A replica prewarmed at
+        # production shapes before joining the ring shows ZERO new
+        # exclusions on its first real batch — the capacity bench's
+        # "no jit-cold join" gate reads exactly this counter.
+        self.n_excluded: int = 0
 
     def warm(self, signature: Hashable) -> bool:
         """True when ``signature`` has been seen before (observe it);
@@ -40,6 +45,7 @@ class WarmupGate:
         if signature in self._seen:
             return True
         self._seen.add(signature)
+        self.n_excluded += 1
         return False
 
     @staticmethod
@@ -68,6 +74,12 @@ class LoadMonitor:
     # crater it. Real sustained shifts still converge: every sample
     # moves the estimate up to clamp_mult-fold in its direction.
     rate_clamp_mult: float = 8.0
+    # Optional tap for accepted observations (the capacity planner's
+    # ServiceTimeModel subscribes here). Fired only for samples that
+    # made it past the warmup/validity filters, so subscribers inherit
+    # the WarmupGate exclusion and the executor's marginal-window
+    # charging for free.
+    on_observe: Optional[Callable[[int, float], None]] = None
 
     @property
     def rate(self) -> float:
@@ -90,6 +102,8 @@ class LoadMonitor:
                     self.rate_clamp_mult * self._rate)
             self._rate = self.ewma * r + (1 - self.ewma) * self._rate
         self.n_observations += 1
+        if self.on_observe is not None:
+            self.on_observe(n_items, elapsed_s)
 
     def parameters(self) -> Tuple[int, int]:
         """Current (Ucapacity, Uthreshold)."""

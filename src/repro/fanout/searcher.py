@@ -189,7 +189,14 @@ class FanoutSearcher(CorpusSearcher):
             return super().retrieve(query, k)
         live = [(self._keys[i], sh)
                 for i, sh in enumerate(self.shards) if sh.n_docs]
-        answers = []          # (key, docs, scores, t_effective)
+        # Pass 1 — every shard's PRIMARY probe: draw completions,
+        # observe EWMAs, and collect the hedge-eligible stragglers
+        # (mirror exists, past the hedge latency) WITHOUT spending any
+        # budget yet. Spending first-come in shard order starved the
+        # widest-gap straggler whenever an earlier, mildly-slow shard
+        # drained the shared bucket first (the ROADMAP PR-7 follow-on).
+        answers = []          # [key, docs, scores, t_effective]
+        hedge_cands = []      # (ewma gap above fleet baseline, index)
         for key, sh in live:
             if self.hedge is not None and self._hedge_owned:
                 self.hedge.note_request()   # probe-granularity budget
@@ -199,26 +206,45 @@ class FanoutSearcher(CorpusSearcher):
             # its mirror must still look slow, or replication would
             # drop the mirror that is doing the rescuing.
             self.replicator.observe(key, t)
-            mirror = self.mirrors.get(key)
-            if mirror is not None and self.hedge is not None \
-                    and self.hedge.should_hedge(t, 0):
-                host_key, mshard = mirror
-                self.hedge.record_hedge()
-                self.n_shard_hedges += 1
-                # The twin runs on the HOST replica: its own rng stream
-                # (never perturbs the host's primary draws), the host's
-                # persistent health.
-                t_twin = self.hedge.hedge_after_s \
-                    + self.service_model.sample(f"{host_key}|m|{key}",
-                                                mult_key=host_key)
-                if t_twin < t:
-                    docs, scores = mshard.retrieve(query, k)
-                    t = t_twin
-                    self.n_shard_hedge_wins += 1
-                # first completion wins; the loser never reaches the
-                # merge — exactly one answer per shard, fleet-wide
-                self.n_shard_twin_drops += 1
-            answers.append((key, docs, scores, t))
+            if key in self.mirrors and self.hedge is not None \
+                    and t >= self.hedge.hedge_after_s:
+                hedge_cands.append((0.0, len(answers)))
+            answers.append([key, docs, scores, t])
+        if hedge_cands:
+            # Gaps read AFTER the whole scatter observed, so every
+            # candidate is ranked on the same (post-round) EWMA state.
+            baseline = self.replicator.baseline()
+            hedge_cands = [
+                (self.replicator.ewma_of(answers[i][0]) - baseline, i)
+                for _, i in hedge_cands]
+        # Pass 2 — spend the per-round hedge budget widest-EWMA-gap
+        # first: the chronically slowest shard gets the first token,
+        # not the shard that happened to iterate first. Budget is
+        # re-checked per spend (should_hedge) so a drained bucket stops
+        # the ladder exactly where first-come would have, just in merit
+        # order. Ties (equal gap) fall back to scatter order, keeping
+        # the single-straggler case bit-identical to the old path.
+        hedge_cands.sort(key=lambda c: (-c[0], c[1]))
+        for _, i in hedge_cands:
+            key, _, _, t = answers[i]
+            if not self.hedge.should_hedge(t, 0):
+                continue
+            host_key, mshard = self.mirrors[key]
+            self.hedge.record_hedge()
+            self.n_shard_hedges += 1
+            # The twin runs on the HOST replica: its own rng stream
+            # (keyed per (host, shard) — spend ORDER never perturbs
+            # any draw), the host's persistent health.
+            t_twin = self.hedge.hedge_after_s \
+                + self.service_model.sample(f"{host_key}|m|{key}",
+                                            mult_key=host_key)
+            if t_twin < t:
+                docs, scores = mshard.retrieve(query, k)
+                answers[i] = [key, docs, scores, t_twin]
+                self.n_shard_hedge_wins += 1
+            # first completion wins; the loser never reaches the
+            # merge — exactly one answer per shard, fleet-wide
+            self.n_shard_twin_drops += 1
 
         t_quorum, answered = self.quorum.split([a[3] for a in answers])
         n = len(answers)

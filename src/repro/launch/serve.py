@@ -54,6 +54,14 @@ line replays bit-identically within a process.
   --gossip --gossip-mode epidemic         O(log n)-fanout epidemic
                                           push + anti-entropy pull
                                           instead of O(n^2) broadcast
+  --trace 6 --max-replicas 6 \\
+           --forecast                     feedforward capacity planner:
+                                          extrapolate the arrival curve
+                                          (repro.cluster.capacity) and
+                                          join replicas --warmup-lead-s
+                                          BEFORE the predicted breach,
+                                          jit-prewarmed so the first
+                                          real batch is never cold
 
 The chaos gates themselves (no-drop, p99, O(k) quarantine containment,
 O(n log n) gossip, bit-determinism) run in benchmarks/bench_fleet.py.
@@ -92,6 +100,16 @@ def main() -> int:
                    help="elastic upper bound: the autoscaler may join "
                         "replicas at runtime up to this many (0 = "
                         "membership fixed at --replicas)")
+    p.add_argument("--forecast", action="store_true",
+                   help="feedforward autoscaling: extrapolate the "
+                        "arrival curve and join prewarmed replicas "
+                        "--warmup-lead-s before the predicted breach "
+                        "instead of waiting for queue pressure (needs "
+                        "--max-replicas; see --trace epilog)")
+    p.add_argument("--warmup-lead-s", type=float, default=0.5,
+                   help="forecast horizon: how far ahead the planner "
+                        "extrapolates the arrival rate — roughly the "
+                        "join + jit-prewarm time of one replica")
     p.add_argument("--gossip", action="store_true",
                    help="cross-replica Trust-DB gossip: broadcast "
                         "fresh cache fills to sibling replicas so hot "
@@ -186,7 +204,9 @@ def main() -> int:
                   gossip=args.gossip,
                   gossip_mode=args.gossip_mode,
                   quarantine_k=max(args.quarantine_k, 0),
-                  pipeline_depth=max(args.pipeline_depth, 1))
+                  pipeline_depth=max(args.pipeline_depth, 1),
+                  forecast=args.forecast,
+                  warmup_lead_s=max(args.warmup_lead_s, 0.0))
     if args.corpus > 0:
         cfg_kw["corpus_docs"] = args.corpus
         if args.index_shards > 0:
@@ -270,7 +290,9 @@ def main() -> int:
                 autoscale=n_rep > 1 or elastic,
                 min_replicas=args.min_replicas,
                 max_replicas=args.max_replicas,
-                gossip=args.gossip),
+                gossip=args.gossip,
+                forecast=args.forecast,
+                warmup_lead_s=max(args.warmup_lead_s, 0.0)),
             drain_mode=args.drain_mode,
             evaluate_batch=evaluate_batch,
             retrieval=retrieval,
@@ -431,11 +453,17 @@ def _run_trace(args, cfg, rate: float) -> int:
                                      exact_oracle_evaluator)
 
     searcher = SyntheticSearcher(corpus_size=20_000, seed=args.seed)
+    elastic = args.max_replicas > 0
     coord = ClusterCoordinator(
         cfg, poisonable(exact_oracle_evaluator(searcher)),
         cluster_cfg=ClusterConfig(
             hedge_after_s=args.hedge_after_ms / 1e3,
-            gossip=args.gossip, gossip_mode=args.gossip_mode),
+            gossip=args.gossip, gossip_mode=args.gossip_mode,
+            autoscale=elastic or max(args.replicas, 1) > 1,
+            min_replicas=args.min_replicas,
+            max_replicas=args.max_replicas,
+            forecast=args.forecast,
+            warmup_lead_s=max(args.warmup_lead_s, 0.0)),
         sim_rate_items_per_s=rate)
     d = args.trace
     tc = TraceConfig(
@@ -471,6 +499,13 @@ def _run_trace(args, cfg, rate: float) -> int:
         g = st["gossip"]
         print(f"gossip[{args.gossip_mode}]: {g['n_messages']} messages"
               f" ({g['max_round_messages']} busiest round)")
+    if "forecast" in st:
+        f = st["forecast"]
+        print(f"forecast: rate now {f['rate_now_items_per_s']:.0f} -> "
+              f"+{args.warmup_lead_s:.1f}s "
+              f"{f['rate_forecast_items_per_s']:.0f} items/s, "
+              f"{f['n_prewarm_joins']} prewarm joins "
+              f"({f['n_cold_joins']} jit-cold)")
     return 0 if no_drop else 1
 
 

@@ -186,6 +186,31 @@ gossip -> join/leave``:
        |                                    round, O(n log n) messages
        |                                    total (``TrustIRConfig.
        |                                    gossip_mode``)
+    forecast cluster.capacity               feedforward autoscaling:
+       |                                    sliding-window NHPP rate
+       |                                    estimate of the arrival
+       |                                    curve, extrapolated
+       |                                    warmup_lead_s ahead and
+       |                                    folded into the SAME
+       |                                    watermark membership vote
+       |                                    (shared cooldown) so
+       |                                    scale-up fires BEFORE the
+       |                                    queue-pressure breach; the
+       |                                    per-stage ServiceTimeModel
+       |                                    it fits from live drain
+       |                                    stats also answers what-if
+       |                                    predict(n, depth, batch) ->
+       |                                    (throughput, p99)
+    prewarm  cluster.replica                forecast-triggered joins
+       |                                    jit-compile the micro-batch
+       |                                    shape on synthetic keys
+       |                                    BEFORE the ring unfences
+       |                                    the new replica — its first
+       |                                    real batch is never cold
+       |                                    (cache/prior/clock snapshot
+       |                                    -restored around the warm
+       |                                    pass, so no serving state
+       |                                    leaks from prewarm traffic)
     restart  cluster.coordinator            coordinated rolling
        |                                    restarts: ring-disjoint
        |                                    waves (no replica restarts

@@ -160,6 +160,24 @@ class PoisonQuarantine:
             br.state = CLOSED
             br.strikes = 0
 
+    # -- restart banking -----------------------------------------------------
+
+    def adopt(self, other: "PoisonQuarantine") -> None:
+        """Inherit ``other``'s breaker state and lifetime stats.
+
+        A rolling restart rebuilds the serving engine — and with it the
+        scheduler's quarantine — from scratch.  Without banking, every
+        OPEN breaker is forgotten and the restarted replica re-eats
+        ``k`` poison strikes per known-bad signature, wave after wave.
+        ``ReplicaHandle.restart`` calls this right after the rebuild
+        (next to the scheduler-counter banking) so breakers ride
+        through.  The replica clock is monotone across a restart (the
+        new engine's clock resumes at ``now + downtime``), so inherited
+        ``opened_t`` values keep their meaning for half-open timing.
+        """
+        self._breakers = other._breakers
+        self.stats = other.stats
+
     # -- introspection -------------------------------------------------------
 
     @property

@@ -1,0 +1,413 @@
+"""Feedforward capacity planner (repro.cluster.capacity, ISSUE 9):
+per-stage service-time fits that stay honest under the WarmupGate rule
+on both drain modes and invariant to pipeline depth, the deterministic
+queueing what-if ``predict``, NHPP arrival-rate extrapolation, the
+forecast pressure folded into the autoscaler's membership vote (shared
+cooldown, bounds never violated, no dead-band flap), jit-prewarmed
+planner joins, and the two satellite bugfixes — quarantine breaker
+state banked across rolling restarts, and the per-round hedge budget
+spent widest-EWMA-gap-first."""
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterCoordinator,
+                           ForecastPlanner, ServiceTimeModel,
+                           StageStats, WatermarkAutoscaler, predict)
+from repro.configs.base import TrustIRConfig, reduced
+from repro.configs.trust_ir import smoke_config
+from repro.scheduling.quarantine import OPEN, PoisonQuarantine, \
+    work_signature
+
+
+def _cfg(**kw):
+    base = dict(u_capacity=64, u_threshold=32, deadline_s=0.05,
+                overload_deadline_s=0.1, chunk_size=32,
+                cache_slots=1024, n_replicas=1)
+    base.update(kw)
+    return TrustIRConfig(**base)
+
+
+def _model(**kw):
+    kw.setdefault("drain_mode", "host")
+    kw.setdefault("pipeline_depth", 1)
+    kw.setdefault("batch_items", 256)
+    return ServiceTimeModel(_cfg(), **kw)
+
+
+def _req_arrays(rid, n, seed=0):
+    r = np.random.default_rng(seed + rid)
+    return (np.arange(rid * 10_000 + 1, rid * 10_000 + n + 1,
+                      dtype=np.uint32),
+            r.integers(0, 8, n).astype(np.int32),
+            {"x": np.linspace(0, 5, n, dtype=np.float32)})
+
+
+def _coordinator(n_replicas, cfg=None, rate_scale=1.0, sim=True,
+                 **cluster_kw):
+    cfg = reduced(cfg or smoke_config(), n_replicas=n_replicas)
+    rate = rate_scale * cfg.u_capacity / cfg.deadline_s
+    return ClusterCoordinator(cfg, lambda ch: np.asarray(ch["x"]),
+                              cluster_cfg=ClusterConfig(**cluster_kw),
+                              sim_rate_items_per_s=rate if sim else None)
+
+
+# ---------------------------------------------------------------------------
+# stage accumulator + fitted parameters
+# ---------------------------------------------------------------------------
+
+
+def test_stage_stats_rates_and_percentiles():
+    st = StageStats()
+    assert st.rate_items_per_s is None and st.mean_s() is None
+    for _ in range(10):
+        st.observe(100, 0.1)
+    assert st.rate_items_per_s == pytest.approx(1000.0)
+    assert st.mean_s() == pytest.approx(0.1)
+    assert st.percentile_s(50.0) == pytest.approx(0.1)
+    st.observe(100, -1.0)                  # negative elapsed discarded
+    assert st.n == 10
+
+
+def test_model_falls_back_to_config_seeded_rate():
+    m = _model()
+    assert m.device_rate_items_per_s() == pytest.approx(64 / 0.05)
+    m.observe_batch(200, 100, 0.05)
+    assert m.device_rate_items_per_s() == pytest.approx(2000.0)
+    assert m.eval_frac() == pytest.approx(0.5)
+
+
+def test_model_warmup_batches_excluded_from_fit():
+    m = _model()
+    m.observe_batch(100, 100, 5.0, warm=False)   # jit compile window
+    m.observe_batch(100, 100, 0.1, warm=True)
+    assert m.n_warmup_excluded == 1
+    assert m.stages["batch"].n == 1
+    assert m.stages["batch"].rate_items_per_s == pytest.approx(1000.0)
+    f = m.fitted()
+    assert f["drain_mode"] == "host" and f["n_warmup_excluded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# honesty: warmup exclusion on both drain modes, depth invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("drain_mode", ["host", "fused"])
+def test_capacity_fit_excludes_jit_warmup_both_drain_modes(drain_mode):
+    """The first sight of a work shape is jit warmup on EITHER drain
+    path; the capacity model must drop it or the fitted service time
+    blends compilation into serving."""
+    import jax
+    import jax.numpy as jnp
+
+    cfg = _cfg(drain_mode=drain_mode, pipeline_depth=1)
+
+    @jax.jit
+    def ev(chunk):
+        return jnp.clip(chunk["x"], 0.0, 5.0)
+
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ev({"x": jnp.asarray(ch["x"])})),
+        drain_mode=drain_mode, evaluate_batch=ev)
+    for rid in range(3):                   # identical work shape x3
+        keys, buckets, feats = _req_arrays(rid, 48)
+        coord.enqueue(keys, buckets, feats, tenant="t0")
+        coord.drain()
+    m = coord.capacity
+    assert m.drain_mode == drain_mode
+    assert m.n_warmup_excluded >= 1        # compile window dropped
+    assert m.stages["batch"].n >= 1        # warm batches still fitted
+    assert coord.replicas[0].warmup_exclusions() >= 1
+    # The fitted rate reflects warm execution only: re-running the same
+    # shape must not move the exclusion counter again.
+    excl = m.n_warmup_excluded
+    keys, buckets, feats = _req_arrays(7, 48)
+    coord.enqueue(keys, buckets, feats, tenant="t0")
+    coord.drain()
+    assert m.n_warmup_excluded == excl
+
+
+def test_fitted_rates_invariant_to_pipeline_depth():
+    """Marginal-window charging makes the fit honest at any depth: the
+    same simulated workload fitted at depth 1 and depth 2 must yield
+    the same service rate (double-counting overlapped windows would
+    inflate the depth-2 rate)."""
+    rates = {}
+    for depth in (1, 2):
+        coord = _coordinator(
+            2, cfg=reduced(smoke_config(), pipeline_depth=depth))
+        for rid in range(12):
+            keys, buckets, feats = _req_arrays(rid, 40)
+            coord.enqueue(keys, buckets, feats,
+                          tenant=f"t{rid % 4}")
+            if rid % 3 == 2:
+                coord.drain(1)
+        coord.drain()
+        assert coord.capacity.pipeline_depth == depth
+        assert coord.capacity.stages["batch"].n > 0
+        rates[depth] = coord.capacity.device_rate_items_per_s()
+    assert rates[1] == pytest.approx(rates[2], rel=0.10)
+
+
+# ---------------------------------------------------------------------------
+# the queueing what-if
+# ---------------------------------------------------------------------------
+
+
+def _workload(n_requests=48, items=64, dt=0.02, n_tenants=6):
+    return [(i * dt, items, f"tenant{i % n_tenants}")
+            for i in range(n_requests)]
+
+
+def test_predict_deterministic_and_bounded():
+    m = _model()
+    m.observe_batch(4000, 4000, 2.0)       # 2000 items/s, eval_frac 1
+    a = predict(m, 2, 1, 256, _workload())
+    b = predict(m, 2, 1, 256, _workload())
+    assert a == b
+    assert a.n_requests == 48 and a.n_items == 48 * 64
+    assert a.throughput_items_per_s > 0 and a.p99_s >= a.p50_s >= 0.0
+
+
+def test_predict_more_replicas_cut_latency():
+    m = _model()
+    m.observe_batch(4000, 4000, 2.0)
+    wl = _workload(n_requests=96, items=96, dt=0.01)
+    p1 = predict(m, 1, 1, 256, wl)
+    p4 = predict(m, 4, 1, 256, wl)
+    assert p4.p99_s < p1.p99_s             # backlog drains in parallel
+    assert p4.throughput_items_per_s >= p1.throughput_items_per_s
+    assert p4.makespan_s <= p1.makespan_s
+
+
+def test_predict_eval_frac_scales_service_demand():
+    hot = _model()
+    hot.observe_batch(4000, 400, 0.2)      # 90% cache hits
+    cold = _model()
+    cold.observe_batch(4000, 4000, 2.0)    # same device rate, all miss
+    wl = _workload(n_requests=64, items=96, dt=0.01)
+    assert predict(hot, 1, 1, 256, wl).p99_s \
+        <= predict(cold, 1, 1, 256, wl).p99_s
+
+
+def test_predict_rejects_empty_fleet():
+    with pytest.raises(ValueError):
+        predict(_model(), 0, 1, 256, _workload())
+    empty = predict(_model(), 2, 1, 256, [])
+    assert empty.n_requests == 0 and empty.throughput_items_per_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# NHPP forecast
+# ---------------------------------------------------------------------------
+
+
+def _ramp(planner, t0, t1, rate0, rate1, items=10, dt=0.01):
+    t = t0
+    while t < t1:
+        r = rate0 + (rate1 - rate0) * (t - t0) / (t1 - t0)
+        planner.observe_arrival(t, int(items * r))
+        t += dt
+
+
+def test_forecast_extrapolates_rising_ramp():
+    p = ForecastPlanner(warmup_lead_s=0.5, window_s=1.0)
+    _ramp(p, 0.0, 2.0, 1.0, 5.0)
+    now = 2.0
+    assert p.forecast_rate(now) > p.rate_estimate(now) * 1.1
+    # A flat stream forecasts ~its own rate (no phantom ramp).
+    flat = ForecastPlanner(warmup_lead_s=0.5, window_s=1.0)
+    _ramp(flat, 0.0, 2.0, 3.0, 3.0)
+    assert flat.forecast_rate(now) \
+        == pytest.approx(flat.rate_estimate(now), rel=0.15)
+
+
+def test_forecast_pressure_gates_and_clips():
+    p = ForecastPlanner(warmup_lead_s=0.5, window_s=1.0, min_arrivals=8)
+    for i in range(4):
+        p.observe_arrival(i * 0.1, 50)
+    # Too few observations: silent (a cold planner must not vote).
+    assert p.forecast_pressure(0.4, rate_items_per_s=100.0) == 0.0
+    _ramp(p, 0.5, 2.0, 5.0, 5.0)
+    assert p.forecast_pressure(2.0, rate_items_per_s=0.0) == 0.0
+    pr = p.forecast_pressure(2.0, rate_items_per_s=1.0)
+    assert pr == 4.0                       # clipped, never unbounded
+    assert p.last is not None and p.last.pressure == pr
+    assert p.stats()["rate_forecast_items_per_s"] > 0.0
+
+
+def test_forecast_pressure_uses_fitted_eval_frac():
+    m = _model()
+    m.observe_batch(1000, 100, 0.1)        # 90% answered from cache
+    p_model = ForecastPlanner(window_s=1.0, model=m)
+    p_plain = ForecastPlanner(window_s=1.0)
+    for p in (p_model, p_plain):
+        _ramp(p, 0.0, 1.5, 4.0, 4.0)
+    a = p_model.forecast_pressure(1.5, rate_items_per_s=10_000.0)
+    b = p_plain.forecast_pressure(1.5, rate_items_per_s=10_000.0)
+    assert a == pytest.approx(b * m.eval_frac(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# membership vote: reactive + feedforward share one policy
+# ---------------------------------------------------------------------------
+
+
+def test_forecast_triggers_scale_up_before_reactive_pressure():
+    auto = WatermarkAutoscaler(scale_cooldown_ticks=0)
+    auto._pressure = 0.1                   # queues still calm
+    assert auto.membership_decision(2, 1, 4) == 0
+    assert auto.membership_decision(2, 1, 4, forecast_pressure=0.9) == 1
+
+
+def test_forecast_vetoes_scale_down():
+    auto = WatermarkAutoscaler(scale_cooldown_ticks=0)
+    auto._pressure = 0.01                  # idle NOW...
+    assert auto.membership_decision(3, 1, 4) == -1
+    auto2 = WatermarkAutoscaler(scale_cooldown_ticks=0)
+    auto2._pressure = 0.01                 # ...but a wave is coming
+    assert auto2.membership_decision(3, 1, 4,
+                                     forecast_pressure=0.5) == 0
+
+
+def test_feedforward_join_consumes_the_reactive_cooldown():
+    auto = WatermarkAutoscaler(scale_cooldown_ticks=3)
+    auto.n_updates = 10
+    assert auto.membership_decision(2, 1, 4, forecast_pressure=0.9) == 1
+    # Reactive pressure crashes right after the planner join: the
+    # shared cooldown blocks the leave (no join/leave flap inside one
+    # window, no matter which signal voted first).
+    auto._pressure = 0.0
+    for _ in range(3):
+        assert auto.membership_decision(3, 1, 4) == 0
+        auto.n_updates += 1
+    assert auto.membership_decision(3, 1, 4) == -1
+
+
+def test_membership_votes_bounded_no_flap_property():
+    """Random reactive + forecast pressure sequences: the fleet never
+    leaves ``[min_replicas, max_replicas]``, every vote inside a
+    cooldown window is 0, and any non-zero vote is justified by the
+    dead-band policy at that tick."""
+    rng = np.random.default_rng(29)
+    for trial in range(20):
+        cool = int(rng.integers(1, 4))
+        auto = WatermarkAutoscaler(scale_cooldown_ticks=cool)
+        lo, hi = int(rng.integers(1, 3)), int(rng.integers(4, 8))
+        n = int(rng.integers(max(lo, 1), hi + 1))
+        last_change = -10 ** 9
+        for tick in range(120):
+            auto._pressure = float(rng.uniform(0.0, 1.0))
+            f = (float(rng.uniform(0.0, 1.5))
+                 if rng.random() < 0.5 else None)
+            v = auto.membership_decision(n, lo, hi,
+                                         forecast_pressure=f)
+            sig = max(auto._pressure, f or 0.0)
+            if auto.n_updates - last_change < cool:
+                assert v == 0              # cooldown is absolute
+            if v == 1:
+                assert sig >= auto.scale_up_pressure
+                assert n < hi
+            elif v == -1:
+                assert sig * n / max(n - 1, 1) \
+                    <= auto.scale_down_pressure
+                assert n > max(lo, 1)
+            else:
+                # inside the dead band (and off cooldown): no vote
+                if (auto.n_updates - last_change >= cool
+                        and max(lo, 1) < n < hi):
+                    assert (sig < auto.scale_up_pressure
+                            and sig * n / max(n - 1, 1)
+                            > auto.scale_down_pressure)
+            if v != 0:
+                last_change = auto.n_updates
+                n += v
+            assert max(lo, 1) <= n <= hi
+            auto.n_updates += 1
+
+
+# ---------------------------------------------------------------------------
+# prewarmed planner joins
+# ---------------------------------------------------------------------------
+
+
+def test_prewarm_join_is_jit_warm_and_state_clean():
+    coord = _coordinator(1, sim=False)
+    keys, buckets, feats = _req_arrays(0, 32)
+    coord.enqueue(keys, buckets, feats, tenant="t0")   # schema capture
+    coord.drain()
+    n_enq = coord.stats.n_enqueued
+    rep = coord.add_replica(prewarm=True)
+    assert coord.stats.n_prewarm_joins == 1
+    assert rep.warmup_exclusions() >= 1     # the jit shapes were seen
+    # Prewarm traffic leaves NO serving state behind: nothing
+    # submitted, nothing enqueued, no cache deltas to gossip.
+    assert rep.scheduler.stats.n_submitted == 0
+    assert coord.stats.n_enqueued == n_enq
+    assert rep.take_cache_deltas() == []
+    # ...and the first REAL batch on the prewarmed replica pays no new
+    # compile: the exclusion counter stays put.
+    excl = rep.warmup_exclusions()
+    tenant = next(t for t in (f"t{i}" for i in range(64))
+                  if coord.ring.route(t) == rep.replica_id)
+    keys, buckets, feats = _req_arrays(3, 32)
+    coord.enqueue(keys, buckets, feats, tenant=tenant)
+    coord.drain()
+    assert rep.scheduler.stats.n_batches >= 1
+    assert rep.warmup_exclusions() == excl
+    assert coord.stats.n_cold_joins == 0
+
+
+def test_cold_join_detected_without_prewarm():
+    """The watch-dog side of the gate: a join that skips prewarm pays
+    its compile on the first real batch and is counted cold."""
+    coord = _coordinator(1, sim=False)
+    keys, buckets, feats = _req_arrays(0, 32)
+    coord.enqueue(keys, buckets, feats, tenant="t0")
+    coord.drain()
+    rep = coord.add_replica()
+    coord._prewarm_watch[rep.replica_id] = rep.warmup_exclusions()
+    tenant = next(t for t in (f"t{i}" for i in range(64))
+                  if coord.ring.route(t) == rep.replica_id)
+    keys, buckets, feats = _req_arrays(3, 32)
+    coord.enqueue(keys, buckets, feats, tenant=tenant)
+    coord.drain()
+    assert coord.stats.n_cold_joins == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: quarantine state banked across restarts
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_adopt_transplants_breakers_and_stats():
+    src = PoisonQuarantine(2, 100.0, lambda: 0.0)
+    sig = work_signature(np.arange(1, 65, dtype=np.uint32))
+    for _ in range(2):
+        src.record_failure(sig)
+    assert src.state_of(sig) == OPEN
+    assert not src.check(sig)
+    dst = PoisonQuarantine(2, 100.0, lambda: 0.0)
+    dst.adopt(src)
+    assert dst.state_of(sig) == OPEN       # no amnesia
+    assert not dst.check(sig)
+    assert dst.stats.n_opens == 1
+    assert dst.max_errors_per_signature() == 2
+
+
+def test_breaker_survives_replica_restart():
+    coord = _coordinator(2, cfg=reduced(smoke_config(),
+                                        quarantine_k=2,
+                                        quarantine_probe_after_s=1e9))
+    rep = coord.replicas[0]
+    q = rep.scheduler.quarantine
+    sig = "deadbeef0123"
+    for _ in range(2):
+        q.record_failure(sig)
+    assert q.state_of(sig) == OPEN
+    rep.restart(now_t=5.0, downtime_s=0.5)
+    q2 = rep.scheduler.quarantine
+    assert q2 is not q                     # engine really rebuilt
+    assert q2.state_of(sig) == OPEN        # ...but the breaker banked
+    assert not q2.check(sig)
+    assert q2.stats.n_opens == 1

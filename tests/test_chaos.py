@@ -250,6 +250,54 @@ def test_rolling_restart_holds_membership_and_banks_stats():
     assert len(rids) == len(set(rids)) == 32
 
 
+def test_quarantined_signature_survives_rolling_restart_sweep():
+    """Restart amnesia regression (ISSUE 9): a rolling restart rebuilds
+    every engine, but the poison breakers must come along — an OPEN
+    query-of-death signature stays OPEN through the sweep, so the fleet
+    never re-pays the k evaluator crashes it already banked."""
+    from repro.scheduling.quarantine import OPEN, work_signature
+
+    cfg = TrustIRConfig(u_capacity=64, u_threshold=32,
+                        deadline_s=0.05, overload_deadline_s=0.1,
+                        chunk_size=32, cache_slots=1024,
+                        n_replicas=4, quarantine_k=2,
+                        quarantine_probe_after_s=1e9)
+    searcher = SyntheticSearcher(corpus_size=5_000, seed=0)
+    coord = ClusterCoordinator(
+        cfg, poisonable(exact_oracle_evaluator(searcher)),
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    res = searcher.search("death_query_0", 64)
+    feats = dict(res.features)
+    feats["trust"] = res.exact_trust
+    feats["poison"] = np.full(len(res.url_ids), POISON_RAISE,
+                              np.float32)
+
+    def hit():
+        coord.enqueue(res.url_ids, res.buckets, feats, slo_s=2.0,
+                      tenant="poison_tenant")
+        coord.drain()
+
+    for _ in range(4):
+        hit()
+    st = coord.scheduler_stats()
+    errors_before = st["n_executor_errors"]
+    assert errors_before >= 2              # the breaker actually armed
+    assert st["n_quarantined"] >= 1
+    sig = work_signature(res.url_ids)
+    open_reps = [r for r in coord.replicas
+                 if r.scheduler.quarantine.state_of(sig) == OPEN]
+    assert open_reps
+    coord.rolling_restart()
+    for rep in open_reps:                  # rebuilt engines, banked state
+        assert rep.scheduler.quarantine.state_of(sig) == OPEN
+    before_q = coord.scheduler_stats()["n_quarantined"]
+    for _ in range(3):
+        hit()
+    st2 = coord.scheduler_stats()
+    assert st2["n_executor_errors"] == errors_before   # still O(k)
+    assert st2["n_quarantined"] > before_q  # answered, never dropped
+
+
 def test_rolling_restart_needs_a_fleet():
     coord, _ = _fleet(n=1)
     with pytest.raises(ValueError):

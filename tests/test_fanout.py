@@ -313,6 +313,36 @@ def test_hedge_spends_shared_cluster_budget(retrieval, corpus):
     assert base.n_hedges_issued == fan.n_shard_hedges
 
 
+def test_hedge_budget_spent_widest_ewma_gap_first(retrieval, corpus):
+    """Hedge pacing fix (ISSUE 9): one token, two mirrored stragglers —
+    the chronically slower shard (widest EWMA gap over the fleet
+    baseline) wins the hedge, not the shard that happens to iterate
+    first. Under the old first-come spend, s1 (earlier scatter index,
+    x10) drained the bucket and the x40 shard stayed unrescued."""
+    shards, keys = _shards(retrieval)
+    model = ShardServiceModel(seed=9, straggler_p=0.0)
+    model.set_persistent("s1", 10.0)       # mild, earlier in scatter
+    model.set_persistent("s2", 40.0)       # chronic, later in scatter
+    base = HedgedDispatch(hedge_after_s=0.5, budget_frac=0.0,
+                          budget_burst=1.0)    # exactly one token
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=0,
+                         service_model=model,
+                         hedge=base.probe_view(0.006),
+                         hedge_after_s=0.006)
+    for key in ("s1", "s2"):
+        fan.add_mirror(key, "s5",
+                       mirror_shard_of(shards[keys.index(key)]))
+    q = _queries(corpus, 1, seed=31)[0]
+    fan.retrieve(q, 8)
+    assert fan.n_shard_hedges == 1         # budget held one token
+    assert fan.n_shard_hedge_wins == 1     # healthy twin beat the x40
+    # s2 was the one rescued: the full gather tops out at s1's
+    # unhedged x10 primary, strictly below s2's x40 draw.
+    twin = ShardServiceModel(seed=9, straggler_p=0.0)
+    assert fan.last_full_gather_s < 40.0 * twin.sample_at("s2", 0)
+    assert fan.last_full_gather_s >= 10.0 * twin.sample_at("s1", 0)
+
+
 def test_standalone_maintain_builds_and_drops_mirror(retrieval, corpus):
     shards, keys = _shards(retrieval)
     model = ShardServiceModel(seed=12, straggler_p=0.0)
