@@ -211,7 +211,7 @@ class ClusterCoordinator:
                  drain_mode: Optional[str] = None,
                  evaluate_batch: Optional[Callable] = None,
                  retrieval=None,
-                 fanout_model=None):
+                 fanout_model=None, feature_sharding=None):
         """``retrieval`` (a ``repro.retrieval.CorpusRetrieval``)
         attaches the sharded inverted-index front end: doc-partition
         stripes route through THIS ring under ``"docpart:p"`` keys,
@@ -276,6 +276,7 @@ class ClusterCoordinator:
         self._sim_rate = sim_rate_items_per_s
         self._drain_mode = drain_mode
         self._evaluate_batch = evaluate_batch
+        self._feature_sharding = feature_sharding
         self._replica_seq = itertools.count(n)
 
         self.ring = ConsistentHashRing(cc.vnodes_per_weight)
@@ -289,7 +290,8 @@ class ClusterCoordinator:
                 kv_pool=(kv_pools[i] if kv_pools else None),
                 request_ids=self._ids,
                 drain_mode=drain_mode,
-                evaluate_batch=evaluate_batch))
+                evaluate_batch=evaluate_batch,
+                feature_sharding=feature_sharding))
             self.ring.add(rid, w)
         self.by_id: Dict[str, ReplicaHandle] = {
             r.replica_id: r for r in self.replicas}
@@ -438,6 +440,15 @@ class ClusterCoordinator:
         carries a fresh monitor and shedder."""
         rep.monitor.on_observe = self.capacity.observe_device
         rep.stats_tap = self._capacity_shed_tap
+        # Adaptive pipeline depth: the coordinator sets depth per
+        # replica through each scheduler's DepthController — point its
+        # latency signal at the fleet's per-stage fits so every replica
+        # shallows/deepens off the same queue-delay model the capacity
+        # planner maintains (local queue-delay EWMAs take over once the
+        # replica has landed responses of its own).
+        ctrl = getattr(rep.scheduler, "depth_controller", None)
+        if ctrl is not None:
+            ctrl.model = self.capacity
 
     def _capacity_shed_tap(self, result, warm: bool) -> None:
         self.capacity.observe_batch(result.uload, result.n_evaluated,
@@ -542,6 +553,22 @@ class ClusterCoordinator:
         if hasattr(self.searcher, "set_slowdown"):
             self.searcher.set_slowdown(replica_id, mult)
 
+    def _adapt_quorum(self) -> None:
+        """Regime-ladder quorum adaptation, once per drain round: read
+        the fleet's worst offered regime off the live schedulers and
+        walk ``quorum_k`` one step — toward the full fan-out under
+        Normal (converging to the bit-exact full gather), toward the
+        configured floor under Very-Heavy (paying only the configured
+        minimum of stragglers when every evaluation slot matters)."""
+        q = getattr(self.searcher, "quorum", None)
+        if q is None or not getattr(self.cfg, "fanout_adaptive_quorum",
+                                    False):
+            return
+        regime = max((r.scheduler.offered_regime()
+                      for r in self.replicas), default=0)
+        n_shards = sum(1 for r in self.replicas if r.shard is not None)
+        q.adapt(regime, n_shards)
+
     def _fanout_maintenance(self) -> None:
         """Selective stripe replication, run once per drain round: a
         replica whose probe EWMA marks it persistently slow gets its
@@ -549,6 +576,7 @@ class ClusterCoordinator:
         ``export_docs -> absorb`` handoff path, deep-copied — the
         primary keeps serving), so shard-probe hedges have somewhere
         to land; mirrors drop once the EWMA recovers."""
+        self._adapt_quorum()
         s = self.searcher
         if self.retrieval is None or not hasattr(s, "replication_due"):
             return
@@ -695,7 +723,8 @@ class ClusterCoordinator:
                 sim_rate_items_per_s=self._sim_rate,
                 request_ids=self._ids,
                 drain_mode=self._drain_mode,
-                evaluate_batch=self._evaluate_batch)
+                evaluate_batch=self._evaluate_batch,
+                feature_sharding=self._feature_sharding)
         if handle.replica_id in self.by_id:
             raise ValueError(
                 f"replica {handle.replica_id!r} already in the fleet")
@@ -1131,15 +1160,17 @@ class ClusterCoordinator:
         # round keeps its score on the next steal_back call (a victim's
         # cache only changes when a batch lands, not mid-scan) —
         # scoring is a device lookup, so pay it once per (victim,
-        # entry). Keyed by victim too: the same request re-scored on a
-        # different replica after a move sees THAT replica's cache.
+        # thief, entry). Keyed by victim too: the same request
+        # re-scored on a different replica after a move sees THAT
+        # replica's cache — and by thief, because decode KV-slot
+        # pressure is a property of where the work would LAND.
         memo: Dict[tuple, float] = {}
 
-        def _costed(rep):
+        def _costed(rep, thief):
             def fn(qreq):
-                key = (rep.replica_id, id(qreq))
+                key = (rep.replica_id, thief.replica_id, id(qreq))
                 if key not in memo:
-                    memo[key] = rep.steal_cost(qreq)
+                    memo[key] = rep.steal_cost(qreq, thief=thief)
                 return memo[key]
             return fn
 
@@ -1152,11 +1183,21 @@ class ClusterCoordinator:
             if gap < self.cluster_cfg.steal_threshold_items:
                 break
             qreq = hot.bank.steal_back(
-                cost_fn=(_costed(hot)
+                cost_fn=(_costed(hot, idle)
                          if self.cluster_cfg.cost_aware_steal
                          else None))
             if qreq is None:            # nothing stealable (heads only)
                 break
+            if getattr(qreq.request, "needs_kv_slot", False):
+                free = idle.kv_free_slots()
+                if free is not None and free <= 0:
+                    # Decode work cannot progress on a thief with no
+                    # claimable KV slots — the cost fold already steers
+                    # the picker away, but when every stealable entry
+                    # is decode (the picker had nothing else), veto the
+                    # migration outright: undo and stop this round.
+                    hot.bank.push(qreq)
+                    break
             if qreq.n_items >= gap:
                 # Moving it would leave the gap as large or larger
                 # (just inverted) — the same jumbo request would be

@@ -73,7 +73,7 @@ class ReplicaHandle:
                  kv_pool=None, request_ids=None,
                  drain_mode: Optional[str] = None,
                  evaluate_batch: Optional[Callable] = None,
-                 retriever=None):
+                 retriever=None, feature_sharding=None):
         self.replica_id = replica_id
         self.weight = float(weight)
         # Doc-partitioned index shard this replica OWNS (the merge of
@@ -97,7 +97,8 @@ class ReplicaHandle:
                           sim_rate_items_per_s=sim_rate_items_per_s,
                           kv_pool=kv_pool, request_ids=request_ids,
                           drain_mode=drain_mode,
-                          evaluate_batch=evaluate_batch)
+                          evaluate_batch=evaluate_batch,
+                          feature_sharding=feature_sharding)
         # drain_mode/evaluate_batch pass straight through: a fused
         # replica runs ONE jitted device step per micro-batch
         # (``core.fused_shedder``) instead of the host chunk loop.
@@ -108,7 +109,8 @@ class ReplicaHandle:
                                     request_ids=request_ids,
                                     drain_mode=drain_mode,
                                     evaluate_batch=evaluate_batch,
-                                    retriever=retriever)
+                                    retriever=retriever,
+                                    feature_sharding=feature_sharding)
         # Responses the coordinator has already collected from
         # ``engine.completed`` (consumption cursor).
         self.n_collected = 0
@@ -185,13 +187,32 @@ class ReplicaHandle:
         out, self._cache_deltas = self._cache_deltas, []
         return out
 
-    def steal_cost(self, qreq: QueuedRequest) -> float:
+    def kv_free_slots(self) -> Optional[int]:
+        """Claimable decode KV slots on this replica (None when no
+        ``KVCachePool`` is attached — non-decode serving)."""
+        return self.scheduler._kv_free_slots()
+
+    def steal_cost(self, qreq: QueuedRequest,
+                   thief: Optional["ReplicaHandle"] = None) -> float:
         """Estimated evaluation cost of serving ``qreq`` HERE: items
         that would miss this replica's Trust-DB (a hit costs a probe, a
         miss costs a full evaluator forward). Cost-aware stealing ranks
         steal candidates by this, so a chunk of cache-hot requests is
         not shipped to a sibling whose cold cache would re-evaluate it
-        while cache-cold work stays behind."""
+        while cache-cold work stays behind.
+
+        With a ``thief`` named, decode KV-slot pressure folds in: a
+        decode request (``needs_kv_slot``) scored against a thief with
+        zero claimable ``KVCachePool`` slots costs ``-inf`` — it can
+        make no progress there (the thief's batcher would just re-queue
+        it), so the steal picker always prefers any other candidate,
+        and the coordinator vetoes the migration outright if the picker
+        had nothing else to offer."""
+        if thief is not None \
+                and getattr(qreq.request, "needs_kv_slot", False):
+            free = thief.kv_free_slots()
+            if free is not None and free <= 0:
+                return float("-inf")
         keys = np.asarray(qreq.request.item_keys)
         if len(keys) == 0:
             return 0.0
@@ -277,7 +298,9 @@ class ReplicaHandle:
                                     request_ids=c["request_ids"],
                                     drain_mode=c["drain_mode"],
                                     evaluate_batch=c["evaluate_batch"],
-                                    retriever=retriever)
+                                    retriever=retriever,
+                                    feature_sharding=c[
+                                        "feature_sharding"])
         new_quarantine = self.engine.scheduler.quarantine
         if old_quarantine is not None and new_quarantine is not None:
             new_quarantine.adopt(old_quarantine)

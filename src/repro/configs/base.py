@@ -258,6 +258,15 @@ class TrustIRConfig:
     # Trust DB cache
     cache_slots: int = 65536
     cache_ways: int = 4
+    # Cache array layout: True (default) stores keys/values/age as
+    # (n_ways, n_slots) — each way one contiguous slot-indexed row, so
+    # the shed_partition kernel's unrolled multi-way probe is one
+    # strided row load per lane block and the VMEM-resident arrays pad
+    # the ways axis to the 8-sublane tile (4 MiB at the production
+    # config) instead of the slot axis to 128 lanes (32 MiB — the
+    # legacy (n_slots, n_ways) layout, kept for parity testing and old
+    # snapshots; every cache op infers the layout from the shape).
+    cache_ways_leading: bool = True
     # Average-trust prior
     prior_buckets: int = 1              # 1 = paper-faithful global average
     prior_ewma: float = 0.05
@@ -289,6 +298,23 @@ class TrustIRConfig:
     # simulated clocks) ignore the depth: their timelines are
     # sequential by construction.
     pipeline_depth: int = 2
+    # Adaptive pipeline depth (cluster.depth.DepthController): when
+    # True the drain window depth is re-decided per drain tick inside
+    # [adaptive_depth_min, pipeline_depth] — deepen when the backlog
+    # could keep a deeper window full (throughput-bound), shallow when
+    # the measured queue delay eats more than
+    # adaptive_depth_latency_frac of the deadline (latency-bound).
+    # The static pipeline_depth above remains the hard clamp. Flap
+    # control: a move needs adaptive_depth_hysteresis CONSECUTIVE
+    # same-direction votes and every applied move starts an
+    # adaptive_depth_cooldown_ticks hold. False = the static-depth
+    # behaviour, bit-for-bit.
+    adaptive_depth: bool = False
+    adaptive_depth_min: int = 1
+    adaptive_depth_backlog_batches: float = 2.0
+    adaptive_depth_latency_frac: float = 0.5
+    adaptive_depth_hysteresis: int = 2
+    adaptive_depth_cooldown_ticks: int = 2
     # Serving fleet (repro.cluster): number of independent replica
     # engines (each with its own shedder/cache/prior state). 1 = the
     # single-host degenerate case; weights bias the consistent-hash
@@ -382,6 +408,12 @@ class TrustIRConfig:
     # are prior-answered (stripe answer cache / trust prior) — the
     # no-drop invariant is unchanged.
     fanout_quorum_k: int = 0
+    # Adaptive quorum (regime ladder): when True the coordinator walks
+    # quorum_k one step per drain round — toward n (the bit-exact full
+    # gather) while the fleet's worst offered regime is Normal, back
+    # toward the configured fanout_quorum_k floor under Very-Heavy.
+    # Inert while fanout_quorum_k is 0 (quorum off).
+    fanout_adaptive_quorum: bool = False
     # Per-shard probe hedging: a stripe probe slower than this races a
     # twin on a sibling's mirror (first completion wins, loser
     # deduplicated), charged to the SAME HedgedDispatch token bucket

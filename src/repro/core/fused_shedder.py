@@ -155,13 +155,26 @@ class FusedLoadShedder(LoadShedder):
                  adaptive=None,
                  max_evals: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 feature_sharding=None):
+        """``feature_sharding`` (optional) places staged features for a
+        mesh-sharded evaluator: a pytree of ``jax.sharding.Sharding``
+        matching the feature pytree, or a callable
+        ``features -> sharding pytree`` (what
+        ``serving.evaluators.make_sharded_evaluator`` returns). When
+        set, ``stage`` transfers each micro-batch with
+        ``jax.device_put(features, sharding)`` — batch N+2's
+        host->device copies land directly in the sharded layout batch
+        N's forward is computing in, so the depth-k window overlaps
+        transfer with the SHARDED evaluator, not a replicated copy of
+        it."""
         super().__init__(cfg, evaluate_batch, monitor=monitor,
                          cache_state=cache_state,
                          prior_state=prior_state,
                          sim_clock=sim_clock, adaptive=adaptive)
         self.evaluate_batch = evaluate_batch
         self.max_evals = max_evals
+        self.feature_sharding = feature_sharding
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
         # Buffer donation is a no-op (with a warning) on CPU; only ask
@@ -224,12 +237,19 @@ class FusedLoadShedder(LoadShedder):
         n = n_total if n_valid is None else int(n_valid)
         valid = np.zeros((n_total,), bool)
         valid[:n] = True
+        if self.feature_sharding is not None:
+            sharding = (self.feature_sharding(features)
+                        if callable(self.feature_sharding)
+                        else self.feature_sharding)
+            feats_j = jax.device_put(features, sharding)
+        else:
+            feats_j = jax.tree.map(jnp.asarray, features)
         return StagedBatch(
             item_keys=np.asarray(item_keys),
             keys_j=jnp.asarray(item_keys, jnp.uint32),
             buckets_j=jnp.asarray(buckets, jnp.int32),
             valid_j=jnp.asarray(valid),
-            feats_j=jax.tree.map(jnp.asarray, features),
+            feats_j=feats_j,
             n=n, n_total=n_total, t_start=t_start,
             wall_start=wall_start)
 

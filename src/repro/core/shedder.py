@@ -251,7 +251,9 @@ class LoadShedder:
         self.evaluate_chunk = evaluate_chunk
         self.monitor = monitor or LoadMonitor(cfg)
         self.cache = (cache_state if cache_state is not None
-                      else TC.init(cfg.cache_slots, cfg.cache_ways))
+                      else TC.init(cfg.cache_slots, cfg.cache_ways,
+                                   ways_leading=getattr(
+                                       cfg, "cache_ways_leading", True)))
         self.prior = (prior_state if prior_state is not None
                       else AT.init(cfg.prior_buckets))
         self.sim_clock = sim_clock

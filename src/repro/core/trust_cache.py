@@ -2,10 +2,21 @@
 
 The paper's Trust DB is an SQL store probed per URL; a host round-trip per
 item would dominate the serving step on TPU, so the DB becomes a fixed-
-capacity ``(n_slots, n_ways)`` hash cache held in device arrays and probed
-with vectorized hashing inside the step function (DESIGN.md §2). Eviction
-is oldest-age within the set (LRU over ways). Key 0 is reserved for
-"empty".
+capacity set-associative hash cache held in device arrays and probed with
+vectorized hashing inside the step function (DESIGN.md §2). Eviction is
+oldest-age within the set (LRU over ways). Key 0 is reserved for "empty".
+
+Layout: the default is **(n_ways, n_slots) — ways-leading** — so each
+way is one contiguous slot-indexed row. The ``shed_partition`` kernel's
+unrolled per-way probe then gathers from a single strided row per way
+(ways pad to the 8-sublane float32 tile instead of the slot axis padding
+to 128 lanes, which made the legacy layout unlowerable at the production
+cache config). The legacy ``(n_slots, n_ways)`` slots-leading layout is
+still accepted everywhere: every op infers the layout from the array
+shape (the ways axis is the strictly smaller one — ``init`` enforces
+``n_ways < n_slots``), so snapshots and handoffs from either layout
+interoperate. Under jit, shapes are static, so the inference is a
+Python-time branch with zero traced cost.
 
 Purely functional: every op returns a new state pytree, so the cache
 threads through jit/pjit and checkpoints like any other model state.
@@ -27,11 +38,30 @@ def _hash32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def init(n_slots: int, n_ways: int) -> Dict[str, jnp.ndarray]:
+def dims(shape: Tuple[int, int]) -> Tuple[int, int, bool]:
+    """(n_slots, n_ways, ways_leading) inferred from a cache array shape.
+
+    The ways axis is the strictly smaller one (``init`` guarantees
+    ``n_ways < n_slots``); a square shape is read as the legacy
+    slots-leading layout.
+    """
+    a, b = shape
+    if a < b:
+        return b, a, True
+    return a, b, False
+
+
+def init(n_slots: int, n_ways: int, *,
+         ways_leading: bool = True) -> Dict[str, jnp.ndarray]:
+    if n_ways >= n_slots:
+        raise ValueError(
+            f"trust cache needs n_ways < n_slots for layout inference, "
+            f"got n_slots={n_slots} n_ways={n_ways}")
+    shape = (n_ways, n_slots) if ways_leading else (n_slots, n_ways)
     return {
-        "keys": jnp.zeros((n_slots, n_ways), jnp.uint32),
-        "values": jnp.zeros((n_slots, n_ways), jnp.float32),
-        "age": jnp.zeros((n_slots, n_ways), jnp.int32),
+        "keys": jnp.zeros(shape, jnp.uint32),
+        "values": jnp.zeros(shape, jnp.float32),
+        "age": jnp.zeros(shape, jnp.int32),
         "clock": jnp.zeros((), jnp.int32),
     }
 
@@ -39,13 +69,20 @@ def init(n_slots: int, n_ways: int) -> Dict[str, jnp.ndarray]:
 def lookup(state: Dict, keys: jnp.ndarray
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """keys: (N,) uint32 (nonzero) -> (values (N,) f32, hit (N,) bool)."""
-    n_slots = state["keys"].shape[0]
+    n_slots, _, ways_leading = dims(state["keys"].shape)
     slot = (_hash32(keys) % jnp.uint32(n_slots)).astype(jnp.int32)
-    cand_k = state["keys"][slot]                     # (N, ways)
-    match = cand_k == keys[:, None].astype(jnp.uint32)
-    hit = jnp.any(match, axis=-1) & (keys != 0)
-    way = jnp.argmax(match, axis=-1)                 # first matching way
-    vals = state["values"][slot, way]
+    if ways_leading:
+        cand_k = state["keys"][:, slot]              # (ways, N)
+        match = cand_k == keys[None, :].astype(jnp.uint32)
+        hit = jnp.any(match, axis=0) & (keys != 0)
+        way = jnp.argmax(match, axis=0)              # first matching way
+        vals = state["values"][way, slot]
+    else:
+        cand_k = state["keys"][slot]                 # (N, ways)
+        match = cand_k == keys[:, None].astype(jnp.uint32)
+        hit = jnp.any(match, axis=-1) & (keys != 0)
+        way = jnp.argmax(match, axis=-1)             # first matching way
+        vals = state["values"][slot, way]
     return jnp.where(hit, vals, 0.0), hit
 
 
@@ -56,11 +93,15 @@ def insert(state: Dict, keys: jnp.ndarray, values: jnp.ndarray,
     Way choice: matching key if present (update) > empty way > oldest age.
     Duplicate slots within the batch resolve last-write-wins.
     """
-    n_slots, n_ways = state["keys"].shape
+    n_slots, n_ways, ways_leading = dims(state["keys"].shape)
     keys = keys.astype(jnp.uint32)
     slot = (_hash32(keys) % jnp.uint32(n_slots)).astype(jnp.int32)
-    cand_k = state["keys"][slot]                     # (N, ways)
-    cand_age = state["age"][slot]
+    if ways_leading:
+        cand_k = state["keys"][:, slot].T            # (N, ways)
+        cand_age = state["age"][:, slot].T
+    else:
+        cand_k = state["keys"][slot]                 # (N, ways)
+        cand_age = state["age"][slot]
     match = cand_k == keys[:, None]
     empty = cand_k == 0
     # priority: match (2^30) > empty (2^20) > -age (older = larger)
@@ -72,10 +113,16 @@ def insert(state: Dict, keys: jnp.ndarray, values: jnp.ndarray,
     # Drop masked writes by pushing the slot out of range.
     w_slot = jnp.where(ok, slot, n_slots)
     clock = state["clock"] + 1
-    new_keys = state["keys"].at[w_slot, way].set(keys, mode="drop")
-    new_vals = state["values"].at[w_slot, way].set(
-        values.astype(jnp.float32), mode="drop")
-    new_age = state["age"].at[w_slot, way].set(clock, mode="drop")
+    if ways_leading:
+        new_keys = state["keys"].at[way, w_slot].set(keys, mode="drop")
+        new_vals = state["values"].at[way, w_slot].set(
+            values.astype(jnp.float32), mode="drop")
+        new_age = state["age"].at[way, w_slot].set(clock, mode="drop")
+    else:
+        new_keys = state["keys"].at[w_slot, way].set(keys, mode="drop")
+        new_vals = state["values"].at[w_slot, way].set(
+            values.astype(jnp.float32), mode="drop")
+        new_age = state["age"].at[w_slot, way].set(clock, mode="drop")
     return {"keys": new_keys, "values": new_vals, "age": new_age,
             "clock": clock}
 

@@ -41,14 +41,44 @@ class GatherReport:
 
 
 class QuorumGather:
-    """First-k-of-n split of per-shard completion times."""
+    """First-k-of-n split of per-shard completion times.
 
-    def __init__(self, quorum_k: int = 0):
+    ``floor_k`` is the loosest quorum the operator configured; the
+    regime-ladder adaptation (:meth:`adapt`) moves ``quorum_k`` between
+    that floor and the live fan-out ``n``, so under Normal load the
+    gather converges to the bit-exact full gather and under Very-Heavy
+    load it pays only the configured minimum of stragglers."""
+
+    def __init__(self, quorum_k: int = 0, *, floor_k: int = None):
         self.quorum_k = int(quorum_k)
+        self.floor_k = int(quorum_k if floor_k is None else floor_k)
+        self.n_adapts = 0
 
     def effective_k(self, n: int) -> int:
         """Clamp to the live fan-out: 0 (or >= n) waits for everyone."""
         return self.quorum_k if 0 < self.quorum_k < n else n
+
+    def adapt(self, regime: int, n: int) -> int:
+        """One regime-ladder step: tighten ``quorum_k`` toward ``n``
+        (full gather) under Normal, loosen toward the configured
+        ``floor_k`` under Very-Heavy, hold under Heavy. One step per
+        call, so the quorum walks the ladder instead of flapping
+        between its extremes. Inert while quorum is disabled
+        (``floor_k <= 0``: the synchronous full gather, whose bit
+        parity the property tests pin). ``regime`` is
+        ``repro.core.regimes.Regime`` (or its int value)."""
+        if self.floor_k <= 0 or n <= 0:
+            return self.quorum_k
+        k = self.quorum_k
+        if int(regime) == 0:                     # Normal
+            k = min(k + 1, n)
+        elif int(regime) >= 2:                   # Very-Heavy
+            k = max(k - 1, self.floor_k)
+        k = max(min(k, max(n, self.floor_k)), self.floor_k)
+        if k != self.quorum_k:
+            self.n_adapts += 1
+            self.quorum_k = k
+        return self.quorum_k
 
     def split(self, times: Sequence[float]
               ) -> Tuple[float, List[bool]]:

@@ -13,10 +13,19 @@ is exactly VPU-shaped instead of the 1-D blocks the kernel ran before
 full). Arrival order is row-major within a block; the running scans are
 two-pass 2-D cumsums (cumsum along lanes, then a sublane offset of row
 totals) — vector ops only, no 1-D reshapes. The cache (keys/values,
-set-associative) is VMEM-resident across all grid steps; at the
-production config (65536 x 4 ways x 8 B = 2 MiB) it fits the ~16 MiB
-VMEM budget comfortably, and :func:`shed_partition_vmem_bytes` computes
-the measured budget handed to the compiler as ``vmem_limit_bytes``.
+set-associative) is VMEM-resident across all grid steps. Its layout is
+inferred from the array shape (``trust_cache.dims``): the default
+**(n_ways, n_slots) ways-leading** retile makes each way one contiguous
+slot-indexed row, so the unrolled per-way probe is ONE strided row load
+per lane block (``ck_ref[w, slot]``) and the resident arrays pad the
+ways axis to the 8-sublane tile — 4 MiB at the production config
+(65536 slots x 4→8 ways x 8 B), comfortably inside the ~16 MiB VMEM
+budget. The legacy (n_slots, n_ways) layout still runs (per-way
+element gather), but its lane-axis padding (ways 4 → 128 lanes) makes
+the resident claim 32 MiB at the production config — the retile is
+what lets the production cache actually lower.
+:func:`shed_partition_vmem_bytes` computes the measured, padding-honest
+budget handed to the compiler as ``vmem_limit_bytes``.
 Running counters (valid-so-far, drop-queue-evals-so-far, normal-queue
 evals, EVAL-tier items) live in SMEM scratch and carry across the
 sequential grid, making the tier assignment an exact scan without host
@@ -62,6 +71,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.shedder import (TIER_CACHED, TIER_EVAL, TIER_INVALID,
                                 TIER_PRIOR)
+from repro.core.trust_cache import dims as cache_dims
 
 LANES = 128          # last-dim tile width (every dtype)
 SUBLANES = 8         # float32/int32 sublane tile height
@@ -85,11 +95,21 @@ def _cumsum_rowmajor(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def shed_partition_vmem_bytes(n_slots: int, n_ways: int,
-                              block_rows: int = SUBLANES) -> int:
+                              block_rows: int = SUBLANES, *,
+                              ways_leading: bool = True) -> int:
     """Measured VMEM budget of one grid step: the resident Trust-DB
-    (keys + values) plus the double-buffered in/out blocks (keys,
-    valid; tier, cval, rank — all 4-byte lanes) and scratch slack."""
-    cache = 2 * n_slots * n_ways * 4
+    (keys + values, tile-padding honest) plus the double-buffered
+    in/out blocks (keys, valid; tier, cval, rank — all 4-byte lanes)
+    and scratch slack.
+
+    Ways-leading (n_ways, n_slots) arrays pad ways up to the 8-sublane
+    float32 tile (4 MiB at 65536 x 4); the legacy slots-leading layout
+    pads ways up to 128 lanes instead — 32 MiB at the production
+    config, which is why the retile exists."""
+    if ways_leading:
+        cache = 2 * max(n_ways, SUBLANES) * n_slots * 4
+    else:
+        cache = 2 * n_slots * max(n_ways, LANES) * 4
     blocks = 5 * block_rows * LANES * 4
     return cache + 2 * blocks + (128 << 10)          # 128 KiB slack
 
@@ -98,7 +118,7 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
                  keys_ref, valid_ref, ck_ref, cv_ref,
                  tier_ref, cval_ref, rank_ref,
                  cnt_scr, *, block_rows: int, n_slots: int, n_ways: int,
-                 budget_is_total: bool):
+                 ways_leading: bool, budget_is_total: bool):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -119,8 +139,14 @@ def _shed_kernel(params_ref,              # SMEM: [ucap, uthr, budget]
     hit = jnp.zeros((block_rows, LANES), jnp.bool_)
     val = jnp.zeros((block_rows, LANES), jnp.float32)
     for w in range(n_ways):                        # ways unrolled
-        ck = ck_ref[slot, w]                       # VMEM gather
-        cv = cv_ref[slot, w]
+        if ways_leading:
+            # One strided load per lane block: way w is a contiguous
+            # slot-indexed row, gathered in place.
+            ck = ck_ref[w, slot]
+            cv = cv_ref[w, slot]
+        else:                                      # legacy layout
+            ck = ck_ref[slot, w]                   # per-way VMEM gather
+            cv = cv_ref[slot, w]
         m = (ck == keys) & (keys != jnp.uint32(0))
         val = jnp.where(m & ~hit, cv, val)
         hit = hit | m
@@ -177,7 +203,9 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
                    budget_is_total: bool = False,
                    block_rows: int = SUBLANES, interpret: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """keys: (N,) uint32; valid: (N,) bool; cache_*: (slots, ways).
+    """keys: (N,) uint32; valid: (N,) bool; cache_*: (ways, slots) in
+    the default ways-leading layout, or legacy (slots, ways) — the
+    layout is inferred from the shape (``trust_cache.dims``).
 
     Returns (tier (N,) int32, cached_vals (N,) f32, eval_rank (N,)
     int32). ``eval_rank`` is the arrival-ordered compacted position of
@@ -210,11 +238,14 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
     rows = (n + n_pad) // LANES
     keys2 = keys_p.reshape(rows, LANES)
     valid2 = valid_p.reshape(rows, LANES)
-    n_slots, n_ways = cache_keys.shape
+    n_slots, n_ways, ways_leading = cache_dims(cache_keys.shape)
+    cache_block = ((n_ways, n_slots) if ways_leading
+                   else (n_slots, n_ways))
     params = jnp.asarray([u_capacity, u_threshold, budget_dq], jnp.int32)
 
     kernel = functools.partial(_shed_kernel, block_rows=block_rows,
                                n_slots=n_slots, n_ways=n_ways,
+                               ways_leading=ways_leading,
                                budget_is_total=budget_is_total)
     kwargs = {}
     if not interpret:
@@ -222,7 +253,7 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
         # double-buffered blocks must fit, nothing more is needed.
         kwargs["compiler_params"] = pltpu.TPUCompilerParams(
             vmem_limit_bytes=shed_partition_vmem_bytes(
-                n_slots, n_ways, block_rows))
+                n_slots, n_ways, block_rows, ways_leading=ways_leading))
     tier, cval, rank = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -231,8 +262,8 @@ def shed_partition(keys: jnp.ndarray, valid: jnp.ndarray,
             in_specs=[
                 pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
                 pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),
-                pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
-                pl.BlockSpec((n_slots, n_ways), lambda i, *_: (0, 0)),
+                pl.BlockSpec(cache_block, lambda i, *_: (0, 0)),
+                pl.BlockSpec(cache_block, lambda i, *_: (0, 0)),
             ],
             out_specs=[
                 pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0)),

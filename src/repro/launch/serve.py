@@ -65,6 +65,57 @@ line replays bit-identically within a process.
 
 The chaos gates themselves (no-drop, p99, O(k) quarantine containment,
 O(n log n) gossip, bit-determinism) run in benchmarks/bench_fleet.py.
+
+heavyweight evaluators on the fused drain (config knobs)
+--------------------------------------------------------
+``TrustIRConfig.evaluator_arch`` names the trust backbone ('bst',
+'dlrm-mlperf', 'gcn-cora', 'gemma2-2b', 'mind', 'moonshot-v1-16b-a3b',
+'qwen2.5-14b', 'smollm-135m', 'two-tower-retrieval'); --arch maps to
+it here. Production-scale backbones stay on the fused hot path via:
+
+  --sharded (needs --drain-mode fused)    mesh-shard the evaluator
+                                          with serving.evaluators.
+                                          make_sharded_evaluator:
+                                          params placed by
+                                          distribution.sharding specs,
+                                          each micro-batch's features
+                                          staged with the evaluator's
+                                          INPUT sharding so batch
+                                          N+2's host->device transfer
+                                          overlaps the sharded forward
+                                          of batch N inside the
+                                          depth-k window
+  --adaptive-depth                        bounded hysteresis
+                                          controller (cluster.depth)
+                                          retunes the DrainExecutor
+                                          window each drain tick
+                                          between adaptive_depth_min
+                                          and --pipeline-depth (the
+                                          static config stays the
+                                          CLAMP); deepen under
+                                          backlog, shallow when queue
+                                          delay eats the deadline;
+                                          TrustIRConfig.
+                                          adaptive_depth_hysteresis /
+                                          _cooldown_ticks /
+                                          _backlog_batches /
+                                          _latency_frac tune the
+                                          no-flap guarantees
+  TrustIRConfig.cache_ways_leading        Trust-DB probe cache layout:
+                                          True (default) tiles VMEM
+                                          (ways, slots) so the
+                                          multi-way probe reads one
+                                          (8,128) block per way;
+                                          False restores the legacy
+                                          row-slab layout
+  TrustIRConfig.fanout_adaptive_quorum    let the coordinator walk
+                                          fanout_quorum_k with the
+                                          offered regime (tighten
+                                          toward n when Normal, relax
+                                          toward the configured floor
+                                          when Very Heavy); quorum_k
+                                          == n stays bit-identical to
+                                          the full gather
 """
 
 
@@ -84,6 +135,16 @@ def main() -> int:
                    help="micro-batch executor: host chunk loop "
                         "(wall-clock deadline) or the fused "
                         "one-device-step-per-batch drain")
+    p.add_argument("--sharded", action="store_true",
+                   help="mesh-sharded evaluator windows (needs "
+                        "--drain-mode fused): place evaluator params "
+                        "and each staged micro-batch's features with "
+                        "distribution.sharding specs (see epilog)")
+    p.add_argument("--adaptive-depth", action="store_true",
+                   help="adaptive DrainExecutor window: a bounded "
+                        "hysteresis controller retunes the in-flight "
+                        "depth per drain tick; --pipeline-depth "
+                        "becomes the clamp (see epilog)")
     p.add_argument("--pipeline-depth", type=int, default=2,
                    help="DrainExecutor in-flight window (fused drain): "
                         "1 syncs every drain call (the PR-3 "
@@ -178,9 +239,19 @@ def main() -> int:
     from repro.core.adaptive import AdaptiveWeightController
     from repro.scheduling import Priority
     from repro.serving.engine import ServingEngine
-    from repro.serving.evaluators import make_evaluator
+    from repro.serving.evaluators import (make_evaluator,
+                                          make_sharded_evaluator)
 
-    ev, mk = make_evaluator(args.arch, smoke=True)
+    feature_sharding = None
+    if args.sharded:
+        if args.drain_mode != "fused":
+            raise SystemExit("--sharded shards the fused evaluator "
+                             "window; add --drain-mode fused")
+        se = make_sharded_evaluator(args.arch, smoke=True)
+        ev, mk = se.evaluate, se.make_features
+        feature_sharding = se.feature_sharding
+    else:
+        ev, mk = make_evaluator(args.arch, smoke=True)
 
     def evaluate(chunk):
         return np.asarray(ev({k: jnp.asarray(v)
@@ -205,6 +276,7 @@ def main() -> int:
                   gossip_mode=args.gossip_mode,
                   quarantine_k=max(args.quarantine_k, 0),
                   pipeline_depth=max(args.pipeline_depth, 1),
+                  adaptive_depth=args.adaptive_depth,
                   forecast=args.forecast,
                   warmup_lead_s=max(args.warmup_lead_s, 0.0))
     if args.corpus > 0:
@@ -278,7 +350,8 @@ def main() -> int:
                 [retrieval.build_shard(range(cfg.index_partitions))])
         eng = ServingEngine(cfg, evaluate, drain_mode=args.drain_mode,
                             evaluate_batch=evaluate_batch,
-                            retriever=retriever)
+                            retriever=retriever,
+                            feature_sharding=feature_sharding)
         if args.adaptive:
             eng.shedder.adaptive = AdaptiveWeightController()
     else:
@@ -296,7 +369,8 @@ def main() -> int:
             drain_mode=args.drain_mode,
             evaluate_batch=evaluate_batch,
             retrieval=retrieval,
-            fanout_model=fanout_model)
+            fanout_model=fanout_model,
+            feature_sharding=feature_sharding)
         if args.adaptive:
             for rep in eng.replicas:
                 rep.engine.shedder.adaptive = AdaptiveWeightController()

@@ -102,7 +102,25 @@ candidate sets start at *arrive*):
        |                                    keeps the window open
        |                                    ACROSS drain calls so batch
        |                                    N+2 forms + transfers while
-       |                                    N computes and N+1 waits),
+       |                                    N computes and N+1 waits;
+       |                                    with ``TrustIRConfig.
+       |                                    adaptive_depth`` a bounded
+       |                                    hysteresis controller
+       |                                    (cluster.depth) retunes the
+       |                                    window each drain tick —
+       |                                    deepen under backlog,
+       |                                    shallow when queue delay
+       |                                    eats the deadline, reading
+       |                                    the capacity planner's
+       |                                    STAGE_QUEUE p99 when no
+       |                                    fresh sample exists — one
+       |                                    step at a time between
+       |                                    ``adaptive_depth_min`` and
+       |                                    the static config, which
+       |                                    stays the CLAMP; streak
+       |                                    votes + cooldown mean
+       |                                    alternating pressure never
+       |                                    flaps the depth),
        |                                    per-batch completion
        |                                    callbacks (results, Trust-
        |                                    DB/prior fold-back, Load-
@@ -133,7 +151,26 @@ candidate sets start at *arrive*):
        |                                    scatter, cache/prior
        |                                    fold-back — staged (host->
        |                                    device transfer) then
-       |                                    dispatched, both async
+       |                                    dispatched, both async; the
+       |                                    Trust-DB probe walks a
+       |                                    ways-LEADING cache tile
+       |                                    (one (8,128) VMEM block per
+       |                                    way instead of a strided
+       |                                    row slab); a mesh-sharded
+       |                                    evaluator (serving.
+       |                                    evaluators.
+       |                                    make_sharded_evaluator)
+       |                                    hands the engine its
+       |                                    ``feature_sharding`` so
+       |                                    stage() device_puts each
+       |                                    batch's gathered features
+       |                                    with the evaluator's INPUT
+       |                                    sharding — batch N+2's
+       |                                    transfer overlaps the
+       |                                    sharded forward of batch N
+       |                                    inside the same depth-k
+       |                                    window, exactly-once
+       |                                    fold-back unchanged
     respond  scheduling.scheduler           split per-request Responses
                                             per completed batch; hedged
                                             re-dispatch via

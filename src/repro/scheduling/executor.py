@@ -98,6 +98,15 @@ class DrainExecutor:
     def effective_depth(self) -> int:
         return 0 if self.eager else self.depth
 
+    def set_depth(self, depth: int) -> None:
+        """Re-bound the in-flight window (adaptive pipeline depth —
+        ``cluster.depth.DepthController``). Takes effect at the next
+        ``submit``: a shrink finalizes the overhang oldest-first then
+        (in arrival order, exactly as a full window would), a growth
+        simply stops forcing finalization until the new bound fills.
+        No in-flight batch is ever abandoned."""
+        self.depth = max(1, int(depth))
+
     # -- the pipeline --------------------------------------------------------
     def submit(self, batch) -> List:
         """Dispatch one micro-batch; returns the responses of any OLDER

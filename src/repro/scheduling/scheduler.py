@@ -173,6 +173,15 @@ class Scheduler:
             rescue=self._rescue_responses,
             on_error=(self._note_executor_error
                       if self.quarantine is not None else None))
+        # Adaptive pipeline depth (cluster.depth): None when disabled —
+        # the static-depth drain is then untouched. The coordinator
+        # points ``depth_controller.model`` at the fleet's
+        # ServiceTimeModel so the latency signal reads the same
+        # per-stage fits the capacity planner maintains; standalone the
+        # controller runs on the scheduler's own queue-delay EWMA.
+        from repro.cluster.depth import controller_from_config
+        self.depth_controller = controller_from_config(cfg)
+        self._queue_delay_ewma: Optional[float] = None
 
     # The executor runs whatever shedder the scheduler carries; keeping
     # the reference in ONE place lets baseline drivers swap shedders
@@ -325,6 +334,15 @@ class Scheduler:
         ``flush`` call."""
         out: List[Response] = []
         n_done = 0
+        if self.depth_controller is not None:
+            # One control tick per drain call: backlog in formable
+            # batches vs the freshest queue-delay signal (local EWMA,
+            # or the attached ServiceTimeModel's queue-stage fit when
+            # no response has landed here yet).
+            self.executor.set_depth(self.depth_controller.tick(
+                backlog_batches=self.queued_items
+                / max(self.max_batch_items, 1),
+                queue_delay_s=self._queue_delay_ewma))
         # KV budget threads across the whole drain: slots are claimed by
         # the decode executor after responses land, so batches formed in
         # one drain must share the snapshot taken here.
@@ -410,6 +428,15 @@ class Scheduler:
             for sig in sorted({work_signature(qreq.request.item_keys)
                                for qreq, _, _ in batch.slices}):
                 self.quarantine.record_success(sig)
+        if self.depth_controller is not None and batch.slices:
+            # Latency signal for the adaptive-depth controller: EWMA of
+            # per-batch queue delay (batch start - earliest enqueue).
+            delay = max(batch_start
+                        - min(q.enqueue_t for q, _, _ in batch.slices),
+                        0.0)
+            self._queue_delay_ewma = (
+                delay if self._queue_delay_ewma is None
+                else 0.7 * self._queue_delay_ewma + 0.3 * delay)
         responses: List[Response] = []
         for qreq, s, ln in batch.slices:
             rid = qreq.request.request_id

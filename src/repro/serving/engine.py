@@ -71,7 +71,8 @@ class ServingEngine:
                  drain_mode: Optional[str] = None,
                  evaluate_batch: Optional[Callable] = None,
                  fused_max_evals: Optional[int] = None,
-                 retriever=None):
+                 retriever=None,
+                 feature_sharding=None):
         """``drain_mode`` (default ``cfg.drain_mode``) selects the
         micro-batch executor: ``"host"`` is the chunked wall-clock-
         deadline path (paper figures), ``"fused"`` runs one jitted
@@ -88,7 +89,14 @@ class ServingEngine:
         ``search(query, n) -> SearchResults``) enables
         :meth:`enqueue_query` — raw query strings in, candidate sets
         out — with the retrieve stage's measured latency folded into
-        the LoadMonitor under the WarmupGate rule."""
+        the LoadMonitor under the WarmupGate rule.
+
+        ``feature_sharding`` (fused mode only) stages each micro-batch's
+        features with a mesh-sharded evaluator's input placement — pass
+        the callable from
+        ``serving.evaluators.make_sharded_evaluator`` so production
+        (non-smoke) evaluators run sharded inside the depth-k drain
+        window."""
         self.cfg = cfg
         self.monitor = LoadMonitor(cfg)
         mode = drain_mode or getattr(cfg, "drain_mode", "host")
@@ -99,7 +107,8 @@ class ServingEngine:
             shedder = FusedLoadShedder(
                 cfg, evaluate_batch or evaluate_chunk,
                 monitor=self.monitor, sim_clock=sim_clock,
-                max_evals=fused_max_evals)
+                max_evals=fused_max_evals,
+                feature_sharding=feature_sharding)
         else:
             shedder = LoadShedder(cfg, evaluate_chunk,
                                   monitor=self.monitor,

@@ -5,11 +5,21 @@ the paper's algorithm arch-agnostic (DESIGN.md §4).
 Each factory returns (evaluate_chunk, make_features) where
 ``make_features(n, seed)`` synthesizes evaluator inputs for n items
 (documents/candidates) with leading dim n.
+
+:func:`make_sharded_evaluator` is the production-config variant: the
+evaluator's parameters are placed with the ``distribution.sharding``
+rules on a real mesh (TP/EP for transformers, row-sharded embedding
+tables for recsys), and the returned ``feature_sharding`` callable
+gives the matching data-parallel input placement. The fused drain
+(``core.fused_shedder``) stages each micro-batch's gathered eval
+features with that sharding, so the host->device transfer of batch N+2
+lands directly in the layout the sharded forward of batch N is already
+using — no device-side reshard on the hot path.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Dict, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,14 +30,19 @@ from repro.configs.base import GNNConfig, RecsysConfig, TransformerConfig
 
 
 def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
-                   trust_scale: float = 5.0,
-                   doc_len: int = 32) -> Tuple[Callable, Callable]:
+                   trust_scale: float = 5.0, doc_len: int = 32,
+                   place_params: Optional[Callable] = None
+                   ) -> Tuple[Callable, Callable]:
+    """``place_params(params, cfg) -> params`` (optional) re-homes the
+    freshly initialized parameters — the mesh-sharding hook
+    :func:`make_sharded_evaluator` uses; identity when omitted."""
     cfg = get_config(arch_id, smoke=smoke)
     key = jax.random.PRNGKey(seed)
+    _place = place_params or (lambda p, _cfg: p)
 
     if isinstance(cfg, TransformerConfig):
         from repro.models import transformer as T
-        params = T.init_params(key, cfg)
+        params = _place(T.init_params(key, cfg), cfg)
 
         @jax.jit
         def evaluate(chunk: Dict) -> jnp.ndarray:
@@ -46,7 +61,7 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
 
     if isinstance(cfg, GNNConfig):
         from repro.models import gnn as G
-        params = G.init_params(key, cfg)
+        params = _place(G.init_params(key, cfg), cfg)
         deg = 8
 
         @jax.jit
@@ -75,7 +90,7 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
     if isinstance(cfg, RecsysConfig):
         if cfg.model == "dlrm":
             from repro.models.recsys import dlrm as Mdl
-            params = Mdl.init_params(key, cfg)
+            params = _place(Mdl.init_params(key, cfg), cfg)
 
             @jax.jit
             def evaluate(chunk: Dict) -> jnp.ndarray:
@@ -96,7 +111,7 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
 
         if cfg.model == "bst":
             from repro.models.recsys import bst as Mdl
-            params = Mdl.init_params(key, cfg)
+            params = _place(Mdl.init_params(key, cfg), cfg)
 
             @jax.jit
             def evaluate(chunk: Dict) -> jnp.ndarray:
@@ -121,7 +136,7 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
 
         if cfg.model == "two_tower":
             from repro.models.recsys import two_tower as Mdl
-            params = Mdl.init_params(key, cfg)
+            params = _place(Mdl.init_params(key, cfg), cfg)
 
             @jax.jit
             def evaluate(chunk: Dict) -> jnp.ndarray:
@@ -147,7 +162,7 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
 
         if cfg.model == "mind":
             from repro.models.recsys import mind as Mdl
-            params = Mdl.init_params(key, cfg)
+            params = _place(Mdl.init_params(key, cfg), cfg)
 
             @jax.jit
             def evaluate(chunk: Dict) -> jnp.ndarray:
@@ -168,3 +183,64 @@ def make_evaluator(arch_id: str, *, smoke: bool = True, seed: int = 0,
             return evaluate, make_features
 
     raise ValueError(f"no evaluator for {arch_id}")
+
+
+class ShardedEvaluator(NamedTuple):
+    """Production-config evaluator bundle for the fused drain:
+    ``evaluate`` (params mesh-sharded per ``distribution.sharding``),
+    ``make_features``, the ``feature_sharding`` callable to hand to
+    :class:`~repro.core.fused_shedder.FusedLoadShedder` (and through
+    ``ServingEngine(feature_sharding=...)``), and the mesh itself."""
+    evaluate: Callable
+    make_features: Callable
+    feature_sharding: Callable
+    mesh: Any
+
+
+def make_sharded_evaluator(arch_id: str, *, mesh=None,
+                           smoke: bool = False, seed: int = 0,
+                           trust_scale: float = 5.0,
+                           doc_len: int = 32) -> ShardedEvaluator:
+    """Mesh-sharded production evaluator (default ``smoke=False``).
+
+    Parameters are placed with the arch family's
+    ``distribution.sharding`` rules — TP columns/rows and EP experts
+    over the ``model`` axis for transformers, 2D row-sharded embedding
+    tables for recsys — so the evaluator forward inside the fused drain
+    window runs as a sharded SPMD program instead of a replicated one.
+    ``feature_sharding(features)`` returns the matching input placement
+    pytree: every leaf data-parallel over the mesh's DP axes (falling
+    back to replication when the batch does not divide them — jax
+    rejects ragged ``device_put`` placements). ``mesh=None`` builds the
+    1x1 host mesh (tests/CPU smoke); pass
+    ``launch.mesh.make_production_mesh()`` on real hardware."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distribution.sharding import (dp_axes, param_specs,
+                                             shardings_of)
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((1, 1))
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def place_params(params, cfg):
+        shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        return jax.device_put(
+            params, shardings_of(param_specs(cfg, shapes, mesh), mesh))
+
+    def feature_sharding(features):
+        def one(a):
+            arr = np.asarray(a)
+            ax = dp if (dp and arr.ndim >= 1
+                        and arr.shape[0] % dp_size == 0) else None
+            return NamedSharding(
+                mesh, P(ax, *([None] * max(arr.ndim - 1, 0))))
+        return jax.tree.map(one, features)
+
+    evaluate, make_features = make_evaluator(
+        arch_id, smoke=smoke, seed=seed, trust_scale=trust_scale,
+        doc_len=doc_len, place_params=place_params)
+    return ShardedEvaluator(evaluate, make_features, feature_sharding,
+                            mesh)

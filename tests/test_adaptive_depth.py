@@ -1,0 +1,181 @@
+"""Adaptive pipeline depth (cluster.depth): bounded hysteresis
+controller over the DrainExecutor window — deepen under backlog,
+shallow when latency-bound, never flap, static config stays the clamp —
+plus the scheduler/coordinator wiring behind
+``TrustIRConfig.adaptive_depth``."""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.cluster.depth import (DepthController, VOTE_DEEPEN,
+                                 VOTE_HOLD, VOTE_SHALLOW,
+                                 controller_from_config)
+from repro.configs.base import TrustIRConfig, reduced
+from repro.configs.trust_ir import smoke_config
+
+# Signals that produce an unambiguous vote at deadline_s=1.0,
+# latency_frac=0.5, deepen_backlog_batches=2.0.
+DEEPEN = dict(backlog_batches=10.0, queue_delay_s=0.0)
+SHALLOW = dict(backlog_batches=0.0, queue_delay_s=10.0)
+HOLD = dict(backlog_batches=0.0, queue_delay_s=0.0)
+
+
+def _ctrl(**kw):
+    base = dict(min_depth=1, max_depth=4, deadline_s=1.0,
+                deepen_backlog_batches=2.0, latency_frac=0.5,
+                hysteresis=2, cooldown_ticks=2)
+    base.update(kw)
+    return DepthController(**base)
+
+
+def test_starts_at_static_clamp_and_idle_holds():
+    c = _ctrl()
+    assert c.depth == 4                    # max_depth = the static cfg
+    for _ in range(10):
+        assert c.tick(**HOLD) == 4         # idle replica: pre-adaptive
+    assert c.n_changes == 0
+
+
+def test_shallow_needs_hysteresis_consecutive_votes():
+    c = _ctrl(hysteresis=3, cooldown_ticks=0)
+    assert c.tick(**SHALLOW) == 4          # 1 vote: no change
+    assert c.tick(**SHALLOW) == 4          # 2 votes: no change
+    assert c.tick(**SHALLOW) == 3          # 3rd consecutive applies
+    assert c.last.changed and c.last.vote == VOTE_SHALLOW
+
+
+def test_hold_resets_the_streak():
+    c = _ctrl(hysteresis=2, cooldown_ticks=0)
+    c.tick(**SHALLOW)
+    c.tick(**HOLD)                         # interrupts the streak
+    assert c.tick(**SHALLOW) == 4          # back to streak 1
+    assert c.tick(**SHALLOW) == 3
+
+
+def test_cooldown_blocks_votes_after_a_change():
+    c = _ctrl(hysteresis=2, cooldown_ticks=3)
+    c.tick(**SHALLOW)
+    assert c.tick(**SHALLOW) == 3          # applied; cooldown starts
+    for _ in range(3):                     # cooldown: votes don't count
+        assert c.tick(**SHALLOW) == 3
+    c.tick(**SHALLOW)
+    assert c.tick(**SHALLOW) == 2          # fresh streak after cooldown
+
+
+def test_deepens_back_under_backlog_and_clamps_at_static():
+    c = _ctrl(hysteresis=1, cooldown_ticks=0)
+    for _ in range(10):
+        c.tick(**SHALLOW)
+    assert c.depth == 1                    # floored at min_depth
+    for _ in range(10):
+        c.tick(**DEEPEN)
+    assert c.depth == 4                    # ceiling: the static config
+
+
+def test_alternating_pressure_never_flaps():
+    """The no-flap anchor: strictly alternating deepen/shallow signals
+    never reach ``hysteresis`` consecutive votes, so depth is a fixed
+    point regardless of where it starts."""
+    for start in (1, 2, 3, 4):
+        c = _ctrl(hysteresis=2, cooldown_ticks=0)
+        c.depth = start
+        for i in range(50):
+            c.tick(**(DEEPEN if i % 2 == 0 else SHALLOW))
+        assert c.depth == start
+        assert c.n_changes == 0
+
+
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=200),
+       st.integers(1, 3), st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_depth_bounded_and_changes_rate_limited(votes, hyst, cool):
+    """Any signal sequence keeps depth inside [min, max], moves one
+    step per change, and applies at most one change per ``hysteresis``
+    ticks (cooldown only slows it further)."""
+    c = _ctrl(min_depth=1, max_depth=3, hysteresis=hyst,
+              cooldown_ticks=cool)
+    sig = [HOLD, DEEPEN, SHALLOW]
+    prev = c.depth
+    for v in votes:
+        d = c.tick(**sig[v])
+        assert 1 <= d <= 3
+        assert abs(d - prev) <= 1          # one step at a time
+        prev = d
+    assert c.n_changes <= max(len(votes) // hyst, 0) + 1
+
+
+def test_controller_from_config_gates_and_clamps():
+    assert controller_from_config(TrustIRConfig()) is None
+    cfg = TrustIRConfig(adaptive_depth=True, pipeline_depth=3,
+                        adaptive_depth_min=2,
+                        adaptive_depth_hysteresis=4)
+    c = controller_from_config(cfg)
+    assert (c.min_depth, c.max_depth) == (2, 3)
+    assert c.depth == 3 and c.hysteresis == 4
+
+
+def test_model_fallback_supplies_queue_delay():
+    """With no fresh sample the controller reads STAGE_QUEUE p99 from
+    the capacity model — the planner's fits drive the vote."""
+    from repro.cluster.capacity import ServiceTimeModel
+    m = ServiceTimeModel(TrustIRConfig(), drain_mode="fused",
+                         pipeline_depth=2, batch_items=64)
+    for _ in range(32):
+        m.observe_queue(2.0)               # queue delay >> deadline
+    c = _ctrl(hysteresis=1, cooldown_ticks=0, model=m)
+    c.tick(backlog_batches=10.0)           # no sample -> model p99
+    assert c.last.queue_delay_s is not None
+    assert c.depth == 3                    # latency-bound wins
+
+
+# ---------------------------------------------------------------------------
+# wiring: scheduler tick + executor set_depth + coordinator model attach
+# ---------------------------------------------------------------------------
+
+def _adaptive_cfg(**kw):
+    base = dict(adaptive_depth=True, pipeline_depth=2,
+                adaptive_depth_hysteresis=1,
+                adaptive_depth_cooldown_ticks=0)
+    base.update(kw)
+    return reduced(smoke_config(), **base)
+
+
+def test_scheduler_ticks_controller_and_applies_depth():
+    from repro.core import SimClock
+    from repro.serving.engine import ServingEngine
+    cfg = _adaptive_cfg()
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=SimClock(cfg.u_capacity
+                                           / cfg.deadline_s))
+    ctrl = eng.scheduler.depth_controller
+    assert ctrl is not None and ctrl.depth == 2
+    for i in range(4):
+        keys = np.arange(i * 100 + 1, i * 100 + 9, dtype=np.uint32)
+        eng.enqueue(keys, np.zeros(8, np.int32),
+                    {"x": np.zeros(8, np.float32)})
+        eng.drain()
+    assert ctrl.n_ticks >= 4
+    assert (eng.scheduler.executor.depth
+            == ctrl.depth) and 1 <= ctrl.depth <= 2
+    assert len(eng.completed) == 4         # no-drop under adaptation
+
+
+def test_static_config_leaves_controller_off():
+    from repro.core import SimClock
+    from repro.serving.engine import ServingEngine
+    cfg = reduced(smoke_config())
+    eng = ServingEngine(cfg, lambda ch: np.asarray(ch["x"]),
+                        sim_clock=SimClock(256.0))
+    assert eng.scheduler.depth_controller is None
+
+
+def test_coordinator_attaches_capacity_model_to_controllers():
+    from repro.cluster import ClusterConfig, ClusterCoordinator
+    cfg = _adaptive_cfg(n_replicas=2)
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ch["x"]),
+        cluster_cfg=ClusterConfig(),
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s)
+    for rep in coord.replicas:
+        ctrl = rep.scheduler.depth_controller
+        assert ctrl is not None
+        assert ctrl.model is coord.capacity

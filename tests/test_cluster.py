@@ -665,3 +665,81 @@ def test_run_cluster_workload_end_to_end():
         assert np.isfinite(r.trust).all()
         if r.admitted:
             assert (r.tier != TIER_INVALID).all()
+
+
+# ---------------------------------------------------------------------------
+# KV-slot-aware work stealing (ISSUE 10 satellite a)
+
+
+def _kv_coordinator(victim_slots, thief_slots):
+    """2-replica fleet with explicit per-replica SlotAllocators; the
+    thief (r1) starts with ``thief_slots`` claimable slots."""
+    cfg = reduced(smoke_config(), n_replicas=2)
+    pools = [SlotAllocator(n_slots=victim_slots),
+             SlotAllocator(n_slots=max(thief_slots, 0))]
+    coord = ClusterCoordinator(
+        cfg, lambda ch: np.asarray(ch["x"]),
+        cluster_cfg=ClusterConfig(steal_threshold_items=1,
+                                  cost_aware_steal=True),
+        sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s,
+        kv_pools=pools)
+    t_hot = next(t for t in (f"t{i}" for i in range(50))
+                 if coord.ring.route(t) == "r0")
+    return coord, t_hot
+
+
+def test_steal_never_migrates_decode_to_slotless_thief():
+    """An all-decode backlog must NOT migrate to a thief with zero
+    claimable KV slots: the work could make no progress there (its
+    batcher would just re-queue it), so the rebalance is vetoed
+    outright and the victim drains it locally."""
+    coord, t_hot = _kv_coordinator(victim_slots=64, thief_slots=0)
+    for i in range(6):
+        coord.enqueue(*_req_arrays(i, 20), tenant=t_hot, slo_s=10.0,
+                      needs_kv_slot=True)
+    assert coord.replicas[0].queued_requests == 6
+    coord._steal_rebalance()
+    assert coord.stats.n_steals == 0               # vetoed
+    assert coord.replicas[1].queued_requests == 0
+    coord.drain()
+    assert len(coord.completed) == 6               # nothing lost
+
+
+def test_steal_picks_non_decode_work_for_slotless_thief():
+    """Mixed backlog, slotless thief: the cost picker must hand over
+    non-decode work (finite cost) and leave every decode request
+    (cost ``-inf``) on the victim."""
+    coord, t_hot = _kv_coordinator(victim_slots=64, thief_slots=0)
+    for i in range(8):
+        coord.enqueue(*_req_arrays(i, 20), tenant=t_hot, slo_s=10.0,
+                      needs_kv_slot=(i % 2 == 0))
+    coord._steal_rebalance()
+    assert coord.stats.n_steals > 0
+    thief_bank = coord.replicas[1].scheduler.bank
+    for q in thief_bank.queues.values():
+        for _, _, qreq in q._heap:
+            assert not qreq.request.needs_kv_slot
+
+
+@given(st.lists(st.booleans(), min_size=4, max_size=12),
+       st.integers(0, 3), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_steal_targets_respect_kv_slots_property(decode_flags,
+                                                 thief_slots, seed):
+    """Property: whatever the decode mix, a decode request only ever
+    lands on the thief when the thief has claimable KV slots."""
+    coord, t_hot = _kv_coordinator(victim_slots=64,
+                                   thief_slots=thief_slots)
+    for i, is_decode in enumerate(decode_flags):
+        coord.enqueue(*_req_arrays(i, 20, seed=seed), tenant=t_hot,
+                      slo_s=10.0, needs_kv_slot=is_decode)
+    coord._steal_rebalance()
+    thief_bank = coord.replicas[1].scheduler.bank
+    migrated_decode = sum(
+        1 for q in thief_bank.queues.values()
+        for _, _, qreq in q._heap if qreq.request.needs_kv_slot)
+    if thief_slots == 0:
+        assert migrated_decode == 0
+    # conservation: every request is still queued somewhere
+    assert (coord.replicas[0].queued_requests
+            + coord.replicas[1].queued_requests) == len(decode_flags)

@@ -519,3 +519,83 @@ def test_request_and_shard_hedges_contend_without_starving(retrieval,
     assert base.n_hedges_issued == req_hedges + shard_hedges
     assert fan.n_shard_twin_drops == shard_hedges     # dedup holds
     assert base.budget_available >= 0.0               # never overdrawn
+
+
+# ---------------------------------------------------------------------------
+# adaptive quorum: regime-ladder walk (ISSUE 10 satellite b)
+
+
+def test_quorum_adapt_walks_one_step_per_call():
+    q = QuorumGather(4, floor_k=2)
+    assert q.adapt(0, 8) == 5              # Normal tightens toward n
+    assert q.adapt(1, 8) == 5              # Heavy holds
+    assert q.adapt(2, 8) == 4              # Very-Heavy loosens
+    for _ in range(10):
+        q.adapt(2, 8)
+    assert q.quorum_k == 2                 # floored at the config
+    for _ in range(10):
+        q.adapt(0, 8)
+    assert q.quorum_k == 8                 # ceiling: the full fan-out
+    assert q.n_adapts == 1 + 1 + 2 + 6     # only real moves counted
+
+
+def test_quorum_adapt_inert_when_quorum_disabled():
+    q = QuorumGather(0)                    # synchronous full gather
+    for regime in (0, 1, 2):
+        assert q.adapt(regime, 8) == 0
+    assert q.n_adapts == 0
+    assert q.effective_k(8) == 8           # parity anchor untouched
+
+
+def test_quorum_adapt_clamps_to_shrunk_fanout():
+    q = QuorumGather(6, floor_k=2)
+    assert q.adapt(1, 4) == 4              # n shrank below k: clamp
+    assert q.adapt(2, 0) == 4              # empty fleet: inert
+
+
+def test_quorum_adapted_to_n_is_bit_exact_full_gather(retrieval,
+                                                      corpus):
+    """After the ladder tightens to ``k == n`` the fan-out must return
+    EXACTLY the synchronous gather — the same anchor
+    ``test_quorum_k_equals_n_bit_parity`` pins for static quorum."""
+    shards, keys = _shards(retrieval)
+    plain = CorpusSearcher(corpus, shards)
+    model = ShardServiceModel(straggler_p=0.1, seed=2)
+    fan = FanoutSearcher(corpus, shards, keys, quorum_k=2,
+                         service_model=model)
+    while fan.quorum.quorum_k < len(shards):
+        fan.quorum.adapt(0, len(shards))   # Normal rounds: tighten
+    for q in _queries(corpus, 8):
+        d0, s0 = plain.retrieve(q, 16)
+        d1, s1 = fan.retrieve(q, 16)
+        assert d0.tolist() == d1.tolist()
+        assert np.array_equal(s0, s1)
+    assert fan.n_late_shards == 0
+
+
+def test_cluster_adaptive_quorum_tightens_under_normal_load():
+    """Fleet wiring: with ``fanout_adaptive_quorum`` on, light (Normal)
+    load walks the configured floor quorum up to the live fan-out —
+    converging to the bit-exact full gather when nothing is overloaded
+    — while the static config leaves it pinned."""
+    corpus = SyntheticCorpus(n_docs=192, vocab_size=256, seed=3)
+    queries = _queries(corpus, 6)
+    ks = {}
+    for adaptive in (False, True):
+        ret = CorpusRetrieval(corpus, n_partitions=9, block_docs=16)
+        cfg = reduced(smoke_config(), n_replicas=3, fanout_quorum_k=2,
+                      fanout_adaptive_quorum=adaptive)
+        coord = ClusterCoordinator(
+            cfg, _zero_eval,
+            sim_rate_items_per_s=cfg.u_capacity / cfg.deadline_s,
+            retrieval=ret, fanout_model=ShardServiceModel(seed=5))
+        assert coord.searcher.quorum.quorum_k == 2
+        assert coord.searcher.quorum.floor_k == 2
+        for q in queries:
+            coord.enqueue_query(q, 8)
+            coord.drain()
+        ks[adaptive] = coord.searcher.quorum.quorum_k
+        assert len({r.request_id for r in coord.completed}) \
+            == len(queries)                # no-drop under adaptation
+    assert ks[False] == 2                  # static: untouched
+    assert ks[True] == 3                   # adaptive: full fan-out
